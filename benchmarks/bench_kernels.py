@@ -1,0 +1,81 @@
+"""Kernel microbenchmarks: oracle (jnp/XLA) wall time on CPU + interpret
+-mode correctness deltas.  On CPU the *oracle* timing is the meaningful
+number (interpret mode executes the kernel body in Python); on TPU the
+same harness times the Mosaic kernels via interpret=False."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # cut_eval oracle at sketched-cut production size
+    p, d = 8, 1 << 16
+    a = jax.random.normal(key, (p, d), jnp.float32) * 0.1
+    v = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    c = jnp.zeros((p,))
+    act = jnp.ones((p,))
+    oracle = jax.jit(ref.cut_eval_ref)
+    us = _time(oracle, a, v, c, act)
+    got = ops.cut_eval(a, v, c, act)
+    err = float(jnp.max(jnp.abs(got - oracle(a, v, c, act))))
+    rows.append(("kernel_cut_eval_oracle", us,
+                 f"P={p};D={d};interp_max_err={err:.2e}"))
+
+    # flash attention oracle vs kernel (small, interpret mode)
+    b, s, h, hd = 1, 512, 8, 64
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd))
+    vv = jax.random.normal(jax.random.fold_in(key, 3), (b, s, h, hd))
+    oracle = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _time(oracle, q, k, vv, iters=5)
+    got = ops.flash_attention(q[:, :128], k[:, :128], vv[:, :128],
+                              block_q=64, block_k=64)
+    err = float(jnp.max(jnp.abs(
+        got - ref.flash_attention_ref(q[:, :128], k[:, :128],
+                                      vv[:, :128]))))
+    rows.append(("kernel_flash_attn_oracle", us,
+                 f"S={s};H={h};hd={hd};interp_max_err={err:.2e}"))
+
+    # mlstm chunk
+    b2, h2, l2, hd2 = 2, 4, 64, 64
+    q2 = jax.random.normal(key, (b2, h2, l2, hd2))
+    k2 = jax.random.normal(jax.random.fold_in(key, 4), (b2, h2, l2, hd2))
+    v2 = jax.random.normal(jax.random.fold_in(key, 5), (b2, h2, l2, hd2))
+    li = jax.random.normal(jax.random.fold_in(key, 6), (b2, h2, l2, 1))
+    lf = jax.nn.log_sigmoid(jax.random.normal(
+        jax.random.fold_in(key, 7), (b2, h2, l2, 1)) + 2.0)
+    c0 = jnp.zeros((b2, h2, hd2, hd2))
+    n0 = jnp.zeros((b2, h2, 1, hd2))
+    m0 = jnp.full((b2, h2, 1, 1), -1e9)
+    oracle = jax.jit(ref.mlstm_chunk_ref)
+    us = _time(oracle, q2, k2, v2, li, lf, c0, n0, m0, iters=10)
+    got = ops.mlstm_chunk(q2, k2, v2, li, lf, c0, n0, m0)
+    want = oracle(q2, k2, v2, li, lf, c0, n0, m0)
+    err = float(jnp.max(jnp.abs(got[0] - want[0])))
+    rows.append(("kernel_mlstm_chunk_oracle", us,
+                 f"L={l2};hd={hd2};interp_max_err={err:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.1f},{derived}")

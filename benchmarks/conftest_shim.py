@@ -1,0 +1,30 @@
+"""Shared tiny problem factory (mirrors tests/conftest.py without
+importing pytest machinery)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import TrilevelProblem
+
+
+def make_quadratic_problem(n_workers: int = 4, dim: int = 3,
+                           seed: int = 0) -> TrilevelProblem:
+    key = jax.random.PRNGKey(seed)
+    data = {"A": jax.random.normal(key, (n_workers, dim, dim)) * 0.3,
+            "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                   (n_workers, dim))}
+
+    def f1(d, x1, x2, x3):
+        return jnp.sum((x1 - d["A"] @ x3 - d["b"]) ** 2)
+
+    def f2(d, x1, x2, x3):
+        return jnp.sum((x2 + x3) ** 2) + 0.1 * jnp.sum(x2 ** 2)
+
+    def f3(d, x1, x2, x3):
+        return jnp.sum((x3 - x1) ** 2) + 0.1 * jnp.sum((x3 - x2) ** 2)
+
+    return TrilevelProblem(
+        f1=f1, f2=f2, f3=f3, data=data, n_workers=n_workers,
+        x1_init=jnp.zeros(dim), x2_init=jnp.zeros(dim),
+        x3_init=jnp.zeros(dim))

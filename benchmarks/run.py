@@ -1,0 +1,64 @@
+"""Benchmark harness (deliverable d): one entry per paper table/figure
+plus the framework-level benchmarks.  Prints ``name,us_per_call,derived``
+CSV.  ``--fast`` trims iteration counts for CI-speed runs.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig1,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig1,fig2,table2,"
+                         "kernels,comm,sketch,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (bench_kernels, comm_complexity,
+                            fig1_robust_hpo, fig2_domain_adapt,
+                            rate_thm45, roofline_table, sketch_fidelity,
+                            table2_baselines)
+
+    suites = {
+        "fig1": lambda: fig1_robust_hpo.main(
+            n_iterations=60 if args.fast else 120,
+            datasets=("diabetes", "boston") if args.fast else None),
+        "fig2": lambda: fig2_domain_adapt.main(
+            n_iterations=16 if args.fast else 40,
+            directions=("mnist_pretrain",) if args.fast else None),
+        "table2": lambda: table2_baselines.main(
+            n_iterations=60 if args.fast else 150,
+            seeds=(0,) if args.fast else (0, 1),
+            datasets=("diabetes",) if args.fast
+            else ("diabetes", "boston", "red_wine", "white_wine")),
+        "rate": lambda: rate_thm45.main(
+            n_iterations=150 if args.fast else 400),
+        "kernels": bench_kernels.main,
+        "comm": comm_complexity.main,
+        "sketch": sketch_fidelity.main,
+        "roofline": roofline_table.main,
+    }
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for key, fn in suites.items():
+        if only and key not in only:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"{key},nan,ERROR:{e!r}", flush=True)
+            failed += 1
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper §5.2: distributed domain adaptation for pretrain & finetune
+(Eq. 32) — reweighting net (level 1), finetune LeNet (level 2), pretrain
+LeNet (level 3) on two-domain synthetic digits.
+
+    PYTHONPATH=src python examples/domain_adaptation.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.apps.domain_adaptation import (default_hyper,
+                                          make_domain_adaptation_problem)
+from repro.core import StragglerConfig, run
+
+N, S, TAU = 4, 3, 5
+task = make_domain_adaptation_problem(N, pretrain_domain="svhn",
+                                      n_pretrain_per=32,
+                                      n_finetune_per=16, seed=0)
+
+hyper = default_hyper(N, S, TAU, t_pre=10, k_inner=2, p_max=4)
+sched = StragglerConfig(n_workers=N, s_active=S, tau=TAU, n_stragglers=1,
+                        straggler_slowdown=5.0, seed=0)
+
+
+def metrics(state):
+    v = jax.tree.map(lambda x: jnp.mean(x, 0), state.X2)  # finetune net
+    return task.test_metrics(v)
+
+
+res = run(task.problem, hyper, scheduler_cfg=sched, n_iterations=30,
+          metrics_fn=metrics, metrics_every=10)
+h = res.history
+print("iter  sim_time  test_acc  test_loss")
+for i in range(len(h["t"])):
+    print(f"{h['t'][i]:>4.0f}  {h['sim_time'][i]:8.1f}  "
+          f"{h['test_acc'][i]:.3f}     {h['test_loss'][i]:.4f}")
+assert h["test_loss"][-1] < h["test_loss"][0]
+print("OK: finetune-domain loss decreased")

@@ -1,0 +1,56 @@
+"""Quickstart: solve a tiny distributed trilevel problem with AFTO.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import Hyper, StragglerConfig, TrilevelProblem, run
+
+# A 4-worker quadratic trilevel problem (Eq. 2):
+#   level 1: fit x1 to a worker-local linear map of x3
+#   level 2: x2 opposes x3 (adversarial-style coupling)
+#   level 3: x3 tracks x1 with an x2 penalty
+N, DIM = 4, 3
+key = jax.random.PRNGKey(0)
+data = {"A": jax.random.normal(key, (N, DIM, DIM)) * 0.3,
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (N, DIM))}
+
+
+def f1(d, x1, x2, x3):
+    return jnp.sum((x1 - d["A"] @ x3 - d["b"]) ** 2)
+
+
+def f2(d, x1, x2, x3):
+    return jnp.sum((x2 + x3) ** 2) + 0.1 * jnp.sum(x2 ** 2)
+
+
+def f3(d, x1, x2, x3):
+    return jnp.sum((x3 - x1) ** 2) + 0.1 * jnp.sum((x3 - x2) ** 2)
+
+
+problem = TrilevelProblem(
+    f1=f1, f2=f2, f3=f3, data=data, n_workers=N,
+    x1_init=jnp.zeros(DIM), x2_init=jnp.zeros(DIM),
+    x3_init=jnp.zeros(DIM))
+
+hyper = Hyper(n_workers=N, s_active=3, tau=5, k_inner=3, p_max=6,
+              t_pre=5, t1=100, eta_x=0.05, eta_z=0.05, d1=DIM)
+
+# 1 straggler, 5x slower: AFTO's S-of-N arrival rule hides it
+sched = StragglerConfig(n_workers=N, s_active=3, tau=5, n_stragglers=1,
+                        straggler_slowdown=5.0, seed=0)
+
+result = run(problem, hyper, scheduler_cfg=sched, n_iterations=100,
+             metrics_every=20)
+
+print("iter  sim_time  ||grad G||^2  cuts(I/II)  max_staleness")
+h = result.history
+for i in range(len(h["t"])):
+    print(f"{h['t'][i]:>4.0f}  {h['sim_time'][i]:8.1f}  "
+          f"{h['gap_sq'][i]:12.5f}  {h['n_cuts_i'][i]:.0f}/"
+          f"{h['n_cuts_ii'][i]:.0f}          {h['max_staleness'][i]:.0f}")
+print("\nconsensus z1:", result.state.z1)
+assert h["gap_sq"][-1] < h["gap_sq"][0], "AFTO failed to make progress"
+print("OK: stationarity gap decreased "
+      f"{h['gap_sq'][0]:.4f} -> {h['gap_sq'][-1]:.4f}")

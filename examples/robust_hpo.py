@@ -1,0 +1,43 @@
+"""Paper §5.1: distributed robust hyperparameter optimization (Eq. 31).
+
+Trains an MLP whose regularization strength (level 1) is tuned against
+an adversarial input perturbation (level 2) wrapped around weight
+training (level 3), across 4 federated workers with 1 straggler —
+comparing AFTO with the synchronous SFTO.
+
+    PYTHONPATH=src python examples/robust_hpo.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.apps.robust_hpo import default_hyper, make_robust_hpo_problem
+from repro.core import StragglerConfig, run
+
+DATASET = "diabetes"   # synthetic stand-in with the UCI shapes
+N, S, TAU = 4, 3, 10
+
+task = make_robust_hpo_problem(DATASET, n_workers=N, seed=0)
+
+
+def metrics(state):
+    w = jax.tree.map(lambda x: jnp.mean(x, 0), state.X3)
+    return {"mse_clean": task.test_mse(w, 0.0),
+            "mse_noisy": task.test_mse(w, 0.3)}
+
+
+for algo, s_active in (("AFTO", S), ("SFTO", N)):
+    hyper = default_hyper(task, N, s_active, TAU)
+    sched = StragglerConfig(n_workers=N, s_active=s_active, tau=TAU,
+                            n_stragglers=1, straggler_slowdown=5.0,
+                            seed=0)
+    res = run(task.problem, hyper, scheduler_cfg=sched, n_iterations=100,
+              metrics_fn=metrics, metrics_every=25)
+    h = res.history
+    print(f"\n== {algo} ==")
+    print("iter  sim_time  clean_mse  noisy_mse")
+    for i in range(len(h["t"])):
+        print(f"{h['t'][i]:>4.0f}  {h['sim_time'][i]:8.1f}  "
+              f"{h['mse_clean'][i]:.4f}     {h['mse_noisy'][i]:.4f}")
+    print(f"{algo}: reached iter {h['t'][-1]:.0f} at simulated "
+          f"t={h['sim_time'][-1]:.1f} (lower sim-time per iter = faster "
+          f"wall-clock convergence)")

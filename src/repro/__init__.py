@@ -1,0 +1,13 @@
+"""repro: Provably Convergent Federated Trilevel Learning (AFTO, AAAI'24)
+as a production-grade multi-pod JAX framework.
+
+Public API surface:
+  repro.core        — the paper's algorithm (mu-cuts, async federated loop)
+  repro.apps        — the paper's experiments (robust HPO, domain adapt)
+  repro.models      — the architecture zoo (dense/MoE/SSM/hybrid/enc-dec)
+  repro.fed         — mesh sharding rules + LLM-scale trilevel step
+  repro.kernels     — Pallas TPU kernels (+ jnp oracles)
+  repro.configs     — the 10 assigned architectures x 4 input shapes
+  repro.launch      — mesh / dryrun / train / serve entry points
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from repro.apps.robust_hpo import (RobustHPOTask, make_robust_hpo_problem)
+from repro.apps.domain_adaptation import (DomainAdaptTask,
+                                          make_domain_adaptation_problem)

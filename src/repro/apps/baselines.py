@@ -1,0 +1,129 @@
+"""Distributed *bilevel* baselines for Table 2: ADBO and FedNest.
+
+Both are reimplementations (no public offline code): they solve the
+robust-HPO task as a BILEVEL problem — hyperparameter phi upper, weights
+w lower — without the adversarial middle level, which is exactly why the
+paper's trilevel AFTO achieves better *noisy-test* MSE (Table 2): the
+baselines never train against perturbations.
+
+* FedNest  (Tarzanagh et al., 2022): synchronous federated bilevel SGD;
+  inner local SGD + averaging for w, one-step inverse-Hessian-free
+  hypergradient for phi.
+* ADBO     (Jiao et al., 2022b): asynchronous distributed bilevel with
+  (convex, mu=0) cutting planes; we reuse the AFTO machinery restricted
+  to two levels — i.e. the paper's own claim that mu-cuts generalize the
+  ADBO cut — with the same straggler scheduler for a fair async compare.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.robust_hpo import RobustHPOTask
+from repro.core.scheduler import StragglerConfig, StragglerScheduler
+from repro.models.simple import mlp_apply, smoothed_l1
+from repro.utils.tree import tree_axpy
+
+
+# ---------------------------------------------------------------------------
+# FedNest-style federated bilevel SGD
+# ---------------------------------------------------------------------------
+
+def run_fednest(task: RobustHPOTask, n_iterations: int = 200,
+                inner_steps: int = 4, eta_w: float = 0.05,
+                eta_phi: float = 0.02, seed: int = 0) -> Dict[str, List]:
+    prob = task.problem
+    data = prob.data
+    n = prob.n_workers
+
+    def local_inner(w, phi):
+        """inner_steps of local SGD on the regularized train loss."""
+        def loss(w, d_j):
+            pred = mlp_apply(w, d_j["xtr"])[:, 0]
+            return jnp.mean((pred - d_j["ytr"]) ** 2) \
+                + jnp.exp(phi[0]) * smoothed_l1(w) / n
+
+        def one_worker(d_j, w):
+            def body(w, _):
+                g = jax.grad(loss)(w, d_j)
+                return tree_axpy(-eta_w, g, w), None
+            w, _ = jax.lax.scan(body, w, None, length=inner_steps)
+            return w
+
+        ws = jax.vmap(lambda d_j: one_worker(d_j, w))(data)
+        return jax.tree.map(lambda x: jnp.mean(x, 0), ws)  # FedAvg
+
+    def val_loss(w):
+        def per(d_j):
+            pred = mlp_apply(w, d_j["xval"])[:, 0]
+            return jnp.mean((pred - d_j["yval"]) ** 2)
+        return jnp.mean(jax.vmap(per)(data))
+
+    @jax.jit
+    def step(w, phi):
+        w_new = local_inner(w, phi)
+        # hypergradient (IFT-free 1-step approx): d val / d phi through
+        # one unrolled inner update
+        def outer(phi):
+            return val_loss(local_inner(jax.lax.stop_gradient(w), phi))
+        g_phi = jax.grad(outer)(phi)
+        return w_new, phi - eta_phi * g_phi
+
+    w = prob.x3_init
+    phi = prob.x1_init["phi"]
+    hist = {"t": [], "sim_time": [], "val_mse": []}
+    # synchronous: every iteration costs the slowest worker's latency
+    sched = StragglerScheduler(StragglerConfig(
+        n_workers=n, s_active=n, tau=1000, n_stragglers=1, seed=seed))
+    for it in range(n_iterations):
+        _, sim_t = sched.next_active()
+        w, phi = step(w, phi)
+        if (it + 1) % 10 == 0:
+            hist["t"].append(it + 1)
+            hist["sim_time"].append(sim_t)
+            hist["val_mse"].append(float(val_loss(w)))
+    return {"w": w, "phi": phi, "history": hist}
+
+
+# ---------------------------------------------------------------------------
+# ADBO-style asynchronous bilevel with convex cutting planes
+# ---------------------------------------------------------------------------
+
+def run_adbo(task: RobustHPOTask, n_iterations: int = 200,
+             s_active: int = None, tau: int = 10, seed: int = 0,
+             **hyper_overrides) -> Dict[str, List]:
+    """ADBO == the paper's machinery with the middle level removed and
+    mu = 0 (convex cuts).  We emulate it by fixing x2 = 0 (no adversarial
+    level) and mu_i = mu_ii = 0 in the same AFTO loop."""
+    from repro.apps.robust_hpo import default_hyper
+    from repro.core import runner as runner_lib
+    from repro.core.scheduler import StragglerConfig
+
+    prob = task.problem
+    n = prob.n_workers
+    s = s_active if s_active is not None else max(1, n - 1)
+
+    frozen = dataclasses.replace(
+        prob,
+        f2=lambda d_j, x1, x2, x3: 0.5 * jnp.sum(x2 ** 2),  # pins p at 0
+        x2_init=jnp.zeros_like(prob.x2_init))
+    hyper = default_hyper(task, n, s, tau, mu_i=0.0, mu_ii=0.0,
+                          **hyper_overrides)
+    cfg = StragglerConfig(n_workers=n, s_active=s, tau=tau,
+                          n_stragglers=1, seed=seed)
+
+    def metrics(state):
+        def per(d_j, x3_j):
+            pred = mlp_apply(x3_j, d_j["xval"])[:, 0]
+            return jnp.mean((pred - d_j["yval"]) ** 2)
+        return {"val_mse": jnp.mean(jax.vmap(per)(prob.data, state.X3))}
+
+    res = runner_lib.run(frozen, hyper, scheduler_cfg=cfg,
+                         n_iterations=n_iterations, metrics_fn=metrics)
+    # consensus weights = average of worker copies
+    w = jax.tree.map(lambda x: jnp.mean(x, 0), res.state.X3)
+    return {"w": w, "phi": res.state.z1["phi"], "history": res.history}

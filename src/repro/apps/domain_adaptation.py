@@ -1,0 +1,104 @@
+"""Distributed domain adaptation for pretrain & finetune (paper §5.2, Eq. 32).
+
+Trilevel structure:
+  level 1 (min over phi): finetune loss (phi = reweighting net params),
+  level 2 (min over v):   finetune loss + lambda ||v - w||^2 (proximal),
+  level 3 (min over w):   reweighted pretraining loss, weights
+                          R(x_i; phi) in (0, 1) from the reweighting net.
+
+All three networks are LeNet-5 (as in the paper); the pretrain domain is
+"SVHN-like" and the finetune domain "MNIST-like" synthetic digits (see
+repro.data.synthetic for why synthetic).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Hyper, TrilevelProblem
+from repro.data.synthetic import DigitsData, make_digits
+from repro.models.simple import (accuracy, cross_entropy, lenet_apply,
+                                 lenet_init)
+
+
+@dataclasses.dataclass
+class DomainAdaptTask:
+    problem: TrilevelProblem
+    data: DigitsData
+    prox_lambda: float
+
+    def test_metrics(self, v):
+        logits = lenet_apply(v, jnp.asarray(self.data.x_test))
+        labels = jnp.asarray(self.data.y_test)
+        return {"test_acc": accuracy(logits, labels),
+                "test_loss": cross_entropy(logits, labels)}
+
+
+def _tree_sq_dist(a, b):
+    return sum(jnp.sum((x - y) ** 2)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def make_domain_adaptation_problem(n_workers: int,
+                                   pretrain_domain: str = "svhn",
+                                   n_pretrain_per: int = 48,
+                                   n_finetune_per: int = 24,
+                                   prox_lambda: float = 0.1,
+                                   seed: int = 0) -> DomainAdaptTask:
+    data = make_digits(n_workers, n_pretrain_per=n_pretrain_per,
+                       n_finetune_per=n_finetune_per,
+                       pretrain_domain=pretrain_domain, seed=seed)
+    pdata = {
+        "xpt": jnp.asarray(data.x_pretrain),
+        "ypt": jnp.asarray(data.y_pretrain),
+        "xft": jnp.asarray(data.x_finetune),
+        "yft": jnp.asarray(data.y_finetune),
+    }
+
+    def reweight(phi, x):
+        """R(x; phi) in (0,1): sigmoid of the reweighting net's score."""
+        score = lenet_apply(phi, x)  # (B, 10)
+        return jax.nn.sigmoid(jnp.mean(score, axis=-1))
+
+    def finetune_loss(d_j, v):
+        return cross_entropy(lenet_apply(v, d_j["xft"]), d_j["yft"])
+
+    def f1(d_j, x1, x2, x3):
+        return finetune_loss(d_j, x2)
+
+    def f2(d_j, x1, x2, x3):
+        return finetune_loss(d_j, x2) \
+            + prox_lambda * _tree_sq_dist(x2, x3)
+
+    def f3(d_j, x1, x2, x3):
+        logits = lenet_apply(x3, d_j["xpt"])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, d_j["ypt"][:, None], -1)[:, 0]
+        per_sample = logz - gold
+        w = reweight(x1, d_j["xpt"])
+        return jnp.mean(w * per_sample)
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    problem = TrilevelProblem(
+        f1=f1, f2=f2, f3=f3, data=pdata, n_workers=n_workers,
+        x1_init=lenet_init(k1), x2_init=lenet_init(k2),
+        x3_init=lenet_init(k3))
+    return DomainAdaptTask(problem=problem, data=data,
+                           prox_lambda=prox_lambda)
+
+
+def default_hyper(n_workers: int, s_active: int, tau: int,
+                  **overrides) -> Hyper:
+    base = dict(
+        n_workers=n_workers, s_active=s_active, tau=tau,
+        k_inner=2, p_max=6, t_pre=20, t1=400,
+        eta_x=0.1, eta_z=0.1, eta_lambda=0.005, eta_theta=0.005,
+        eta_dual_inner=0.005, kappa2=0.1, kappa3=0.1, rho2=0.1,
+        eps_i=1e-2, eps_ii=1e-2, mu_i=0.5, mu_ii=0.5,
+        alpha1=400.0, alpha2=400.0, alpha3=400.0, alpha4=25.0,
+        alpha5=400.0, d1=61706)
+    base.update(overrides)
+    return Hyper(**base)

@@ -1,0 +1,96 @@
+"""Checkpointing: pytree -> (manifest.json + arrays.npz).
+
+Orbax is not available offline; this covers the framework's needs:
+sharding-agnostic host save/restore with structure and dtype fidelity,
+atomic writes, and step-numbered directories with retention.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _to_numpy_storable(x):
+    """npz can't roundtrip ml_dtypes (bfloat16 etc.); store such leaves
+    as float32 (bf16 -> f32 is exact) and restore via the manifest."""
+    arr = np.asarray(x)
+    if arr.dtype.kind == "V" or str(arr.dtype) in ("bfloat16", "float8_e4m3fn",
+                                                   "float8_e5m2"):
+        return np.asarray(x, dtype=np.float32), str(arr.dtype)
+    try:
+        np.dtype(str(arr.dtype))
+        return arr, str(arr.dtype)
+    except TypeError:
+        return np.asarray(x, dtype=np.float32), str(arr.dtype)
+
+
+def save_checkpoint(directory: str, tree: Any, step: int,
+                    keep: int = 3) -> str:
+    """Writes <directory>/step_<step>/{manifest.json, arrays.npz}."""
+    leaves, treedef = _flatten(tree)
+    stored = [_to_numpy_storable(l) for l in leaves]
+    arrays = {f"leaf_{i}": a for i, (a, _) in enumerate(stored)}
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "dtypes": [d for _, d in stored],
+        "shapes": [list(a.shape) for a, _ in stored],
+    }
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory if os.path.isdir(directory)
+                           else None, prefix=".ckpt_tmp_")
+    os.makedirs(directory, exist_ok=True)
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # retention
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for old in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, old), ignore_errors=True)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(directory: str, template: Any,
+                    step: Optional[int] = None) -> Any:
+    """Restores into `template`'s structure (shapes/dtypes asserted)."""
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoints in {directory}"
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten(template)
+    restored = []
+    for i, tpl in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        assert tuple(arr.shape) == tuple(np.shape(tpl)), \
+            f"leaf {i}: ckpt {arr.shape} != template {np.shape(tpl)}"
+        restored.append(jax.numpy.asarray(arr, dtype=tpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, restored)

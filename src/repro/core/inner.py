@@ -1,0 +1,116 @@
+"""K-round federated ADMM rollouts: the phi_I / phi_II estimates (Eqs. 5-12).
+
+Each communication round is one Jacobi ADMM sweep:
+  workers  : x' <- x' - eta_x * grad_x L_p          (Eq. 5)
+  master   : z' <- z' - eta_z * grad_z L_p          (Eq. 6, at the *old* x)
+  master   : dual ascent at the new primal point    (Eq. 7)
+The K-round result is the inner-solution estimate (Eq. 8); constraint
+functions h_I / h_II are squared distances to it (Eqs. 9/12) and are
+differentiable w.r.t. the outer variables *through the rollout* (JAX vjp
+through the scan), which is exactly what the mu-cut gradients need.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cuts as cuts_lib
+from repro.core import lagrangian as lag
+from repro.core.types import (CutSet, Hyper, InnerState2, InnerState3,
+                              TrilevelProblem)
+from repro.utils.tree import (tree_axpy, tree_norm_sq, tree_sub)
+
+
+# ---------------------------------------------------------------------------
+# level 3
+# ---------------------------------------------------------------------------
+
+def rollout3(problem: TrilevelProblem, hyper: Hyper, z1, z2,
+             init: InnerState3) -> InnerState3:
+    """K rounds of Eq. 5-7; differentiable w.r.t. (z1, z2)."""
+
+    def round_fn(st: InnerState3, _):
+        g_x = jax.grad(lambda x3: lag.l_p3(
+            problem, hyper, z1, z2,
+            InnerState3(x3=x3, z3=st.z3, phi=st.phi)))(st.x3)
+        x3_new = tree_axpy(-hyper.eta_x, g_x, st.x3)
+        # Eq. 6: master step at the OLD worker variables
+        g_z = jax.grad(lambda z3: lag.l_p3(
+            problem, hyper, z1, z2,
+            InnerState3(x3=st.x3, z3=z3, phi=st.phi)))(st.z3)
+        z3_new = tree_axpy(-hyper.eta_z, g_z, st.z3)
+        # Eq. 7: dual ascent at the new primal point
+        phi_new = jax.tree.map(
+            lambda p, x, z: p + hyper.eta_dual_inner * (x - z),
+            st.phi, x3_new,
+            jax.tree.map(lambda z: jnp.broadcast_to(
+                z[None], (hyper.n_workers,) + z.shape), z3_new))
+        return InnerState3(x3=x3_new, z3=z3_new, phi=phi_new), None
+
+    final, _ = jax.lax.scan(round_fn, init, None, length=hyper.k_inner)
+    return final
+
+
+def h_i(problem: TrilevelProblem, hyper: Hyper,
+        X3, z3, z1, z2, init: InnerState3):
+    """h_I({x3_j}, z1, z2', z3) = ||[{x3_j}; z3] - phi_I(z1, z2')||^2."""
+    est = rollout3(problem, hyper, z1, z2,
+                   jax.lax.stop_gradient(init))
+    return tree_norm_sq(tree_sub(X3, est.x3)) \
+        + tree_norm_sq(tree_sub(z3, est.z3))
+
+
+# ---------------------------------------------------------------------------
+# level 2
+# ---------------------------------------------------------------------------
+
+def rollout2(problem: TrilevelProblem, hyper: Hyper, z1, z3, X3,
+             cuts_i: CutSet, init: InnerState2) -> InnerState2:
+    """K rounds of Jacobi ADMM on Eq. 11 (with slack/cut multipliers);
+    differentiable w.r.t. (z1, z3, X3)."""
+
+    def round_fn(st: InnerState2, _):
+        g_x = jax.grad(lambda x2: lag.l_p2(
+            problem, hyper, z1, z3, X3, cuts_i,
+            InnerState2(x2=x2, z2=st.z2, phi=st.phi, s=st.s,
+                        gamma=st.gamma)))(st.x2)
+        x2_new = tree_axpy(-hyper.eta_x, g_x, st.x2)
+
+        g_z = jax.grad(lambda z2: lag.l_p2(
+            problem, hyper, z1, z3, X3, cuts_i,
+            InnerState2(x2=st.x2, z2=z2, phi=st.phi, s=st.s,
+                        gamma=st.gamma)))(st.z2)
+        z2_new = tree_axpy(-hyper.eta_z, g_z, st.z2)
+
+        # slack: projected descent, s >= 0 (only on active cut slots)
+        cutval = cuts_lib.eval_cuts(cuts_i, z1, z2_new, z3, X3=X3)
+        g_s = (st.gamma + hyper.rho2 * (cutval + st.s)) * cuts_i.active
+        s_new = jnp.maximum(0.0, st.s - hyper.eta_s * g_s) * cuts_i.active
+
+        # duals at the new primal point
+        phi_new = jax.tree.map(
+            lambda p, x, z: p + hyper.eta_dual_inner * (x - z),
+            st.phi, x2_new,
+            jax.tree.map(lambda z: jnp.broadcast_to(z[None],
+                                                    (hyper.n_workers,) + z.shape),
+                         z2_new))
+        cutval_new = cuts_lib.eval_cuts(cuts_i, z1, z2_new, z3, X3=X3)
+        gamma_new = jnp.maximum(
+            0.0, st.gamma + hyper.eta_dual_inner * (cutval_new + s_new)) \
+            * cuts_i.active
+        return InnerState2(x2=x2_new, z2=z2_new, phi=phi_new, s=s_new,
+                           gamma=gamma_new), None
+
+    final, _ = jax.lax.scan(round_fn, init, None, length=hyper.k_inner)
+    return final
+
+
+def h_ii(problem: TrilevelProblem, hyper: Hyper,
+         X2, z2, z1, z3, X3, cuts_i: CutSet, init: InnerState2):
+    """h_II({x2_j},{x3_j},z) = ||[{x2_j}; z2] - phi_II(z1, z3, {x3_j})||^2."""
+    est = rollout2(problem, hyper, z1, z3, X3, cuts_i,
+                   jax.lax.stop_gradient(init))
+    return tree_norm_sq(tree_sub(X2, est.x2)) \
+        + tree_norm_sq(tree_sub(z2, est.z2))

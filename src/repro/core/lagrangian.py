@@ -1,0 +1,84 @@
+"""Augmented / regularized Lagrangians (paper Eqs. 4, 11, 14, 15)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cuts as cuts_lib
+from repro.core.types import (AFTOState, CutSet, Hyper, InnerState2,
+                              InnerState3, TrilevelProblem)
+from repro.utils.tree import tree_dot, tree_norm_sq, tree_sub
+
+
+# ---------------------------------------------------------------------------
+# Level-3 augmented Lagrangian (Eq. 4)
+# ---------------------------------------------------------------------------
+
+def l_p3(problem: TrilevelProblem, hyper: Hyper, z1, z2, st: InnerState3):
+    """sum_j f3_j(z1, z2', x3_j') + <phi_j, x3_j'-z3'> + kappa3/2 ||.||^2."""
+    def per_worker(data_j, x3_j, phi_j):
+        f = problem.f3(data_j, z1, z2, x3_j)
+        r = tree_sub(x3_j, st.z3)
+        return f + tree_dot(phi_j, r) + 0.5 * hyper.kappa3 * tree_norm_sq(r)
+
+    vals = jax.vmap(per_worker)(problem.data, st.x3, st.phi)
+    return jnp.sum(vals)
+
+
+# ---------------------------------------------------------------------------
+# Level-2 augmented Lagrangian with I-layer cut terms (Eq. 11)
+# ---------------------------------------------------------------------------
+
+def l_p2(problem: TrilevelProblem, hyper: Hyper, z1, z3, X3,
+         cuts_i: CutSet, st: InnerState2):
+    """sum_j f2_j + consensus terms + gamma/rho2 terms over the I-polytope.
+
+    The I-layer cut value is evaluated at (X3, z1, z2'=st.z2, z3): the cut's
+    a2-block multiplies the *inner* consensus variable z2' while X3/z3 come
+    from the outer iteration (see Eq. 11's hat-h_{I,l} arguments).
+    """
+    def per_worker(data_j, x2_j, phi_j, x3_j):
+        f = problem.f2(data_j, z1, x2_j, x3_j)
+        r = tree_sub(x2_j, st.z2)
+        return f + tree_dot(phi_j, r) + 0.5 * hyper.kappa2 * tree_norm_sq(r)
+
+    vals = jax.vmap(per_worker)(problem.data, st.x2, st.phi, X3)
+    total = jnp.sum(vals)
+
+    cutval = cuts_lib.eval_cuts(cuts_i, z1, st.z2, z3, X2=None, X3=X3)
+    viol = (cutval + st.s) * cuts_i.active
+    total = total + jnp.sum(st.gamma * viol) \
+        + 0.5 * hyper.rho2 * jnp.sum(viol ** 2)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Top-level Lagrangian over the hyper-polyhedral problem (Eq. 14/15)
+# ---------------------------------------------------------------------------
+
+def l_p(problem: TrilevelProblem, state_vars, cuts_ii: CutSet, lam, theta):
+    """L_p (Eq. 14) at explicit variables.
+
+    state_vars = (X1, X2, X3, z1, z2, z3); theta is stacked (N, ...).
+    """
+    X1, X2, X3, z1, z2, z3 = state_vars
+    f1_sum = problem.sum_f(problem.f1, X1, X2, X3)
+
+    def cons(theta_j, x1_j):
+        return tree_dot(theta_j, tree_sub(x1_j, z1))
+    cons_sum = jnp.sum(jax.vmap(cons)(theta, X1))
+
+    cutval = cuts_lib.eval_cuts(cuts_ii, z1, z2, z3, X2=X2, X3=X3)
+    return f1_sum + cons_sum + jnp.sum(lam * cutval)
+
+
+def l_p_hat(problem: TrilevelProblem, hyper: Hyper, t, state_vars,
+            cuts_ii: CutSet, lam, theta):
+    """Regularized Lagrangian (Eq. 15)."""
+    base = l_p(problem, state_vars, cuts_ii, lam, theta)
+    reg_lam = 0.5 * hyper.c1(t) * jnp.sum((lam * cuts_ii.active) ** 2)
+
+    def th_sq(theta_j):
+        return tree_norm_sq(theta_j)
+    reg_th = 0.5 * hyper.c2(t) * jnp.sum(jax.vmap(th_sq)(theta))
+    return base - reg_lam - reg_th

@@ -1,0 +1,90 @@
+"""Host-side asynchrony: straggler model, active sets, simulated clock.
+
+JAX programs are SPMD-synchronous, so the *semantics* of asynchrony (Eq.
+16's stale views, the S-of-N arrival rule, the tau-staleness bound) are
+expressed inside the jitted `afto_step`, while *who arrives when* and the
+wall-clock cost of each master iteration are simulated here with a
+deterministic seeded latency model.  Setting ``s_active == n_workers``
+recovers SFTO (the synchronous baseline in Fig. 1/2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    n_workers: int
+    s_active: int                 # S
+    tau: int                      # staleness bound
+    n_stragglers: int = 0
+    straggler_slowdown: float = 5.0
+    base_latency: float = 1.0     # mean per-iteration worker latency
+    jitter: float = 0.2           # lognormal sigma
+    seed: int = 0
+
+
+class StragglerScheduler:
+    """Event-driven simulation of the parameter-server arrival process.
+
+    Each worker finishes its local update ``latency_j`` after the last
+    broadcast it received.  The master proceeds once S workers have
+    arrived; any worker about to exceed the staleness bound tau is waited
+    for regardless (the paper requires every worker to communicate at
+    least once every tau iterations).
+    """
+
+    def __init__(self, cfg: StragglerConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        slow = np.ones(cfg.n_workers)
+        slow[: cfg.n_stragglers] = cfg.straggler_slowdown
+        self.rng.shuffle(slow)
+        self.slowdown = slow
+        # worker j's pending update becomes available at ready[j]
+        self.now = 0.0
+        self.ready = self._draw_latency()
+        self.last_active = np.zeros(cfg.n_workers, dtype=np.int64)
+        self.t = 0
+
+    def _draw_latency(self) -> np.ndarray:
+        c = self.cfg
+        lat = c.base_latency * self.slowdown * self.rng.lognormal(
+            mean=0.0, sigma=c.jitter, size=c.n_workers)
+        return self.now + lat
+
+    def next_active(self) -> Tuple[np.ndarray, float]:
+        """Returns ((N,) float mask, iteration completion sim-time)."""
+        c = self.cfg
+        self.t += 1
+        staleness = self.t - self.last_active
+        forced = staleness >= c.tau                    # must arrive now
+
+        order = np.argsort(self.ready)
+        chosen = set(np.nonzero(forced)[0].tolist())
+        for j in order:
+            if len(chosen) >= max(c.s_active, len(chosen)):
+                break
+            chosen.add(int(j))
+        chosen_idx = np.array(sorted(chosen), dtype=np.int64)
+
+        # master waits for the slowest chosen worker
+        t_done = float(np.max(self.ready[chosen_idx]))
+        # any other worker already finished by then also gets included
+        extra = np.nonzero(self.ready <= t_done)[0]
+        active_idx = np.union1d(chosen_idx, extra)
+
+        self.now = t_done
+        mask = np.zeros(c.n_workers, dtype=np.float32)
+        mask[active_idx] = 1.0
+        self.last_active[active_idx] = self.t
+        # active workers start a fresh local computation after broadcast
+        new_ready = self._draw_latency()
+        self.ready = np.where(mask > 0, new_ready, self.ready)
+        return mask, self.now
+
+    def max_staleness(self) -> int:
+        return int(np.max(self.t - self.last_active))

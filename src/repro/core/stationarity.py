@@ -1,0 +1,59 @@
+"""Stationarity gap (Definitions 4.1/4.2, Eqs. 26/27)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cuts as cuts_lib
+from repro.core import afto as afto_lib
+from repro.core.types import AFTOState, Hyper, TrilevelProblem
+from repro.utils.tree import tree_norm_sq, tree_sub, tree_axpy
+
+
+def stationarity_gap_sq(problem: TrilevelProblem, hyper: Hyper,
+                        state: AFTOState):
+    """|| grad G^t ||^2 of the *unregularized* L_p (Eq. 26)."""
+    lam_a = state.lam * state.cuts_ii.active
+
+    # worker blocks
+    def f1_grads(data_j, x1_j, x2_j, x3_j):
+        return jax.grad(lambda a, b, c: problem.f1(data_j, a, b, c),
+                        argnums=(0, 1, 2))(x1_j, x2_j, x3_j)
+
+    g1_f, g2_f, g3_f = jax.vmap(f1_grads)(
+        problem.data, state.X1, state.X2, state.X3)
+    g1 = jax.tree.map(jnp.add, g1_f, state.theta)
+    lam_np = jnp.broadcast_to(lam_a[None], (hyper.n_workers,) + lam_a.shape)
+    g2 = jax.tree.map(jnp.add, g2_f,
+                      afto_lib._cut_coeff_per_worker(state.cuts_ii, lam_np,
+                                                     "b2"))
+    g3 = jax.tree.map(jnp.add, g3_f,
+                      afto_lib._cut_coeff_per_worker(state.cuts_ii, lam_np,
+                                                     "b3"))
+    gap = tree_norm_sq(g1) + tree_norm_sq(g2) + tree_norm_sq(g3)
+
+    # master z blocks
+    theta_sum = jax.tree.map(lambda th: jnp.sum(th, axis=0), state.theta)
+    gz1 = tree_axpy(-1.0, theta_sum,
+                    cuts_lib.cut_weighted_coeff(state.cuts_ii, lam_a, "a1"))
+    gz2 = cuts_lib.cut_weighted_coeff(state.cuts_ii, lam_a, "a2")
+    gz3 = cuts_lib.cut_weighted_coeff(state.cuts_ii, lam_a, "a3")
+    gap = gap + tree_norm_sq(gz1) + tree_norm_sq(gz2) + tree_norm_sq(gz3)
+
+    # projected dual residuals (Eq. 27)
+    cutval = cuts_lib.eval_cuts(state.cuts_ii, state.z1, state.z2, state.z3,
+                                X2=state.X2, X3=state.X3)
+    lam_res = (state.lam - afto_lib.proj_lambda(
+        state.lam + hyper.eta_lambda * cutval, hyper)) / hyper.eta_lambda
+    gap = gap + jnp.sum((lam_res * state.cuts_ii.active) ** 2)
+
+    def theta_res(th_j, x1_j):
+        stepped = jax.tree.map(
+            lambda t0, g: t0 + hyper.eta_theta * g, th_j,
+            tree_sub(x1_j, state.z1))
+        proj = afto_lib.proj_theta(stepped, hyper)
+        return tree_norm_sq(jax.tree.map(
+            lambda a, b: (a - b) / hyper.eta_theta, th_j, proj))
+
+    gap = gap + jnp.sum(jax.vmap(theta_res)(state.theta, state.X1))
+    return gap

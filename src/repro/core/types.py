@@ -1,0 +1,182 @@
+"""Core state containers for AFTO (all registered as pytrees).
+
+Notation follows the paper:
+  x_{i,j}  - worker j's local copy of level-i variables  -> stacked trees
+             with a leading worker axis N ("X1", "X2", "X3").
+  z_i      - master consensus variables                  -> plain trees.
+  theta_j  - duals for the consensus constraint x_{1,j}=z1 (Eq. 14).
+  lambda_l - duals for the II-layer polytope cuts (Eq. 14).
+  P_I/P_II - hyper-polyhedral cut sets (fixed capacity + active mask so
+             every shape is jit-stable; Add/Drop write slots, Eq. 25).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _register(cls, data_fields, meta_fields=()):
+    jax.tree_util.register_dataclass(
+        cls, data_fields=list(data_fields), meta_fields=list(meta_fields))
+    return cls
+
+
+@dataclasses.dataclass
+class Hyper:
+    """Algorithm hyper-parameters (static under jit)."""
+    n_workers: int = 4
+    s_active: int = 3           # S: master proceeds after S worker updates
+    tau: int = 10               # max staleness
+    k_inner: int = 4            # K communication rounds for phi estimates
+    p_max: int = 8              # cut-set capacity per layer
+    t_pre: int = 10             # add cuts every t_pre master iterations
+    t1: int = 200               # stop adding cuts after t1 iterations
+    # step sizes (paper Eq. 5-7, 16-21)
+    eta_x: float = 0.05
+    eta_z: float = 0.05
+    eta_lambda: float = 0.05
+    eta_theta: float = 0.05
+    eta_dual_inner: float = 0.05   # eta_phi for the inner ADMM duals
+    eta_s: float = 0.05            # slack update step (level-2 inner)
+    # penalties (Eq. 4, 11)
+    kappa2: float = 1.0
+    kappa3: float = 1.0
+    rho2: float = 1.0
+    # relaxation + weak-convexity constants (Eq. 23/24)
+    eps_i: float = 1e-3
+    eps_ii: float = 1e-3
+    mu_i: float = 0.1
+    mu_ii: float = 0.1
+    # variable bound constants, ||x_i||^2 <= alpha_i (Assumption 4.4)
+    alpha1: float = 100.0
+    alpha2: float = 100.0
+    alpha3: float = 100.0
+    alpha4: float = 100.0       # lambda in [0, sqrt(alpha4)]
+    alpha5: float = 100.0       # ||theta||_inf <= sqrt(alpha5)/d1
+    # regularization floors c_1, c_2 (Eq. 15)
+    c1_floor: float = 1e-3
+    c2_floor: float = 1e-3
+    d1: int = 1                 # dim of x1 (for the theta projection radius)
+
+    def c1(self, t):
+        return jnp.maximum(self.c1_floor,
+                           1.0 / (self.eta_lambda * (t + 1.0) ** 0.25))
+
+    def c2(self, t):
+        return jnp.maximum(self.c2_floor,
+                           1.0 / (self.eta_theta * (t + 1.0) ** 0.25))
+
+
+@dataclasses.dataclass
+class CutSet:
+    """Fixed-capacity polytope { <a1,z1>+<a2,z2>+<a3,z3>
+                                 + sum_j (<b2_j,x2_j> + <b3_j,x3_j>) <= c }.
+
+    a_i : trees shaped like z_i with leading cut axis (P,)
+    b_i : trees shaped like x_i with leading axes (P, N)
+    c   : (P,) offsets;  active: (P,) {0,1} mask;  age: (P,) insertion time.
+    Layer-I cuts simply carry zero b2/a2' blocks where a variable does not
+    participate.
+    """
+    a1: Any
+    a2: Any
+    a3: Any
+    b2: Any
+    b3: Any
+    c: jnp.ndarray
+    active: jnp.ndarray
+    age: jnp.ndarray
+
+
+_register(CutSet, ["a1", "a2", "a3", "b2", "b3", "c", "active", "age"])
+
+
+@dataclasses.dataclass
+class InnerState3:
+    """Level-3 inner ADMM state (Eq. 4-8): x3'_j, z3', duals phi3_j."""
+    x3: Any        # (N, ...) stacked
+    z3: Any
+    phi: Any       # (N, ...) stacked duals
+
+
+_register(InnerState3, ["x3", "z3", "phi"])
+
+
+@dataclasses.dataclass
+class InnerState2:
+    """Level-2 inner ADMM state (Eq. 11): x2'_j, z2', duals phi2_j,
+    slacks s_l >= 0 and cut multipliers gamma_l for the I-layer polytope."""
+    x2: Any
+    z2: Any
+    phi: Any
+    s: jnp.ndarray       # (P,)
+    gamma: jnp.ndarray   # (P,)
+
+
+_register(InnerState2, ["x2", "z2", "phi", "s", "gamma"])
+
+
+@dataclasses.dataclass
+class StaleView:
+    """Per-worker snapshots of the master state taken at each worker's last
+    active iteration t_hat_j (Eq. 16's L_p^{t_hat_j})."""
+    z1: Any              # (N, ...) stacked
+    z2: Any
+    z3: Any
+    lam: jnp.ndarray     # (N, P)
+    theta: Any           # (N, ...) own dual snapshot
+    t_hat: jnp.ndarray   # (N,) int32 — last active iteration per worker
+
+
+_register(StaleView, ["z1", "z2", "z3", "lam", "theta", "t_hat"])
+
+
+@dataclasses.dataclass
+class AFTOState:
+    X1: Any              # (N, ...) worker-local variables
+    X2: Any
+    X3: Any
+    z1: Any
+    z2: Any
+    z3: Any
+    theta: Any           # (N, ...) consensus duals (Eq. 14)
+    lam: jnp.ndarray     # (P,) II-layer cut duals
+    cuts_i: CutSet
+    cuts_ii: CutSet
+    gamma_k: jnp.ndarray  # (P,) last inner gamma (drop rule, Eq. 25)
+    inner3: InnerState3   # warm-started level-3 inner state
+    inner2: InnerState2   # warm-started level-2 inner state
+    stale: StaleView
+    t: jnp.ndarray        # master iteration counter (int32 scalar)
+
+
+_register(AFTOState, ["X1", "X2", "X3", "z1", "z2", "z3", "theta", "lam",
+                      "cuts_i", "cuts_ii", "gamma_k", "inner3", "inner2",
+                      "stale", "t"])
+
+
+@dataclasses.dataclass(frozen=True)
+class TrilevelProblem:
+    """A distributed trilevel problem (Eq. 2/3).
+
+    f1/f2/f3 are *per-worker* objectives with signature
+        f(data_j, x1, x2, x3) -> scalar
+    where data_j is worker j's slice of `data` (leading axis N per leaf).
+    The global objective at each level is the sum over workers.
+    """
+    f1: Callable
+    f2: Callable
+    f3: Callable
+    data: Any
+    n_workers: int
+    x1_init: Any
+    x2_init: Any
+    x3_init: Any
+
+    def sum_f(self, f, X1, X2, X3):
+        """sum_j f(data_j, x1_j, x2_j, x3_j) with stacked per-worker args."""
+        vals = jax.vmap(f, in_axes=(0, 0, 0, 0))(self.data, X1, X2, X3)
+        return jnp.sum(vals)

@@ -1,0 +1,60 @@
+"""mu-weak-convexity utilities (Definitions 3.1/3.2).
+
+A differentiable f is mu-weakly convex iff f + (mu/2)||.||^2 is convex,
+i.e. the Hessian's smallest eigenvalue is >= -mu everywhere.  The paper
+assumes a known mu for h_I/h_II (Appendix E); `estimate_mu` provides a
+practical sampled lower bound via Hessian-vector products so users can
+set `Hyper.mu_i/mu_ii` from data.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_axpy, tree_dot, tree_norm_sq
+
+
+def curvature_along(fn: Callable, point, direction):
+    """d^T H d / ||d||^2 at `point` via forward-over-reverse."""
+    g = lambda p: jax.grad(fn)(p)
+    _, hvp = jax.jvp(g, (point,), (direction,))
+    return tree_dot(direction, hvp) / jnp.maximum(tree_norm_sq(direction),
+                                                  1e-30)
+
+
+def estimate_mu(fn: Callable, point, key, n_samples: int = 16,
+                radius: float = 0.5):
+    """max(0, -min sampled curvature): a practical mu estimate.
+
+    Samples random directions at random perturbations of `point`; a valid
+    mu must dominate the most negative curvature of fn.
+    """
+    leaves, treedef = jax.tree.flatten(point)
+
+    def sample(key):
+        k1, k2 = jax.random.split(key)
+        ds = [jax.random.normal(jax.random.fold_in(k1, i), l.shape, l.dtype)
+              for i, l in enumerate(leaves)]
+        ps = [l + radius * jax.random.normal(
+            jax.random.fold_in(k2, i), l.shape, l.dtype)
+            for i, l in enumerate(leaves)]
+        d = jax.tree.unflatten(treedef, ds)
+        p = jax.tree.unflatten(treedef, ps)
+        return curvature_along(fn, p, d)
+
+    curvs = jax.vmap(sample)(jax.random.split(key, n_samples))
+    return jnp.maximum(0.0, -jnp.min(curvs))
+
+
+def first_order_gap(fn: Callable, x, x_ref, mu):
+    """Def. 3.2 residual: f(x) - [f(x') + <g(x'), x-x'> - mu/2||x-x'||^2].
+
+    Nonnegative for all (x, x') iff fn is mu-weakly convex; used by the
+    property tests to verify cut validity.
+    """
+    g = jax.grad(fn)(x_ref)
+    d = jax.tree.map(jnp.subtract, x, x_ref)
+    lin = fn(x_ref) + tree_dot(g, d) - 0.5 * mu * tree_norm_sq(d)
+    return fn(x) - lin

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (REGRESSION_SPECS, RegressionData,
+                                  DigitsData, make_regression,
+                                  make_digits, make_token_stream)
+from repro.data.loader import ShardedLoader, shard_batch

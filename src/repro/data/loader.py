@@ -1,0 +1,44 @@
+"""Sharded host->device batch pipeline."""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def shard_batch(batch, mesh: Mesh, spec: P):
+    """Place a host batch onto the mesh with the given PartitionSpec."""
+    sharding = NamedSharding(mesh, spec)
+    return jax.tree.map(lambda x: jax.device_put(x, sharding), batch)
+
+
+class ShardedLoader:
+    """Deterministic epoch-shuffled loader over a host-resident array dict.
+
+    Yields dicts of (global_batch, ...) arrays; with a mesh/spec it places
+    them so the leading batch axis is sharded over the data axis.
+    """
+
+    def __init__(self, arrays: dict, batch_size: int, seed: int = 0,
+                 mesh: Optional[Mesh] = None, spec: Optional[P] = None,
+                 drop_last: bool = True):
+        sizes = {k: len(v) for k, v in arrays.items()}
+        assert len(set(sizes.values())) == 1, f"ragged arrays: {sizes}"
+        self.arrays = arrays
+        self.n = next(iter(sizes.values()))
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self.mesh, self.spec = mesh, spec
+        self.drop_last = drop_last
+
+    def __iter__(self) -> Iterator[dict]:
+        idx = self.rng.permutation(self.n)
+        stop = (self.n - self.batch_size + 1) if self.drop_last else self.n
+        for s in range(0, max(stop, 0), self.batch_size):
+            take = idx[s: s + self.batch_size]
+            batch = {k: v[take] for k, v in self.arrays.items()}
+            if self.mesh is not None:
+                batch = shard_batch(batch, self.mesh, self.spec)
+            yield batch

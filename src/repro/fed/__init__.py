@@ -1,0 +1,6 @@
+from repro.fed.sharding import (batch_spec, cache_specs, data_axis,
+                                param_specs, to_named)
+from repro.fed.sketch import sketch, sketch_dot, unsketch
+from repro.fed.trilevel_llm import (FedHyper, FedLLMState, LLMCutSet,
+                                    afto_llm_step, cut_refresh_llm,
+                                    init_fed_state, plain_train_step)

@@ -1,0 +1,197 @@
+"""Mesh partitioning rules for every parameter/activation in the zoo.
+
+Axes:
+  data  : federated workers / data parallel (batch, worker-stacked vars)
+  model : tensor parallel (heads, d_ff, experts, vocab, d_inner)
+  pod   : optional outer axis; worker stacks shard over ('pod','data')
+
+Rules are name-based on the *last* path segment of each leaf.  Every
+parameter that lives inside a stage carries a leading repeat axis (R,...)
+— so its base rank is `leaf.ndim - n_worker_axes - 1` — while top-level
+parameters (embed, lm_head, norms, enc_pos) have no repeat axis.  That
+convention makes name+rank dispatch unambiguous (e.g. dense-MLP `wo`
+(R,f,d) vs attention `wo` (R,H,hd,d) vs MoE `wo` (R,E,f,d)).
+
+Any dim not divisible by its mesh axis falls back to replication (tiny
+models like xlstm-125m have 4 heads against a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# parameters that live OUTSIDE stages (no repeat axis), with full specs
+_TOP_LEVEL = {
+    "embed": ("model", None),
+    "lm_head": (None, "model"),
+    "enc_pos": (None, None),
+    "enc_norm": (None,),
+    "final_norm": (None,),
+}
+
+# stage parameters: spec per (name, base_rank)
+_STAGE_RULES = {
+    # norms
+    ("norm1", 1): (None,), ("norm2", 1): (None,), ("norm_x", 1): (None,),
+    ("q_norm", 1): (None,), ("k_norm", 1): (None,),
+    # attention (+ cross)
+    ("wq", 3): (None, "model", None), ("wk", 3): (None, "model", None),
+    ("wv", 3): (None, "model", None), ("wo", 3): ("model", None, None),
+    ("xwq", 3): (None, "model", None), ("xwk", 3): (None, "model", None),
+    ("xwv", 3): (None, "model", None), ("xwo", 3): ("model", None, None),
+    # dense GLU mlp
+    ("wi", 2): (None, "model"), ("wg", 2): (None, "model"),
+    ("wo", 2): ("model", None),
+    # MoE (expert-parallel over the leading E dim; MoE `wo` (E,f,d) is
+    # rank-3 like attention's and shares its ("model",None,None) spec)
+    ("router", 2): (None, "model"),
+    ("wi", 3): ("model", None, None), ("wg", 3): ("model", None, None),
+    # mamba
+    ("in_proj", 2): (None, "model"), ("conv_w", 2): (None, "model"),
+    ("conv_b", 1): ("model",), ("xproj", 2): ("model", None),
+    ("dt_bias", 1): ("model",), ("a_log", 2): ("model", None),
+    ("d_skip", 1): ("model",), ("out_proj", 2): ("model", None),
+    # xlstm (mlstm's input gate `wi` (d,H) hits the rank-2 rule above)
+    ("wf", 2): (None, "model"), ("fb", 1): (None,),
+    ("wz", 3): (None, "model", None), ("wo_gate", 3): (None, "model", None),
+    ("rz", 3): ("model", None, None),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return str(entry.name)
+    return ""
+
+
+def _divisible(dim: int, axis, mesh_shape: dict) -> bool:
+    if axis is None:
+        return True
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    size = int(np.prod([mesh_shape[a] for a in axes]))
+    return dim % size == 0
+
+
+_HEAD_TENSORS = {"wq", "wk", "wv", "xwq", "xwk", "xwv", "wz", "wo_gate"}
+_HEAD_OUT_TENSORS = {"wo", "xwo"}
+
+
+def param_specs(params, mesh: Mesh, *, stack_axes: Tuple = (),
+                shard_head_dim_fallback: bool = False) -> Any:
+    """PartitionSpec tree for a model param pytree.
+
+    stack_axes: shardings for extra leading axes prepended OUTSIDE the
+    per-stage repeat axis — e.g. ('data',) or (('pod','data'),) for the
+    federated worker axis.
+
+    shard_head_dim_fallback: when the head count doesn't divide the model
+    axis (whisper: 20 heads on a 16-way axis) shard head_dim instead of
+    replicating — the attention contraction then psums over the model
+    axis (a §Perf lever; off by default = the faithful baseline).
+    """
+    mesh_shape = dict(mesh.shape)
+    n_stack = len(stack_axes)
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        if name in _TOP_LEVEL:
+            base = list(_TOP_LEVEL[name])
+            n_lead = leaf.ndim - len(base) - n_stack
+            lead = list(stack_axes) + [None] * n_lead
+        else:
+            base_rank = leaf.ndim - n_stack - 1     # strip worker + repeat
+            base = list(_STAGE_RULES.get((name, base_rank),
+                                         (None,) * max(base_rank, 0)))
+            lead = list(stack_axes) + [None]        # repeat axis unsharded
+        full = lead + base
+        for i, ax in enumerate(full):
+            if ax is not None and not _divisible(leaf.shape[i], ax,
+                                                 mesh_shape):
+                full[i] = None
+        if shard_head_dim_fallback and base_rank_is_attn(name, leaf,
+                                                         n_stack):
+            full = _head_dim_fallback(name, full, leaf, mesh_shape)
+        return P(*full)
+
+    def base_rank_is_attn(name, leaf, n_stack):
+        return (name in _HEAD_TENSORS or name in _HEAD_OUT_TENSORS) \
+            and leaf.ndim - n_stack - 1 == 3
+
+    def _head_dim_fallback(name, full, leaf, mesh_shape):
+        # (..., d, H, hd) or (..., H, hd, d): if H failed divisibility,
+        # try hd instead
+        if name in _HEAD_TENSORS:
+            h_i, hd_i = leaf.ndim - 2, leaf.ndim - 1
+        else:
+            h_i, hd_i = leaf.ndim - 3, leaf.ndim - 2
+        if full[h_i] is None and _divisible(leaf.shape[hd_i], "model",
+                                            mesh_shape):
+            full = list(full)
+            full[hd_i] = "model"
+        return full
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def to_named(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def data_axis(mesh: Mesh):
+    """The axis (or axes) that batch/worker dims shard over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def batch_spec(mesh: Mesh, stacked: bool = False) -> P:
+    """Tokens (B, S) or worker-stacked (N, b, S)."""
+    ax = data_axis(mesh)
+    return P(ax, None, None) if stacked else P(ax, None)
+
+
+def cache_specs(cache, mesh: Mesh, batch_sharded: bool = True,
+                kv_seq_sharded: bool = False) -> Any:
+    """Decode caches: (R, B, ...) leaves — shard batch over data (when it
+    divides) and heads/d_inner dims over model by name.
+
+    kv_seq_sharded: context-parallel decode — shard the KV *sequence*
+    dim over the data axis instead of (or in addition to) batch; the
+    one-token attention reduction over the sharded sequence lowers to a
+    psum.  The §Perf lever for long_500k's batch=1 (data axis otherwise
+    idle)."""
+    ax = data_axis(mesh)
+    mesh_shape = dict(mesh.shape)
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        spec = [None] * leaf.ndim
+        if batch_sharded and leaf.ndim >= 2:
+            spec[1] = ax                          # (R, B, ...)
+        if name in ("k", "v", "pos"):             # (R,B,W,Hkv,hd)/(R,B,W)
+            if kv_seq_sharded:
+                spec[1] = None
+                spec[2] = ax
+            if name in ("k", "v"):
+                spec[3] = "model"
+        elif name in ("xk", "xv"):                # (R,B,T,Hkv,hd)
+            spec[3] = "model"
+        elif name == "conv":                      # (R,B,K-1,di)
+            spec[3] = "model"
+        elif name == "ssm":                       # (R,B,di,dS)
+            spec[2] = "model"
+        elif name in ("c", "n", "h", "m"):        # xlstm states (R,B,H,..)
+            if leaf.ndim >= 3:
+                spec[2] = "model"
+        for i, a in enumerate(spec):
+            if a is not None and not _divisible(leaf.shape[i], a,
+                                                mesh_shape):
+                spec[i] = None
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

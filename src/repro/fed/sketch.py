@@ -1,0 +1,89 @@
+"""Count-sketch compression of mu-cut coefficients (beyond-paper).
+
+An exact mu-cut's coefficient vector lives in the full variable space —
+at LLM scale that is P_max model-sized pytrees per polytope, which is
+memory-prohibitive (see DESIGN.md §7).  We therefore restrict the x3/z3
+(and x2/z2) blocks of the cut space to a fixed r-dimensional count-sketch
+subspace:
+
+    S(v)[k] = sum_{i : h(i)=k} sigma_i * v_i,
+
+with h / sigma derived from a seeded integer hash of each element's flat
+index — O(n) elementwise compute, no projection matrix is ever
+materialized, and the ops are trivially shardable (the final segment-sum
+reduces over the sharded axis with one small psum).
+
+<S(a), S(b)> is an unbiased JL-style estimator of <a, b>; cuts generated
+and evaluated inside the same sketch are exact *within the subspace*.
+The paper-scale experiments validate sketched-vs-exact trajectories
+empirically (benchmarks/sketch_fidelity.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_MIX1 = jnp.uint32(2654435761)
+_MIX2 = jnp.uint32(2246822519)
+_MIX3 = jnp.uint32(3266489917)
+
+
+def _mix(x: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """Cheap integer hash (xxhash-style avalanche), uint32 -> uint32."""
+    h = x * _MIX1 + seed
+    h = h ^ (h >> 15)
+    h = h * _MIX2
+    h = h ^ (h >> 13)
+    h = h * _MIX3
+    return h ^ (h >> 16)
+
+
+def _leaf_hashes(shape, leaf_seed: jnp.ndarray, r: int):
+    n = 1
+    for s in shape:
+        n *= int(s)
+    iota = jax.lax.iota(jnp.uint32, n)
+    h = _mix(iota, leaf_seed)
+    idx = (h % jnp.uint32(r)).astype(jnp.int32)
+    sign = jnp.where((h >> 31) > 0, 1.0, -1.0).astype(jnp.float32)
+    return idx.reshape(shape), sign.reshape(shape)
+
+
+def _leaf_seeds(tree, seed: int):
+    leaves, treedef = jax.tree.flatten(tree)
+    seeds = [jnp.uint32((seed * 1_000_003 + 7919 * i + 1) % (2 ** 32))
+             for i in range(len(leaves))]
+    return leaves, treedef, seeds
+
+
+def sketch(tree: Any, seed: int, r: int) -> jnp.ndarray:
+    """Count-sketch a pytree into an (r,) f32 vector."""
+    leaves, _, seeds = _leaf_seeds(tree, seed)
+    out = jnp.zeros((r,), jnp.float32)
+    for leaf, s in zip(leaves, seeds):
+        idx, sign = _leaf_hashes(leaf.shape, s, r)
+        vals = leaf.astype(jnp.float32) * sign
+        out = out + jax.ops.segment_sum(vals.reshape(-1),
+                                        idx.reshape(-1), num_segments=r)
+    return out
+
+
+def unsketch(template: Any, s_vec: jnp.ndarray, seed: int) -> Any:
+    """Adjoint of `sketch`: lift an (r,) vector back to the tree space.
+
+    unsketch(t, sketch(v)) has <unsketch, w> == <sketch(v), sketch(w)>,
+    so using it as a gradient is exactly 'the cut acts in sketch space'.
+    """
+    r = s_vec.shape[0]
+    leaves, treedef, seeds = _leaf_seeds(template, seed)
+    out = []
+    for leaf, sd in zip(leaves, seeds):
+        idx, sign = _leaf_hashes(leaf.shape, sd, r)
+        out.append((s_vec[idx] * sign).astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def sketch_dot(s_a: jnp.ndarray, s_b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(s_a * s_b)

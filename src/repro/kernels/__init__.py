@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+<name>.py  : pl.pallas_call + explicit BlockSpec VMEM tiling
+ops.py     : jit'd public wrappers (interpret=True off-TPU)
+ref.py     : pure-jnp oracles (the correctness source of truth)
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (cut_eval, flash_attention, mlstm_chunk,
+                               mlstm_sequence)

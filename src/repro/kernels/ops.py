@@ -1,0 +1,95 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+`interpret` defaults to True off-TPU (the kernel body executes in Python
+via the Pallas interpreter — bit-accurate semantics, no Mosaic); on a
+real TPU backend pass interpret=False (or rely on the default) to get
+the compiled kernels.  Models select kernels via `use_pallas` flags; the
+dry-run keeps the jnp oracles (Mosaic cannot AOT-lower on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cut_eval as _cut_eval_mod
+from repro.kernels import flash_attention as _flash_mod
+from repro.kernels import mlstm_chunk as _mlstm_mod
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def cut_eval(a, v, c, active, block_d: int = 2048,
+             interpret: bool = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _cut_eval_mod.cut_eval(a, v, c, active, block_d=block_d,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = None):
+    """Pads S/T to block multiples, calls the kernel, unpads."""
+    interpret = _default_interpret() if interpret is None else interpret
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    bq = min(block_q, max(8, s))
+    bk = min(block_k, max(8, t))
+    s_pad = ((s + bq - 1) // bq) * bq
+    t_pad = ((t + bk - 1) // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    # padded K positions must never win the softmax: causal masking
+    # handles q_pad; for k_pad rely on causal (k_pos > q_pos). For
+    # non-causal inputs, mask via window trick is not available — require
+    # causal or exact multiples there.
+    if not causal:
+        assert t_pad == t and s_pad == s, \
+            "non-causal flash requires block-aligned shapes"
+    out = _flash_mod.flash_attention(qp, kp, vp, causal=causal,
+                                     window=window, block_q=bq, block_k=bk,
+                                     interpret=interpret)
+    return out[:, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mlstm_chunk(q, k, v, li, lf, c, n, m, interpret: bool = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mlstm_mod.mlstm_chunk(q, k, v, li, lf, c, n, m,
+                                  interpret=interpret)
+
+
+def mlstm_sequence(q, k, v, li, lf, state, chunk: int = 256,
+                   interpret: bool = None):
+    """Full-sequence chunkwise mLSTM via the kernel: q/k/v (B,S,H,hd),
+    li/lf (B,S,H); state dict(c,n,m) as in models.xlstm."""
+    b, s, h, hd = q.shape
+    n_chunks = max(1, s // chunk)
+    cl = s // n_chunks
+
+    def to_bh(a):                     # (B,S,H,...) -> (B,H,S,...)
+        return a.transpose(0, 2, 1, 3) if a.ndim == 4 \
+            else a.transpose(0, 2, 1)[..., None]
+
+    qb, kb, vb = to_bh(q), to_bh(k), to_bh(v)
+    lib, lfb = to_bh(li), to_bh(lf)
+    c = state["c"]
+    n = state["n"][:, :, None]
+    m = state["m"][:, :, None, None]
+
+    ys = []
+    for i in range(n_chunks):
+        sl = slice(i * cl, (i + 1) * cl)
+        y, c, n, m = mlstm_chunk(qb[:, :, sl], kb[:, :, sl], vb[:, :, sl],
+                                 lib[:, :, sl], lfb[:, :, sl], c, n, m,
+                                 interpret=interpret)
+        ys.append(y)
+    y = jnp.concatenate(ys, axis=2).transpose(0, 2, 1, 3)
+    return y, {"c": c, "n": n[:, :, 0], "m": m[:, :, 0, 0]}

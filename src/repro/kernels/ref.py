@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the source of truth the
+kernels are validated against in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attend, causal_window_mask
+from repro.models.xlstm import mlstm_chunk_body
+
+
+def cut_eval_ref(a, v, c, active):
+    """a: (P,D), v: (D,), c/active: (P,)."""
+    val = a.astype(jnp.float32) @ v.astype(jnp.float32)
+    return (val - c) * active
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B,S,H,hd), k/v: (B,T,Hkv,hd)."""
+    s, t = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(s)[None]
+    k_pos = jnp.arange(t)[None]
+    mask = None
+    if causal or window:
+        mask = causal_window_mask(q_pos, k_pos, window)
+        if not causal:
+            mask = mask | (k_pos[:, None, :] >= 0)
+        mask = jnp.broadcast_to(mask, (q.shape[0],) + mask.shape[1:])
+        mask = mask[:, None]
+    return attend(q, k, v, mask)
+
+
+def mlstm_chunk_ref(q, k, v, li, lf, c, n, m):
+    """Same layout as kernels.mlstm_chunk: q/k/v (B,H,L,hd), li/lf
+    (B,H,L,1), state (B,H,hd,hd)/(B,H,1,hd)/(B,H,1,1)."""
+    # adapt to mlstm_chunk_body's (B,L,H,...) layout
+    qb = q.transpose(0, 2, 1, 3)
+    kb = k.transpose(0, 2, 1, 3)
+    vb = v.transpose(0, 2, 1, 3)
+    lib = li[..., 0].transpose(0, 2, 1)
+    lfb = lf[..., 0].transpose(0, 2, 1)
+    state = {"c": c, "n": n[:, :, 0], "m": m[:, :, 0, 0]}
+    y, st = mlstm_chunk_body(qb, kb, vb, lib, lfb, state)
+    return (y.transpose(0, 2, 1, 3), st["c"], st["n"][:, :, None],
+            st["m"][:, :, None, None])

@@ -1,0 +1,435 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST stay first — jax locks the device count
+# at first init (see module docstring below).  `from __future__` is
+# therefore deliberately omitted in this file.
+
+_DOC = """Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape x mesh) combination with ShapeDtypeStruct
+stand-ins (no allocation) and extract roofline terms (deliverable g).
+
+The two lines above MUST precede any jax import: jax locks the device
+count at first init.  Only this entry point forces 512 host devices;
+tests and benches see the real single CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.jsonl
+"""
+__doc__ = _DOC
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ASSIGNED_ARCHS, DRYRUN_SKIPS, get_config,
+                           get_shape)
+from repro.configs.shapes import InputShape
+from repro.fed import sharding as shd
+from repro.fed.trilevel_llm import (FedHyper, afto_llm_step, cut_refresh_llm,
+                                    init_fed_state, plain_train_step)
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.models.config import (ModelConfig, active_param_count,
+                                 step_flops)
+
+
+# ---------------------------------------------------------------------------
+# shape stand-ins
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _n_workers(mesh) -> int:
+    shape = dict(mesh.shape)
+    return shape.get("pod", 1) * shape["data"]
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                fed: bool) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (weak-type
+    correct, shardable, no device allocation)."""
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        if fed:
+            n = _n_workers(mesh)
+            b = max(1, shape.global_batch // n)
+            out["tokens"] = _sds((n, b, shape.seq_len), jnp.int32)
+            out["val_tokens"] = _sds((n, b, shape.seq_len), jnp.int32)
+            if cfg.frontend == "frames":
+                fr = _sds((n, b, cfg.encoder_seq, cfg.d_model),
+                          jnp.bfloat16)
+                out["frames"] = fr
+                out["val_frames"] = fr
+        else:
+            out["tokens"] = _sds((shape.global_batch, shape.seq_len),
+                                 jnp.int32)
+            if cfg.frontend == "frames":
+                out["frames"] = _sds(
+                    (shape.global_batch, cfg.encoder_seq, cfg.d_model),
+                    jnp.bfloat16)
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((shape.global_batch, shape.seq_len), jnp.int32)
+        if cfg.frontend == "frames":
+            out["frames"] = _sds(
+                (shape.global_batch, cfg.encoder_seq, cfg.d_model),
+                jnp.bfloat16)
+    else:  # decode: ONE new token against a seq_len KV cache
+        out["tokens"] = _sds((shape.global_batch, 1), jnp.int32)
+        out["cur_pos"] = _sds((shape.global_batch,), jnp.int32)
+    return out
+
+
+def _safe(spec: P, shape, mesh) -> P:
+    """Drop axis names from dims they don't divide."""
+    sizes = dict(mesh.shape)
+    fixed = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = int(np.prod([sizes[a] for a in axes]))
+        fixed.append(ax if shape[i] % total == 0 else None)
+    return P(*fixed)
+
+
+def fed_state_specs(state_shapes, mesh, hyper: FedHyper):
+    """PartitionSpec tree for a FedLLMState shape tree."""
+    ax = shd.data_axis(mesh)
+
+    def pspec(*spec):
+        return spec
+
+    def cutset_specs(cs):
+        if hyper.cut_mode == "sketch":
+            a2 = _safe(P(None, None), cs.a2.shape, mesh)
+            a3 = _safe(P(None, None), cs.a3.shape, mesh)
+            b2 = _safe(P(None, ax, None), cs.b2.shape, mesh)
+            b3 = _safe(P(None, ax, None), cs.b3.shape, mesh)
+        else:
+            a2 = jax.tree.map(
+                lambda x: _safe(P(None, ax, None, None, "model"),
+                                x.shape, mesh), cs.a2)
+            a3 = _pspecs(cs.a3, mesh, stack_axes=(None,))
+            b2 = jax.tree.map(
+                lambda x: _safe(P(None, ax, None, None, "model"),
+                                x.shape, mesh), cs.b2)
+            b3 = _pspecs(cs.b3, mesh, stack_axes=(None, ax))
+        return dataclasses.replace(
+            cs, a1=P(None, None), a2=a2, a3=a3, b2=b2, b3=b3,
+            c=P(None), active=P(None), age=P(None))
+
+    x2_spec = jax.tree.map(
+        lambda x: _safe(P(ax, None, None, "model"), x.shape, mesh),
+        state_shapes.X2)
+    return dataclasses.replace(
+        state_shapes,
+        X1=P(ax, None),
+        X2=x2_spec,
+        X3=_pspecs(state_shapes.X3, mesh, stack_axes=(ax,)),
+        z1=P(None),
+        z2=x2_spec,
+        z3=_pspecs(state_shapes.z3, mesh),
+        theta=P(ax, None), lam=P(None),
+        cuts=cutset_specs(state_shapes.cuts),
+        cuts_i=cutset_specs(state_shapes.cuts_i),
+        gamma_k=P(None),
+        stale_lam=_safe(P(ax, None), state_shapes.stale_lam.shape, mesh),
+        stale_theta=P(ax, None),
+        t=P())
+
+
+# ---------------------------------------------------------------------------
+# step builders: (fn, args, in_shardings)
+# ---------------------------------------------------------------------------
+
+def build_train(cfg: ModelConfig, shape: InputShape, mesh,
+                hyper: FedHyper, step: str):
+    n = _n_workers(mesh)
+    b_local = max(1, shape.global_batch // n)
+    batch = input_specs(cfg, shape, mesh, fed=True)
+    state_shapes = jax.eval_shape(
+        lambda k: init_fed_state(cfg, hyper, k, b_local, shape.seq_len - 1),
+        jax.random.PRNGKey(0))
+    state_specs = fed_state_specs(state_shapes, mesh, hyper)
+    ax = shd.data_axis(mesh)
+    batch_specs = {k: _safe(P(ax, *(None,) * (v.ndim - 1)), v.shape, mesh)
+                   for k, v in batch.items()}
+    active = _sds((n,), jnp.float32)
+
+    if step == "cut_refresh":
+        fn = lambda s, bt: cut_refresh_llm(cfg, hyper, s, bt)
+        args = (state_shapes, batch)
+        shardings = (state_specs, batch_specs)
+    else:
+        fn = lambda s, bt, a: afto_llm_step(cfg, hyper, s, bt, a)
+        args = (state_shapes, batch, active)
+        shardings = (state_specs, batch_specs, P(None))
+    return fn, args, shardings
+
+
+HEAD_DIM_FALLBACK = False  # set by --shard-head-dim (perf lever)
+
+
+def _pspecs(params, mesh, **kw):
+    return shd.param_specs(params, mesh,
+                           shard_head_dim_fallback=HEAD_DIM_FALLBACK,
+                           **kw)
+
+
+def build_plain_train(cfg: ModelConfig, shape: InputShape, mesh,
+                      unroll: bool, remat: bool):
+    from repro.optim import adamw
+    params = jax.eval_shape(
+        lambda k: tfm.init_params(cfg, k), jax.random.PRNGKey(0))
+    opt = adamw(3e-4)
+    opt_state = jax.eval_shape(opt.init, params)
+    batch = input_specs(cfg, shape, mesh, fed=False)
+    ax = shd.data_axis(mesh)
+    p_specs = _pspecs(params, mesh)
+    o_specs = {"step": P(),
+               "m": _pspecs(opt_state["m"], mesh),
+               "v": _pspecs(opt_state["v"], mesh)}
+    b_specs = {k: _safe(P(ax, *(None,) * (v.ndim - 1)), v.shape, mesh)
+               for k, v in batch.items()}
+
+    def fn(p, o, bt):
+        return plain_train_step(cfg, p, o, bt["tokens"],
+                                bt.get("frames"), optimizer=opt,
+                                remat=remat, unroll=unroll)
+
+    return fn, (params, opt_state, batch), (p_specs, o_specs, b_specs)
+
+
+def build_prefill(cfg: ModelConfig, shape: InputShape, mesh, unroll: bool):
+    params = jax.eval_shape(
+        lambda k: tfm.init_params(cfg, k), jax.random.PRNGKey(0))
+    batch = input_specs(cfg, shape, mesh, fed=False)
+    ax = shd.data_axis(mesh)
+    p_specs = _pspecs(params, mesh)
+    b_specs = {k: _safe(P(ax, *(None,) * (v.ndim - 1)), v.shape, mesh)
+               for k, v in batch.items()}
+
+    def fn(p, bt):
+        return tfm.prefill(cfg, p, bt["tokens"], bt.get("frames"),
+                           unroll=unroll)
+
+    return fn, (params, batch), (p_specs, b_specs)
+
+
+def build_decode(cfg: ModelConfig, shape: InputShape, mesh, unroll: bool,
+                 kv_seq_sharded: bool = False):
+    params = jax.eval_shape(
+        lambda k: tfm.init_params(cfg, k), jax.random.PRNGKey(0))
+    caches = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, shape.global_batch, shape.seq_len))
+    batch = input_specs(cfg, shape, mesh, fed=False)
+    p_specs = _pspecs(params, mesh)
+    c_specs = shd.cache_specs(caches, mesh,
+                              kv_seq_sharded=kv_seq_sharded)
+    ax = shd.data_axis(mesh)
+    t_spec = _safe(P(ax, None), batch["tokens"].shape, mesh)
+    pos_spec = _safe(P(ax), batch["cur_pos"].shape, mesh)
+
+    def fn(p, c, tok, pos):
+        return tfm.decode_step(cfg, p, c, tok, pos, unroll=unroll)
+
+    return fn, (params, caches, batch["tokens"], batch["cur_pos"]), \
+        (p_specs, c_specs, t_spec, pos_spec)
+
+
+# ---------------------------------------------------------------------------
+# run one combination
+# ---------------------------------------------------------------------------
+
+def default_step_kind(shape: InputShape) -> str:
+    return {"train": "afto_train", "prefill": "prefill",
+            "decode": "decode"}[shape.kind]
+
+
+def analytic_flops(cfg: ModelConfig, shape: InputShape,
+                   step_kind: str) -> Tuple[float, float]:
+    """(analytic_total, model_flops_6nd)."""
+    n_act = active_param_count(cfg)
+    if shape.kind == "train":
+        sf = step_flops(cfg, shape.global_batch, shape.seq_len - 1,
+                        training=True)
+        tokens = shape.global_batch * (shape.seq_len - 1)
+        return sf["total"], 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        sf = step_flops(cfg, shape.global_batch, shape.seq_len,
+                        training=False)
+        tokens = shape.global_batch * shape.seq_len
+        return sf["total"], 2.0 * n_act * tokens
+    sf = step_flops(cfg, shape.global_batch, 1, training=False,
+                    kv_len=shape.seq_len)
+    return sf["total"], 2.0 * n_act * shape.global_batch
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            step: Optional[str] = None, cut_mode: str = "exact",
+            p_max: int = 2, verbose: bool = True,
+            layer_mode: str = "unroll",
+            attn_impl: str = "naive", sketch_r: int = 4096,
+            kv_seq_shard: bool = False,
+            first_order: bool = False) -> dict:
+    cfg = get_config(arch)
+    if attn_impl != "naive":
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    shape = get_shape(shape_name)
+    if (arch, shape_name) in DRYRUN_SKIPS:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped",
+                "reason": DRYRUN_SKIPS[(arch, shape_name)]}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = int(np.prod(list(dict(mesh.shape).values())))
+    step_kind = step or default_step_kind(shape)
+
+    unroll = layer_mode == "unroll"
+    hyper = FedHyper(n_workers=_n_workers(mesh), cut_mode=cut_mode,
+                     sketch_r=sketch_r, first_order_cuts=first_order,
+                     p_max=p_max, k_inner=1, remat=True, unroll=unroll)
+    t0 = time.time()
+    if step_kind in ("afto_train", "cut_refresh"):
+        fn, args, shardings = build_train(
+            cfg, shape, mesh, hyper,
+            "cut_refresh" if step_kind == "cut_refresh" else "train")
+    elif step_kind == "plain_train":
+        fn, args, shardings = build_plain_train(cfg, shape, mesh,
+                                                unroll=unroll, remat=True)
+    elif step_kind == "prefill":
+        fn, args, shardings = build_prefill(cfg, shape, mesh,
+                                            unroll=unroll)
+    elif step_kind == "decode":
+        fn, args, shardings = build_decode(cfg, shape, mesh,
+                                           unroll=unroll,
+                                           kv_seq_sharded=kv_seq_shard)
+    else:
+        raise ValueError(step_kind)
+
+    named = jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        shardings, is_leaf=lambda x: isinstance(x, P))
+
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=named).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    an_total, model_flops = analytic_flops(cfg, shape, step_kind)
+    report = rl.build_report(
+        arch=arch, shape=shape_name, mesh_name=mesh_kind, chips=chips,
+        step_kind=step_kind, compiled=compiled,
+        analytic_flops_total=an_total, model_flops_total=model_flops)
+    out = report.to_json()
+    out.update({"status": "ok", "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "layer_mode": layer_mode, "cut_mode": cut_mode,
+                "attn_impl": attn_impl, "kv_seq_shard": kv_seq_shard,
+                "tag": os.environ.get("HILLCLIMB_TAG", "")})
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"== {arch} x {shape_name} x {mesh_kind} [{step_kind}] ==")
+        print(f"  memory_analysis: arg={ma.argument_size_in_bytes/1e9:.2f}GB"
+              f" temp={ma.temp_size_in_bytes/1e9:.2f}GB"
+              f" out={ma.output_size_in_bytes/1e9:.2f}GB per device")
+        ca = compiled.cost_analysis()
+        print(f"  cost_analysis: flops/dev={ca.get('flops', 0):.3e}"
+              f" bytes/dev={ca.get('bytes accessed', 0):.3e}")
+        t = report.terms()
+        print(f"  roofline: compute={t['compute_corrected_s']*1e3:.2f}ms"
+              f" memory={t['memory_s']*1e3:.2f}ms"
+              f" collective={t['collective_s']*1e3:.2f}ms"
+              f" dominant={report.dominant()}"
+              f" useful_ratio={t['useful_ratio']:.2f}")
+        print(f"  collectives: {report.coll_bytes}")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--step", default=None,
+                    choices=[None, "afto_train", "plain_train", "prefill",
+                             "decode", "cut_refresh"])
+    ap.add_argument("--cut-mode", default="exact",
+                    choices=["exact", "sketch"])
+    ap.add_argument("--p-max", type=int, default=2)
+    ap.add_argument("--first-order", action="store_true",
+                    help="first-order cuts: stop-grad through the inner "
+                         "rollout at cut generation (perf lever)")
+    ap.add_argument("--shard-head-dim", action="store_true",
+                    help="shard head_dim over the model axis when the "
+                         "head count doesn't divide it (perf lever)")
+    ap.add_argument("--kv-seq-shard", action="store_true",
+                    help="context-parallel decode: shard the KV cache "
+                         "sequence dim over the data axis")
+    ap.add_argument("--attn-impl", default="naive",
+                    choices=["naive", "chunked"])
+    ap.add_argument("--sketch-r", type=int, default=4096)
+    ap.add_argument("--layer-mode", default="unroll",
+                    choices=["unroll", "scan"],
+                    help="unroll = exact cost analysis (roofline table); "
+                         "scan = compact HLO, fast compile (multipod "
+                         "lowering proof)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) for --mesh")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        from repro.configs.shapes import INPUT_SHAPES
+        for a in ASSIGNED_ARCHS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    global HEAD_DIM_FALLBACK
+    HEAD_DIM_FALLBACK = args.shard_head_dim
+
+    failures = 0
+    for arch, shape in combos:
+        try:
+            res = run_one(arch, shape, args.mesh, step=args.step,
+                          cut_mode=args.cut_mode, p_max=args.p_max,
+                          layer_mode=args.layer_mode,
+                          attn_impl=args.attn_impl,
+                          sketch_r=args.sketch_r,
+                          kv_seq_shard=args.kv_seq_shard,
+                          first_order=args.first_order)
+        except Exception as e:  # a dry-run failure is a bug in the system
+            traceback.print_exc()
+            res = {"arch": arch, "shape": shape, "mesh": args.mesh,
+                   "status": "error", "error": repr(e)}
+            failures += 1
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(res) + "\n")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# (device-count override must precede jax import, as in dryrun.py)
+
+_DOC = """HLO profile inspector: the dry-run's "profiler" (no real TPU).
+
+Prints, for one (arch x shape x mesh):
+  * op-kind histogram of the optimized HLO (what the program is made of),
+  * every collective instruction with its shape/bytes (the collective
+    schedule the roofline term summarizes),
+  * the top-k largest tensors materialized (where the memory term
+    comes from).
+
+  PYTHONPATH=src python -m repro.launch.profile --arch llama3-8b \
+      --shape train_4k --mesh pod --top 15
+"""
+__doc__ = _DOC
+
+import argparse
+import re
+from collections import Counter
+
+from repro.launch import roofline as rl
+
+
+def op_histogram(hlo: str) -> Counter:
+    ops = Counter()
+    for line in hlo.splitlines():
+        m = re.match(r"\s*(%?[\w.\-]+) = (.*?) ([\w\-]+)\(", line)
+        if m:
+            ops[m.group(3)] += 1
+    return ops
+
+
+def largest_tensors(hlo: str, top: int = 15):
+    out = []
+    for line in hlo.splitlines():
+        m = re.match(r"\s*%?[\w.\-]+ = (.*?) ([\w\-]+)\(", line)
+        if not m:
+            continue
+        b = rl._shape_bytes(m.group(1))
+        if b:
+            out.append((b, m.group(2), m.group(1)[:70]))
+    out.sort(key=lambda x: -x[0])
+    return out[:top]
+
+
+def collectives(hlo: str):
+    rows = []
+    for line in hlo.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.*?) (%?[\w\-]+)\(", line)
+        if m and m.group(2).lstrip("%").replace("-start", "") \
+                in rl._COLLECTIVES:
+            rows.append((m.group(2), rl._shape_bytes(m.group(1)),
+                         m.group(1)[:60]))
+    return rows
+
+
+def main():
+    from repro.launch import dryrun as dr
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--step", default=None)
+    ap.add_argument("--layer-mode", default="scan",
+                    choices=["scan", "unroll"])
+    ap.add_argument("--cut-mode", default="exact",
+                    choices=["exact", "sketch"])
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_config, get_shape
+    from repro.fed.trilevel_llm import FedHyper
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    cfg = get_config(args.arch)
+    shape = get_shape(args.shape)
+    hyper = FedHyper(n_workers=dr._n_workers(mesh),
+                     cut_mode=args.cut_mode, p_max=2, k_inner=1,
+                     remat=True, unroll=(args.layer_mode == "unroll"))
+    step_kind = args.step or dr.default_step_kind(shape)
+    if step_kind in ("afto_train", "cut_refresh"):
+        fn, a, sh = dr.build_train(cfg, shape, mesh, hyper,
+                                   "cut_refresh" if step_kind ==
+                                   "cut_refresh" else "train")
+    elif step_kind == "prefill":
+        fn, a, sh = dr.build_prefill(cfg, shape, mesh,
+                                     hyper.unroll)
+    else:
+        fn, a, sh = dr.build_decode(cfg, shape, mesh, hyper.unroll)
+    named = jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        sh, is_leaf=lambda x: isinstance(x, P))
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=named).lower(*a).compile()
+    hlo = compiled.as_text()
+
+    print(f"== op histogram ({args.arch} x {args.shape} x {args.mesh}, "
+          f"{step_kind}) ==")
+    for op, n in op_histogram(hlo).most_common(20):
+        print(f"  {op:>24s} {n}")
+    print("\n== collectives (schedule order) ==")
+    for op, b, shp in collectives(hlo):
+        print(f"  {op:>24s} {b/1e6:12.1f} MB  {shp}")
+    print(f"\n== top-{args.top} largest tensors ==")
+    for b, op, shp in largest_tensors(hlo, args.top):
+        print(f"  {b/1e9:8.2f} GB  {op:>18s}  {shp}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""End-to-end training driver (deliverable b).
+
+Trains a reduced (or xlstm-125m-class) model with the federated trilevel
+AFTO step — or plain AdamW for comparison — on synthetic token streams,
+with checkpointing and loss logging.  Runs on CPU.
+
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m \
+      --reduced --steps 200 --mode afto
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.core.scheduler import StragglerConfig, StragglerScheduler
+from repro.data.synthetic import make_token_stream
+from repro.fed.trilevel_llm import (FedHyper, afto_llm_step, cut_refresh_llm,
+                                    init_fed_state, plain_train_step)
+from repro.models import transformer as tfm
+from repro.optim import adamw
+
+
+def run_afto(cfg, args) -> dict:
+    n, b, s = args.workers, args.batch, args.seq
+    hyper = FedHyper(n_workers=n, cut_mode=args.cut_mode,
+                     sketch_r=args.sketch_r, p_max=2, k_inner=1,
+                     remat=False, eta_x=args.lr, eta_z=args.lr)
+    state = init_fed_state(cfg, hyper, jax.random.PRNGKey(args.seed),
+                           b, s - 1)
+    step = jax.jit(lambda st, bt, m: afto_llm_step(cfg, hyper, st, bt, m))
+    refresh = jax.jit(lambda st, bt: cut_refresh_llm(cfg, hyper, st, bt))
+    val_loss = jax.jit(lambda w, tk: tfm.train_loss(cfg, w, tk))
+
+    sched = StragglerScheduler(StragglerConfig(
+        n_workers=n, s_active=max(1, n - 1), tau=args.tau,
+        n_stragglers=1, seed=args.seed))
+    history = []
+    t0 = time.time()
+    for it in range(args.steps):
+        toks = make_token_stream(cfg.vocab_size, n * b, s,
+                                 seed=args.seed * 7919 + it)
+        toks = jnp.asarray(toks).reshape(n, b, s)
+        batch = {"tokens": toks, "val_tokens": toks}
+        mask, sim_t = sched.next_active()
+        state = step(state, batch, jnp.asarray(mask))
+        if (it + 1) % args.t_pre == 0 and it < args.t1:
+            state = refresh(state, batch)
+        if (it + 1) % args.log_every == 0 or it == args.steps - 1:
+            w = jax.tree.map(lambda x: x[0], state.X3)
+            loss = float(val_loss(w, toks[0]))
+            history.append({"step": it + 1, "loss": loss,
+                            "sim_time": sim_t,
+                            "host_s": round(time.time() - t0, 1),
+                            "cuts": float(jnp.sum(state.cuts.active))})
+            print(json.dumps(history[-1]))
+        if args.ckpt_dir and (it + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, state.z3, it + 1)
+    return {"history": history}
+
+
+def run_plain(cfg, args) -> dict:
+    params = tfm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = adamw(args.lr)
+    opt_state = opt.init(params)
+    step = jax.jit(lambda p, o, tk: plain_train_step(
+        cfg, p, o, tk, optimizer=opt, remat=False))
+    history = []
+    t0 = time.time()
+    b = args.workers * args.batch
+    for it in range(args.steps):
+        toks = jnp.asarray(make_token_stream(
+            cfg.vocab_size, b, args.seq, seed=args.seed * 7919 + it))
+        params, opt_state, loss = step(params, opt_state, toks)
+        if (it + 1) % args.log_every == 0 or it == args.steps - 1:
+            history.append({"step": it + 1, "loss": float(loss),
+                            "host_s": round(time.time() - t0, 1)})
+            print(json.dumps(history[-1]))
+        if args.ckpt_dir and (it + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, params, it + 1)
+    return {"history": history}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced smoke variant (CPU-friendly)")
+    ap.add_argument("--mode", default="afto", choices=["afto", "plain"])
+    ap.add_argument("--cut-mode", default="sketch",
+                    choices=["sketch", "exact"])
+    ap.add_argument("--sketch-r", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2,
+                    help="per-worker batch")
+    ap.add_argument("--seq", type=int, default=129)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--tau", type=int, default=10)
+    ap.add_argument("--t-pre", type=int, default=20)
+    ap.add_argument("--t1", type=int, default=10_000)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    print(f"training {cfg.name} mode={args.mode} steps={args.steps}")
+    if args.mode == "afto":
+        run_afto(cfg, args)
+    else:
+        run_plain(cfg, args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models.config import (BlockSpec, ModelConfig, Stage,
+                                 active_param_count, param_count,
+                                 step_flops, uniform_stages)
+from repro.models.transformer import (decode_step, encode, forward,
+                                      greedy_sample, init_cache,
+                                      init_params, prefill, train_loss)
+from repro.models import simple

@@ -1,0 +1,105 @@
+"""Shared neural-net building blocks (pure functions + param factories)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape, jnp.float32)
+            / jnp.sqrt(fan)).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02) \
+        .astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)) \
+        .astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (hd/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) absolute token positions."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                              # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., None, :]                         # (...,S,1,hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / mlp
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu, "tanh": jnp.tanh}[name]
+
+
+def glu_mlp_init(key, d, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": dense_init(k1, (d, d_ff), dtype),
+            "wg": dense_init(k2, (d, d_ff), dtype),
+            "wo": dense_init(k3, (d_ff, d), dtype, fan_in=d_ff)}
+
+
+def glu_mlp_apply(params, x, act="silu"):
+    a = activation(act)
+    h = a(jnp.einsum("...d,df->...f", x, params["wg"])) \
+        * jnp.einsum("...d,df->...f", x, params["wi"])
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Token-level CE; logits (..., V), labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,142 @@
+"""Mamba selective-SSM sequence mixer (Jamba's recurrent block).
+
+Training/prefill uses a chunked parallel scan: sequential `lax.scan` over
+chunks with an associative prefix-scan inside each chunk, so activation
+memory is O(B * chunk * d_inner * d_state) instead of O(B * S * ...).
+Decode carries (conv_state, ssm_state) and costs O(1) per token — this is
+what makes jamba's long_500k shape natural.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def mamba_init(key, d, expand: int, d_state: int, d_conv: int, dtype):
+    di = expand * d
+    ks = jax.random.split(key, 6)
+    a_init = jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                              (di, 1)))   # S4D-real init
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype, fan_in=d),
+        "conv_w": dense_init(ks[1], (d_conv, di), dtype, fan_in=d_conv),
+        "conv_b": jnp.zeros((di,), dtype),
+        "xproj": dense_init(ks[2], (di, 2 * d_state + 1), dtype, fan_in=di),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "a_log": a_init.astype(jnp.float32),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[3], (di, d), dtype, fan_in=di),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,S,di), w: (K,di).
+
+    state: (B,K-1,di) carried context (decode/chunk boundary) or None.
+    Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, di)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y, new_state
+
+
+def _ssm_params(params, xc):
+    """xc: (B,L,di) post-conv activations -> (delta_a, delta_bx, c)."""
+    proj = jnp.einsum("bld,dp->blp", xc, params["xproj"])
+    d_state = (proj.shape[-1] - 1) // 2
+    # rank-1 dt: shared scalar per position, per-channel bias (cf. mamba's
+    # low-rank dt projection), softplus-positive
+    dt = jax.nn.softplus(proj[..., 0][..., None] + params["dt_bias"])
+    bmat = proj[..., 1:1 + d_state].astype(jnp.float32)       # (B,L,dS)
+    cmat = proj[..., 1 + d_state:].astype(jnp.float32)        # (B,L,dS)
+    a = -jnp.exp(params["a_log"])                             # (di,dS)
+    dt = dt.astype(jnp.float32)                               # (B,L,di)
+    delta_a = jnp.exp(dt[..., None] * a[None, None])          # (B,L,di,dS)
+    delta_bx = (dt * xc.astype(jnp.float32))[..., None] \
+        * bmat[..., None, :]                                  # (B,L,di,dS)
+    return delta_a, delta_bx, cmat
+
+
+def _chunk_scan(delta_a, delta_bx, h0):
+    """Associative scan within one chunk with carry-in h0.
+
+    Composition: (a2,b2) o (a1,b1) = (a1*a2, a2*b1 + b2)."""
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (delta_a, delta_bx),
+                                            axis=1)
+    h = a_cum * h0[:, None] + b_cum                  # (B,L,di,dS)
+    return h, h[:, -1]
+
+
+def mamba_apply(params, x, chunk: int = 256, state=None
+                ) -> Tuple[jnp.ndarray, dict]:
+    """x: (B,S,d) -> (y (B,S,d), state dict). S must be chunk-divisible
+    (the model pads); decode calls with S=1 via `mamba_decode`."""
+    b, s, d = x.shape
+    xz = jnp.einsum("bsd,dp->bsp", x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                # (B,S,di) each
+    di = xi.shape[-1]
+    d_state = params["a_log"].shape[1]
+
+    if state is None:
+        conv_state = jnp.zeros((b, params["conv_w"].shape[0] - 1, di),
+                               x.dtype)
+        ssm_state = jnp.zeros((b, di, d_state), jnp.float32)
+    else:
+        conv_state, ssm_state = state["conv"], state["ssm"]
+
+    n_chunks = max(1, s // chunk)
+    chunk = s // n_chunks
+    xi_c = xi.reshape(b, n_chunks, chunk, di).transpose(1, 0, 2, 3)
+
+    def body(carry, xc_chunk):
+        conv_st, h0 = carry
+        xc, conv_st = _causal_conv(xc_chunk, params["conv_w"],
+                                   params["conv_b"], conv_st)
+        xc = jax.nn.silu(xc)
+        da, dbx, cmat = _ssm_params(params, xc)
+        h, h_last = _chunk_scan(da, dbx, h0)
+        y = jnp.einsum("blds,bls->bld", h, cmat)      # (B,L,di)
+        y = y + params["d_skip"] * xc.astype(jnp.float32)
+        return (conv_st, h_last), y.astype(x.dtype)
+
+    (conv_state, ssm_state), ys = jax.lax.scan(
+        body, (conv_state, ssm_state), xi_c)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,dp->bsp", y, params["out_proj"])
+    return out, {"conv": conv_state, "ssm": ssm_state}
+
+
+def mamba_decode(params, x, state) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode; x: (B,1,d)."""
+    b = x.shape[0]
+    xz = jnp.einsum("bsd,dp->bsp", x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xi, params["conv_w"], params["conv_b"],
+                                  state["conv"])
+    xc = jax.nn.silu(xc)
+    da, dbx, cmat = _ssm_params(params, xc)           # (B,1,di,dS)
+    h = da[:, 0] * state["ssm"] + dbx[:, 0]           # (B,di,dS)
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0])[:, None]
+    y = y + params["d_skip"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,dp->bsp", y, params["out_proj"])
+    return out, {"conv": conv_state, "ssm": h}
+
+
+def init_mamba_state(batch, d, expand, d_state, d_conv, dtype):
+    di = expand * d
+    return {"conv": jnp.zeros((batch, d_conv - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, d_state), jnp.float32)}

@@ -1,0 +1,94 @@
+"""Mixture-of-Experts channel mixer: top-k router + capacity-based
+grouped-GEMM dispatch (sort/scatter, NOT the dense one-hot dispatch
+einsum — at 384 experts the GShard-style dispatch einsum costs
+G*E*C*d MACs and would dwarf the experts themselves).
+
+Experts are sharded over the `model` mesh axis (expert parallelism); the
+scatter/gather over the expert axis lowers to collectives recorded by the
+dry-run.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation, dense_init
+
+
+def moe_init(key, d, d_ff, n_experts, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (d, n_experts), jnp.float32),
+        "wi": dense_init(k2, (n_experts, d, d_ff), dtype, fan_in=d),
+        "wg": dense_init(k3, (n_experts, d, d_ff), dtype, fan_in=d),
+        "wo": dense_init(k4, (n_experts, d_ff, d), dtype, fan_in=d_ff),
+    }
+
+
+def _route(router_w, x_flat, top_k: int):
+    """Returns (expert_idx (T,K), weight (T,K), aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weight, expert_idx = jax.lax.top_k(probs, top_k)
+    weight = weight / jnp.maximum(jnp.sum(weight, -1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style): E * <f_e, p_e>
+    e = router_w.shape[1]
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32)
+    fe = jnp.mean(one_hot, axis=0)
+    aux = e * jnp.sum(fe * me)
+    return expert_idx, weight.astype(x_flat.dtype), aux
+
+
+def moe_apply(params, x, top_k: int, capacity_factor: float = 1.25,
+              act: str = "silu") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d) -> (out (B,S,d), aux_loss).
+
+    Tokens are routed to (expert, slot) buffers of shape (E, C, d) via a
+    capacity-bounded scatter; each expert runs a dense GLU MLP on its
+    buffer; results gather back with routing weights.  Overflowing tokens
+    are dropped (standard capacity behaviour).
+    """
+    b, s, d = x.shape
+    e = params["wi"].shape[0]
+    xf = x.reshape(b * s, d)
+    t = b * s
+    expert_idx, weight, aux = _route(params["router"], xf, top_k)
+
+    # flatten (token, k) assignments
+    flat_e = expert_idx.reshape(-1)                      # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(t), top_k)            # (T*K,)
+    flat_w = weight.reshape(-1)                          # (T*K,)
+
+    capacity = max(1, int(capacity_factor * t * top_k / e))
+    # slot of each assignment within its expert = rank among same-expert
+    # assignments (stable by token order):
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # position within the sorted run of each expert
+    idx_in_sorted = jnp.arange(flat_e.shape[0])
+    start_of_expert = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    slot_sorted = idx_in_sorted - start_of_expert[sorted_e]
+    slot = jnp.zeros_like(flat_e).at[order].set(slot_sorted)
+    keep = slot < capacity
+
+    # scatter tokens into (E, C, d)
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    se = jnp.where(keep, flat_e, 0)
+    ss = jnp.where(keep, slot, 0)
+    contrib = jnp.where(keep[:, None], xf[flat_t], 0)
+    buf = buf.at[se, ss].add(contrib)
+
+    # expert GLU MLPs as grouped dense matmuls
+    a = activation(act)
+    h = a(jnp.einsum("ecd,edf->ecf", buf, params["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, params["wi"])
+    y = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+
+    # gather back with routing weights
+    out_flat = jnp.zeros((t, d), jnp.float32)
+    picked = y[se, ss].astype(jnp.float32) * (flat_w * keep)[:, None]
+    out_flat = out_flat.at[flat_t].add(picked)
+    return out_flat.reshape(b, s, d).astype(x.dtype), aux

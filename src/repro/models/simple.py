@@ -1,0 +1,103 @@
+"""Small pure-JAX networks used by the paper's own experiments (§5).
+
+MLP for the robust-HPO regression tasks (§5.1) and a LeNet-5 for the
+domain-adaptation digits task (§5.2) — the paper uses LeNet-5 for all of
+the pretraining/finetuning/reweighting networks.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, sizes: Sequence[int], dtype=jnp.float32):
+    params = {}
+    keys = jax.random.split(key, len(sizes) - 1)
+    for i, (din, dout) in enumerate(zip(sizes[:-1], sizes[1:])):
+        params[f"w{i}"] = (jax.random.normal(keys[i], (din, dout), dtype)
+                           / jnp.sqrt(din))
+        params[f"b{i}"] = jnp.zeros((dout,), dtype)
+    return params
+
+
+def mlp_apply(params, x):
+    n_layers = len(params) // 2
+    h = x
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+def smoothed_l1(params, delta: float = 1e-3):
+    """||w||_{1*}: smooth |w| via sqrt(w^2 + delta^2) - delta (paper §5.1)."""
+    total = 0.0
+    for p in jax.tree.leaves(params):
+        total = total + jnp.sum(jnp.sqrt(p.astype(jnp.float32) ** 2
+                                         + delta ** 2) - delta)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# LeNet-5 (32x32x1 inputs, 10 classes)
+# ---------------------------------------------------------------------------
+
+def lenet_init(key, n_classes: int = 10, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+
+    def conv(key, kh, kw, cin, cout):
+        fan = kh * kw * cin
+        return jax.random.normal(key, (kh, kw, cin, cout), dtype) \
+            / jnp.sqrt(fan)
+
+    def dense(key, din, dout):
+        return jax.random.normal(key, (din, dout), dtype) / jnp.sqrt(din)
+
+    return {
+        "c1": conv(ks[0], 5, 5, 1, 6), "c1b": jnp.zeros((6,), dtype),
+        "c2": conv(ks[1], 5, 5, 6, 16), "c2b": jnp.zeros((16,), dtype),
+        "f1": dense(ks[2], 16 * 5 * 5, 120), "f1b": jnp.zeros((120,), dtype),
+        "f2": dense(ks[3], 120, 84), "f2b": jnp.zeros((84,), dtype),
+        "f3": dense(ks[4], 84, n_classes),
+        "f3b": jnp.zeros((n_classes,), dtype),
+    }
+
+
+def _conv2d(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _avgpool2(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+
+
+def lenet_apply(params, x):
+    """x: (B, 32, 32, 1) -> logits (B, n_classes)."""
+    h = jnp.tanh(_conv2d(x, params["c1"]) + params["c1b"])   # (B,28,28,6)
+    h = _avgpool2(h)                                          # (B,14,14,6)
+    h = jnp.tanh(_conv2d(h, params["c2"]) + params["c2b"])   # (B,10,10,16)
+    h = _avgpool2(h)                                          # (B,5,5,16)
+    h = h.reshape(h.shape[0], -1)
+    h = jnp.tanh(h @ params["f1"] + params["f1b"])
+    h = jnp.tanh(h @ params["f2"] + params["f2b"])
+    return h @ params["f3"] + params["f3b"]
+
+
+def cross_entropy(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

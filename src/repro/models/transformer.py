@@ -1,0 +1,432 @@
+"""Unified decoder stack covering every assigned architecture.
+
+One code path handles dense / GQA / sliding-window attention, MoE,
+Mamba, mLSTM/sLSTM mixers, and the Whisper encoder-decoder — selected by
+ModelConfig.stages.  The layer loop runs either as `lax.scan` over the
+stacked (R, ...) parameters of each stage (compact HLO — training and
+smoke tests) or Python-unrolled (`unroll=True` — the dry-run path, so
+`compiled.cost_analysis()` counts every layer instead of one scan body).
+
+Modes:
+  train   : full-sequence forward, returns logits (+ MoE aux loss)
+  prefill : full-sequence forward that also seeds the decode cache
+  decode  : one token per call against the cache (serve_step)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.config import BlockSpec, ModelConfig, Stage
+from repro.models.layers import (dense_init, dtype_of, embed_init,
+                                 glu_mlp_apply, glu_mlp_init, rms_norm,
+                                 softmax_cross_entropy)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _block_init(cfg: ModelConfig, spec: BlockSpec, key):
+    dt = dtype_of(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": jnp.zeros((d,), dt),
+                         "norm2": jnp.zeros((d,), dt)}
+    if spec.mixer == "attn":
+        p["attn"] = attn_lib.attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                       cfg.head_dim, dt,
+                                       cross=spec.cross_attn,
+                                       qk_norm=spec.qk_norm)
+        if spec.cross_attn:
+            p["norm_x"] = jnp.zeros((d,), dt)
+    elif spec.mixer == "mamba":
+        p["mamba"] = mamba_lib.mamba_init(ks[0], d, cfg.ssm_expand,
+                                          cfg.ssm_d_state, cfg.ssm_conv, dt)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = xlstm_lib.mlstm_init(ks[0], d, cfg.n_heads,
+                                          cfg.head_dim, dt)
+    elif spec.mixer == "slstm":
+        p["slstm"] = xlstm_lib.slstm_init(ks[0], d, cfg.n_heads,
+                                          cfg.head_dim, dt)
+    if spec.mlp == "dense":
+        p["mlp"] = glu_mlp_init(ks[1], d, cfg.d_ff, dt)
+    elif spec.mlp == "moe":
+        p["moe"] = moe_lib.moe_init(ks[1], d, cfg.d_ff, cfg.n_experts, dt)
+    return p
+
+
+def _stage_init(cfg: ModelConfig, stage: Stage, key):
+    """Stack per-pattern-position params over the stage's repeats."""
+    out = {}
+    for i, spec in enumerate(stage.pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), stage.repeats)
+        out[f"pos{i}"] = jax.vmap(
+            lambda k: _block_init(cfg, spec, k))(keys)
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    cfg.validate()
+    dt = dtype_of(cfg.dtype)
+    k_embed, k_stages, k_enc, k_head, k_pos = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                       dt)
+    params["stages"] = [
+        _stage_init(cfg, st, jax.random.fold_in(k_stages, i))
+        for i, st in enumerate(cfg.stages)]
+    if cfg.is_encoder_decoder:
+        params["encoder"] = [
+            _stage_init(cfg, st, jax.random.fold_in(k_enc, i))
+            for i, st in enumerate(cfg.encoder_stages)]
+        params["enc_pos"] = (jax.random.normal(
+            k_pos, (cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dt)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# single block forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _effective_window(cfg: ModelConfig, spec: BlockSpec, ctx_len: int) -> int:
+    if spec.window:
+        return spec.window
+    if (cfg.long_context_window
+            and ctx_len > cfg.long_context_threshold):
+        return cfg.long_context_window
+    return 0
+
+
+def _block_fwd(cfg: ModelConfig, spec: BlockSpec, bp, x, positions,
+               enc_out=None, collect_kv: bool = False):
+    """Returns (x, aux_loss, kv_or_state_for_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        window = _effective_window(cfg, spec, x.shape[1])
+        out, (k, v) = attn_lib.self_attention(
+            bp["attn"], h, positions, n_kv_heads=cfg.n_kv_heads,
+            rope_theta=cfg.rope_theta, causal=spec.causal, window=window,
+            qk_norm=spec.qk_norm, norm_eps=cfg.norm_eps,
+            impl=cfg.attn_impl, block_q=cfg.attn_block_q,
+            block_k=cfg.attn_block_k)
+        if collect_kv:
+            kv = {"k": k, "v": v}
+        x = x + out
+        if spec.cross_attn:
+            hx = rms_norm(x, bp["norm_x"], cfg.norm_eps)
+            enc_kv = attn_lib.encode_kv(bp["attn"], enc_out)
+            x = x + attn_lib.cross_attention(bp["attn"], hx, enc_kv)
+            if collect_kv:
+                kv["xk"], kv["xv"] = enc_kv
+    elif spec.mixer == "mamba":
+        out, state = mamba_lib.mamba_apply(bp["mamba"], h,
+                                           chunk=cfg.ssm_chunk)
+        if collect_kv:
+            kv = state
+        x = x + out
+    elif spec.mixer == "mlstm":
+        out, state = xlstm_lib.mlstm_apply(bp["mlstm"], h,
+                                           chunk=cfg.mlstm_chunk)
+        if collect_kv:
+            kv = state
+        x = x + out
+    elif spec.mixer == "slstm":
+        out, state = xlstm_lib.slstm_apply(bp["slstm"], h)
+        if collect_kv:
+            kv = state
+        x = x + out
+
+    if spec.mlp == "dense":
+        h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+        x = x + glu_mlp_apply(bp["mlp"], h, cfg.act)
+    elif spec.mlp == "moe":
+        h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+        out, aux = moe_lib.moe_apply(bp["moe"], h, cfg.top_k,
+                                     cfg.capacity_factor, cfg.act)
+        x = x + out
+    return x, aux, kv
+
+
+# ---------------------------------------------------------------------------
+# stage loops (scan or unrolled)
+# ---------------------------------------------------------------------------
+
+def _run_stages(cfg: ModelConfig, stages_params, stages_cfg, x, positions,
+                enc_out=None, unroll: bool = False,
+                collect_kv: bool = False, remat: bool = False):
+    """Returns (x, total_aux, caches) — caches is a list parallel to
+    stages, each {posN: stacked-over-repeats cache} (or None)."""
+    total_aux = jnp.zeros((), jnp.float32)
+    caches: List[Optional[dict]] = []
+
+    def block_fwd(spec, bp, x, positions, enc_out, collect):
+        if remat and not collect:
+            return jax.checkpoint(
+                lambda bp_, x_: _block_fwd(cfg, spec, bp_, x_, positions,
+                                           enc_out, False))(bp, x)
+        return _block_fwd(cfg, spec, bp, x, positions, enc_out, collect)
+
+    for st_params, st in zip(stages_params, stages_cfg):
+        st_cache: Dict[str, Any] = {}
+        if unroll or collect_kv:
+            # python loop (dry-run exactness / cache collection)
+            per_pos_caches: Dict[str, List] = {f"pos{i}": []
+                                               for i in range(len(st.pattern))}
+            for r in range(st.repeats):
+                for i, spec in enumerate(st.pattern):
+                    bp = jax.tree.map(lambda a: a[r], st_params[f"pos{i}"])
+                    x, aux, kv = block_fwd(spec, bp, x, positions,
+                                           enc_out, collect_kv)
+                    total_aux = total_aux + aux
+                    if collect_kv:
+                        per_pos_caches[f"pos{i}"].append(kv)
+            if collect_kv:
+                for k, lst in per_pos_caches.items():
+                    st_cache[k] = jax.tree.map(
+                        lambda *xs: jnp.stack(xs, 0), *lst)
+        else:
+            def body(carry, rp):
+                xc, auxc = carry
+                for i, spec in enumerate(st.pattern):
+                    xc, aux, _ = block_fwd(spec, rp[f"pos{i}"], xc,
+                                           positions, enc_out, False)
+                    auxc = auxc + aux
+                return (xc, auxc), None
+
+            (x, total_aux), _ = jax.lax.scan(body, (x, total_aux),
+                                             st_params)
+        caches.append(st_cache if collect_kv else None)
+    return x, total_aux, caches
+
+
+# ---------------------------------------------------------------------------
+# public forward passes
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, params, frames, unroll: bool = False):
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend): frames (B, T_enc, d)."""
+    x = frames + params["enc_pos"][None, : frames.shape[1]]
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1])[None], frames.shape[:2])
+    x, _, _ = _run_stages(cfg, params["encoder"], cfg.encoder_stages, x,
+                          positions, unroll=unroll)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _logits(cfg: ModelConfig, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def forward(cfg: ModelConfig, params, tokens, frames=None,
+            unroll: bool = False, collect_kv: bool = False,
+            remat: bool = False, embed_perturbation=None):
+    """tokens: (B,S) int32 -> logits (B,S,V).
+
+    frames: (B, T_enc, d) for encoder-decoder / frame-frontend archs.
+    embed_perturbation: optional (B,S,d) added to the token embeddings —
+    the trilevel robust-HPO adversarial variable x2 enters here.
+    Returns (logits, aux_loss, caches)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if embed_perturbation is not None:
+        x = x + embed_perturbation.astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None],
+                                 tokens.shape)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        assert frames is not None, f"{cfg.name} needs encoder frames"
+        enc_out = encode(cfg, params, frames, unroll=unroll)
+    x, aux, caches = _run_stages(cfg, params["stages"], cfg.stages, x,
+                                 positions, enc_out, unroll, collect_kv,
+                                 remat)
+    return _logits(cfg, params, x), aux, caches
+
+
+def train_loss(cfg: ModelConfig, params, tokens, frames=None,
+               unroll: bool = False, remat: bool = False,
+               embed_perturbation=None):
+    """Next-token CE + MoE aux loss.
+
+    embed_perturbation, if given, must match the model INPUT length
+    (tokens.shape[1] - 1)."""
+    logits, aux, _ = forward(cfg, params, tokens[:, :-1], frames, unroll,
+                             remat=remat,
+                             embed_perturbation=embed_perturbation)
+    ce = softmax_cross_entropy(logits, tokens[:, 1:])
+    return ce + cfg.router_aux_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+def _block_cache_init(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                      max_seq: int, dtype):
+    if spec.mixer == "attn":
+        window = _effective_window(cfg, spec, max_seq)
+        cap = min(max_seq, window) if window else max_seq
+        c = attn_lib.init_kv_cache(batch, cfg.n_kv_heads, cfg.head_dim,
+                                   cap, dtype)
+        if spec.cross_attn:
+            c["xk"] = jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads,
+                                 cfg.head_dim), dtype)
+            c["xv"] = jnp.zeros_like(c["xk"])
+        return c
+    if spec.mixer == "mamba":
+        return mamba_lib.init_mamba_state(batch, cfg.d_model,
+                                          cfg.ssm_expand, cfg.ssm_d_state,
+                                          cfg.ssm_conv, dtype)
+    if spec.mixer == "mlstm":
+        return xlstm_lib.init_mlstm_state(batch, cfg.n_heads, cfg.head_dim)
+    if spec.mixer == "slstm":
+        return xlstm_lib.init_slstm_state(batch, cfg.n_heads, cfg.head_dim)
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Decode cache for the whole stack, stacked (R, B, ...) per stage."""
+    dt = dtype_of(cfg.dtype)
+    caches = []
+    for st in cfg.stages:
+        st_cache = {}
+        for i, spec in enumerate(st.pattern):
+            one = _block_cache_init(cfg, spec, batch, max_seq, dt)
+            st_cache[f"pos{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None],
+                                           (st.repeats,) + a.shape), one)
+        caches.append(st_cache)
+    return caches
+
+
+def _block_decode(cfg: ModelConfig, spec: BlockSpec, bp, x, cache, cur_pos):
+    """x: (B,1,d); cache: this block's cache. Returns (x, new_cache)."""
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        window = _effective_window(cfg, spec, int(cache["k"].shape[1]) + 1) \
+            if not spec.window else spec.window
+        # capacity already encodes the window; pass window for masking
+        cap = cache["k"].shape[1]
+        out, new_kv = attn_lib.decode_attention(
+            bp["attn"], h, {k: cache[k] for k in ("k", "v", "pos")},
+            cur_pos, rope_theta=cfg.rope_theta,
+            window=window if window and window <= cap else 0,
+            qk_norm=spec.qk_norm, norm_eps=cfg.norm_eps)
+        x = x + out
+        new_cache = dict(new_kv)
+        if spec.cross_attn:
+            hx = rms_norm(x, bp["norm_x"], cfg.norm_eps)
+            x = x + attn_lib.cross_attention(bp["attn"], hx,
+                                             (cache["xk"], cache["xv"]))
+            new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+    elif spec.mixer == "mamba":
+        out, new_cache = mamba_lib.mamba_decode(bp["mamba"], h, cache)
+        x = x + out
+    elif spec.mixer == "mlstm":
+        out, new_cache = xlstm_lib.mlstm_decode(bp["mlstm"], h, cache)
+        x = x + out
+    elif spec.mixer == "slstm":
+        out, new_cache = xlstm_lib.slstm_decode(bp["slstm"], h, cache)
+        x = x + out
+
+    if spec.mlp == "dense":
+        hh = rms_norm(x, bp["norm2"], cfg.norm_eps)
+        x = x + glu_mlp_apply(bp["mlp"], hh, cfg.act)
+    elif spec.mlp == "moe":
+        hh = rms_norm(x, bp["norm2"], cfg.norm_eps)
+        out, _ = moe_lib.moe_apply(bp["moe"], hh, cfg.top_k,
+                                   cfg.capacity_factor, cfg.act)
+        x = x + out
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, caches, tokens, cur_pos,
+                unroll: bool = False):
+    """One serve step: tokens (B,1) int32, cur_pos (B,) absolute position.
+
+    Returns (logits (B,1,V), new_caches)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    new_caches = []
+    for st_params, st_cache, st in zip(params["stages"], caches, cfg.stages):
+        if unroll:
+            new_st: Dict[str, List] = {f"pos{i}": []
+                                       for i in range(len(st.pattern))}
+            for r in range(st.repeats):
+                for i, spec in enumerate(st.pattern):
+                    bp = jax.tree.map(lambda a: a[r], st_params[f"pos{i}"])
+                    cc = jax.tree.map(lambda a: a[r], st_cache[f"pos{i}"])
+                    x, nc = _block_decode(cfg, spec, bp, x, cc, cur_pos)
+                    new_st[f"pos{i}"].append(nc)
+            new_caches.append({
+                k: jax.tree.map(lambda *xs: jnp.stack(xs, 0), *v)
+                for k, v in new_st.items()})
+        else:
+            def body(xc, rp_and_cache):
+                rp, cc = rp_and_cache
+                ncs = {}
+                for i, spec in enumerate(st.pattern):
+                    xc, nc = _block_decode(cfg, spec, rp[f"pos{i}"], xc,
+                                           cc[f"pos{i}"], cur_pos)
+                    ncs[f"pos{i}"] = nc
+                return xc, ncs
+
+            x, new_st = jax.lax.scan(body, x, (st_params, st_cache))
+            new_caches.append(new_st)
+    return _logits(cfg, params, x), new_caches
+
+
+def prefill(cfg: ModelConfig, params, tokens, frames=None,
+            unroll: bool = False, max_seq: Optional[int] = None):
+    """Full-context forward that seeds the decode cache.
+
+    max_seq: total capacity to allocate (prompt + planned generation);
+    defaults to prompt_len + 1 (a single decode step).  Returns
+    (logits, caches) positioned so the next decode_step uses
+    cur_pos = tokens.shape[1]."""
+    b, s = tokens.shape
+    logits, _, kv = forward(cfg, params, tokens, frames, unroll=unroll,
+                            collect_kv=True)
+    caches = init_cache(cfg, b, max_seq or (s + 1))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    out = []
+    for st_cache, st_kv, st in zip(caches, kv, cfg.stages):
+        st_out = {}
+        for i, spec in enumerate(st.pattern):
+            blank = st_cache[f"pos{i}"]
+            got = st_kv[f"pos{i}"]
+            if spec.mixer == "attn":
+                def seed(blank_r, got_r):
+                    c = attn_lib.seed_kv_cache(
+                        {k: blank_r[k] for k in ("k", "v", "pos")},
+                        got_r["k"], got_r["v"], positions)
+                    if spec.cross_attn:
+                        c["xk"], c["xv"] = got_r["xk"], got_r["xv"]
+                    return c
+                st_out[f"pos{i}"] = jax.vmap(seed)(blank, got)
+            else:
+                st_out[f"pos{i}"] = got    # recurrent states are the cache
+        out.append(st_out)
+    return logits, out
+
+
+def greedy_sample(logits):
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (Optimizer, sgd, momentum, adam, adamw,
+                                    clip_by_global_norm, chain)
+from repro.optim.schedules import (constant, cosine_decay, linear_warmup,
+                                   warmup_cosine)

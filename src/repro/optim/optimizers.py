@@ -1,0 +1,138 @@
+"""Minimal functional optimizers (optax is not available offline).
+
+Each optimizer is an (init, update) pair:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+The paper's own AFTO updates are plain projected gradient steps on the
+regularized Lagrangian (Eqs. 16-21) and do not use these; the optimizers
+serve the baselines (FedNest/ADBO), the plain `train_step` used for
+roofline comparisons, and the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _scale(lr):
+    if callable(lr):
+        return lr
+    return lambda step: lr
+
+
+def sgd(lr) -> Optimizer:
+    lr_fn = _scale(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        upd = jax.tree.map(lambda g: -lr_fn(step) * g, grads)
+        return upd, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    lr_fn = _scale(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params=None):
+        step, mu = state["step"], state["mu"]
+        mu = jax.tree.map(lambda m, g: beta * m + g, mu, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -lr_fn(step) * (beta * m + g),
+                               mu, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr_fn(step) * m, mu)
+        return upd, {"step": step + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          state_dtype=jnp.float32) -> Optimizer:
+    lr_fn = _scale(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        m = jax.tree.map(lambda m0, g: b1 * m0 + (1 - b1)
+                         * g.astype(state_dtype), state["m"], grads)
+        v = jax.tree.map(lambda v0, g: b2 * v0 + (1 - b2)
+                         * jnp.square(g.astype(state_dtype)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(mh, vh, p):
+            u = -(lr_fn(step) * (mh / bc1)
+                  / (jnp.sqrt(vh / bc2) + eps))
+            if weight_decay:
+                u = u - lr_fn(step) * weight_decay * p.astype(state_dtype)
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v,
+                               params if params is not None
+                               else jax.tree.map(jnp.zeros_like, m))
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params=None):
+        leaves = jax.tree.leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return Optimizer(init, update)
+
+
+def chain(*opts: Optimizer) -> Optimizer:
+    def init(params):
+        return tuple(o.init(params) for o in opts)
+
+    def update(grads, state, params=None):
+        new_states = []
+        upd = grads
+        for o, s in zip(opts, state):
+            upd, ns = o.update(upd, s, params)
+            new_states.append(ns)
+        return upd, tuple(new_states)
+
+    return Optimizer(init, update)

@@ -1,0 +1,36 @@
+"""Learning-rate schedules (step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def fn(step):
+        frac = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        return jnp.asarray(peak * frac, jnp.float32)
+    return fn
+
+
+def cosine_decay(init: float, decay_steps: int, alpha: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step / max(decay_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.asarray(init * ((1 - alpha) * cos + alpha), jnp.float32)
+    return fn
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        warm = peak * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak * (final_frac + (1 - final_frac)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.asarray(jnp.where(step < warmup_steps, warm, cos),
+                           jnp.float32)
+    return fn

@@ -1,0 +1,16 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_axpy,
+    tree_dot,
+    tree_norm_sq,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+    tree_stack,
+    tree_unstack,
+    tree_where,
+    tree_size,
+    tree_ravel,
+    tree_any_nan,
+)
+from repro.utils.registry import Registry

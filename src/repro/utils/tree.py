@@ -1,0 +1,79 @@
+"""Pytree vector-space helpers.
+
+The AFTO core treats each level's variable block (x1, x2, x3, z_i, duals,
+cut coefficients) as an element of a vector space represented by an
+arbitrary pytree.  These helpers implement the handful of vector-space
+operations the algorithm needs, preserving structure (and therefore
+sharding) instead of flattening to a single dense vector.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_axpy(s, a, b):
+    """b + s * a, elementwise over matching pytrees."""
+    return jax.tree.map(lambda x, y: y + s * x, a, b)
+
+
+def tree_dot(a, b):
+    """Full inner product <a, b> across every leaf (f32 accumulate)."""
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b))
+    return jnp.sum(jnp.stack(leaves)) if leaves else jnp.float32(0.0)
+
+
+def tree_norm_sq(a):
+    return tree_dot(a, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_where(mask_scalar, a, b):
+    """jnp.where with a scalar (or broadcastable) predicate over pytrees."""
+    return jax.tree.map(lambda x, y: jnp.where(mask_scalar, x, y), a, b)
+
+
+def tree_stack(trees):
+    """Stack a list of identically-structured pytrees along new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree, n):
+    """Inverse of tree_stack: returns a list of n pytrees."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_size(a) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_ravel(a):
+    """Concatenate all leaves into one 1-D f32 vector (host/test helper)."""
+    leaves = [jnp.ravel(x).astype(jnp.float32) for x in jax.tree.leaves(a)]
+    if not leaves:
+        return jnp.zeros((0,), jnp.float32)
+    return jnp.concatenate(leaves)
+
+
+def tree_any_nan(a):
+    leaves = [jnp.any(~jnp.isfinite(x)) for x in jax.tree.leaves(a)
+              if jnp.issubdtype(x.dtype, jnp.inexact)]
+    if not leaves:
+        return jnp.bool_(False)
+    return jnp.any(jnp.stack(leaves))

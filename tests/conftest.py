@@ -1,0 +1,47 @@
+import os
+import sys
+
+# tests see the real single CPU device (the 512-device override lives
+# ONLY in repro.launch.dryrun); keep math in f32 for tight tolerances.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def np_rng():
+    return np.random.default_rng(0)
+
+
+def make_quadratic_problem(n_workers: int = 4, dim: int = 3, seed: int = 0):
+    """Tiny trilevel problem used across core tests."""
+    import jax.numpy as jnp
+    from repro.core.types import TrilevelProblem
+
+    key = jax.random.PRNGKey(seed)
+    data = {"A": jax.random.normal(key, (n_workers, dim, dim)) * 0.3,
+            "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                   (n_workers, dim))}
+
+    def f1(d, x1, x2, x3):
+        return jnp.sum((x1 - d["A"] @ x3 - d["b"]) ** 2)
+
+    def f2(d, x1, x2, x3):
+        return jnp.sum((x2 + x3) ** 2) + 0.1 * jnp.sum(x2 ** 2)
+
+    def f3(d, x1, x2, x3):
+        return jnp.sum((x3 - x1) ** 2) + 0.1 * jnp.sum((x3 - x2) ** 2)
+
+    return TrilevelProblem(
+        f1=f1, f2=f2, f3=f3, data=data, n_workers=n_workers,
+        x1_init=jnp.zeros(dim), x2_init=jnp.zeros(dim),
+        x3_init=jnp.zeros(dim))

@@ -1,0 +1,57 @@
+"""The paper's two applications + baselines (short CPU runs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.baselines import run_adbo, run_fednest
+from repro.apps.robust_hpo import default_hyper, make_robust_hpo_problem
+from repro.core import StragglerConfig, run
+
+
+@pytest.fixture(scope="module")
+def task():
+    return make_robust_hpo_problem("diabetes", n_workers=4, seed=0)
+
+
+def test_robust_hpo_afto_learns(task):
+    hyper = default_hyper(task, 4, 3, 10)
+    cfg = StragglerConfig(n_workers=4, s_active=3, tau=10,
+                          n_stragglers=1, seed=0)
+
+    def metrics(state):
+        from repro.models.simple import mlp_apply
+        def per(d_j, x3_j):
+            pred = mlp_apply(x3_j, d_j["xval"])[:, 0]
+            return jnp.mean((pred - d_j["yval"]) ** 2)
+        return {"val_mse": jnp.mean(
+            jax.vmap(per)(task.problem.data, state.X3))}
+
+    res = run(task.problem, hyper, scheduler_cfg=cfg, n_iterations=60,
+              metrics_fn=metrics, metrics_every=20)
+    mses = res.history["val_mse"]
+    assert mses[-1] < mses[0] * 0.7
+    assert res.history["gap_sq"][-1] < res.history["gap_sq"][0]
+
+
+def test_fednest_baseline_runs(task):
+    out = run_fednest(task, n_iterations=30)
+    assert np.isfinite(out["history"]["val_mse"][-1])
+    assert out["history"]["val_mse"][-1] < out["history"]["val_mse"][0] * 2
+
+
+def test_adbo_baseline_runs(task):
+    out = run_adbo(task, n_iterations=30)
+    assert np.isfinite(out["history"]["val_mse"][-1])
+
+
+def test_domain_adaptation_short():
+    from repro.apps.domain_adaptation import (default_hyper as dh,
+                                              make_domain_adaptation_problem)
+    t = make_domain_adaptation_problem(2, n_pretrain_per=8,
+                                       n_finetune_per=8, seed=0)
+    hyper = dh(2, 2, 5, t_pre=50, k_inner=1, p_max=2)
+    res = run(t.problem, hyper, n_iterations=8, metrics_every=4,
+              metrics_fn=lambda s: t.test_metrics(
+                  jax.tree.map(lambda x: jnp.mean(x, 0), s.X2)))
+    assert np.isfinite(res.history["test_loss"][-1])

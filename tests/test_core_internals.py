@@ -1,0 +1,107 @@
+"""Unit tests for the core math internals (Lagrangians, inner rollouts,
+stationarity algebra)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_quadratic_problem
+from repro.core import afto as afto_lib
+from repro.core import cuts as cuts_lib
+from repro.core import inner as inner_lib
+from repro.core import lagrangian as lag
+from repro.core.types import Hyper, InnerState2, InnerState3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    prob = make_quadratic_problem()
+    hyper = Hyper(n_workers=4, s_active=3, tau=5, k_inner=4, p_max=4,
+                  t_pre=5, t1=100, eta_x=0.05, eta_z=0.05, d1=3)
+    state = afto_lib.init_state(prob, hyper)
+    return prob, hyper, state
+
+
+def test_l_p3_consensus_penalty(setup):
+    """L_p3 grows quadratically with the consensus violation."""
+    prob, hyper, state = setup
+    st0 = state.inner3
+    base = lag.l_p3(prob, hyper, state.z1, state.z2, st0)
+    shifted = InnerState3(
+        x3=jax.tree.map(lambda x: x + 1.0, st0.x3),
+        z3=st0.z3, phi=st0.phi)
+    moved = lag.l_p3(prob, hyper, state.z1, state.z2, shifted)
+    # kappa3/2 * N * ||1||^2 = 0.5*0.5*4*3 = 3 extra penalty, plus f3 shift
+    assert float(moved) > float(base)
+
+
+def test_rollout3_reduces_inner_objective(setup):
+    """K rounds of Eq. 5-7 should reduce the level-3 Lagrangian."""
+    prob, hyper, state = setup
+    st0 = InnerState3(
+        x3=jax.tree.map(lambda x: x + 1.0, state.inner3.x3),
+        z3=state.inner3.z3, phi=state.inner3.phi)
+    before = lag.l_p3(prob, hyper, state.z1, state.z2, st0)
+    stK = inner_lib.rollout3(prob, hyper, state.z1, state.z2, st0)
+    after = lag.l_p3(prob, hyper, state.z1, state.z2,
+                     InnerState3(x3=stK.x3, z3=stK.z3, phi=st0.phi))
+    assert float(after) < float(before)
+
+
+def test_h_i_zero_at_rollout_fixpoint(setup):
+    """h_I(v) evaluated AT the rollout output is ~0 by construction."""
+    prob, hyper, state = setup
+    est = inner_lib.rollout3(prob, hyper, state.z1, state.z2,
+                             state.inner3)
+    h = inner_lib.h_i(prob, hyper, est.x3, est.z3, state.z1, state.z2,
+                      state.inner3)
+    assert float(h) < 1e-8
+
+
+def test_h_i_gradients_flow_to_z(setup):
+    """The mu-cut coefficients need dh/dz1, dh/dz2 through the rollout
+    (second-order); they must be nonzero for a coupled problem."""
+    prob, hyper, state = setup
+    X3 = jax.tree.map(lambda x: x + 0.5, state.X3)
+    g = jax.grad(
+        lambda z1, z2: inner_lib.h_i(prob, hyper, X3, state.z3, z1, z2,
+                                     state.inner3),
+        argnums=(0, 1))(jnp.ones(3) * 0.3, state.z2)
+    assert float(jnp.sum(jnp.abs(g[0]))) > 0.0
+
+
+def test_l_p_hat_regularization_decreases(setup):
+    """c1/c2 decay as (t+1)^{-1/4} down to the floor."""
+    prob, hyper, state = setup
+    c_early = float(hyper.c1(0))
+    c_late = float(hyper.c1(10_000))
+    assert c_early > c_late >= hyper.c1_floor
+
+
+def test_afto_step_inactive_workers_frozen(setup):
+    prob, hyper, state = setup
+    mask = jnp.array([1.0, 0.0, 1.0, 0.0])
+    new = afto_lib.afto_step(prob, hyper, state, mask)
+    for a, b in zip(jax.tree.leaves(state.X1), jax.tree.leaves(new.X1)):
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+        np.testing.assert_array_equal(np.asarray(a[3]), np.asarray(b[3]))
+
+
+def test_cut_refresh_adds_both_layers(setup):
+    prob, hyper, state = setup
+    new = afto_lib.cut_refresh(prob, hyper, state)
+    assert float(cuts_lib.n_active(new.cuts_i)) >= 1
+    assert float(cuts_lib.n_active(new.cuts_ii)) >= 1
+    # cut offsets are finite
+    assert np.isfinite(np.asarray(new.cuts_i.c)).all()
+
+
+def test_lambda_projection_bounds(setup):
+    """lambda must stay in [0, sqrt(alpha4)] through ascent steps."""
+    prob, hyper, state = setup
+    state = afto_lib.cut_refresh(prob, hyper, state)
+    mask = jnp.ones(4)
+    for _ in range(5):
+        state = afto_lib.afto_step(prob, hyper, state, mask)
+    lam = np.asarray(state.lam)
+    assert (lam >= 0).all() and (lam <= np.sqrt(hyper.alpha4) + 1e-6).all()

@@ -1,0 +1,103 @@
+"""mu-cut construction, polytope maintenance, Lagrangian algebra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cuts as cuts_lib
+from repro.core.weakly_convex import estimate_mu, first_order_gap
+from repro.utils.tree import tree_dot
+
+
+def _tpl(d=3):
+    return jnp.zeros((d,))
+
+
+def test_empty_cutset_inactive():
+    cs = cuts_lib.empty_cutset(4, 2, _tpl(), _tpl(), _tpl())
+    val = cuts_lib.eval_cuts(cs, jnp.ones(3), jnp.ones(3), jnp.ones(3))
+    np.testing.assert_array_equal(np.asarray(val), np.zeros(4))
+
+
+def test_add_eval_drop_roundtrip():
+    cs = cuts_lib.empty_cutset(3, 2, _tpl(), _tpl(), _tpl())
+    coeffs = {"a1": jnp.array([1.0, 0, 0]), "a2": jnp.zeros(3),
+              "a3": jnp.zeros(3)}
+    cs = cuts_lib.add_cut(cs, coeffs, 0.5, t=0)
+    assert float(cuts_lib.n_active(cs)) == 1
+    z1 = jnp.array([2.0, 0, 0])
+    val = cuts_lib.eval_cuts(cs, z1, jnp.zeros(3), jnp.zeros(3))
+    # <a1,z1> - c = 2 - 0.5
+    np.testing.assert_allclose(np.asarray(val)[np.argmax(np.abs(val))],
+                               1.5, rtol=1e-6)
+    cs = cuts_lib.drop_inactive(cs, jnp.zeros(3))
+    assert float(cuts_lib.n_active(cs)) == 0
+
+
+def test_add_evicts_oldest_when_full():
+    cs = cuts_lib.empty_cutset(2, 1, _tpl(1), _tpl(1), _tpl(1))
+    for t in range(3):
+        coeffs = {"a1": jnp.array([float(t + 1)])}
+        cs = cuts_lib.add_cut(cs, coeffs, 0.0, t=t)
+    ages = np.asarray(cs.age)
+    assert set(ages.tolist()) == {1, 2}       # slot with age 0 evicted
+
+
+def test_mu_cut_validity_on_weakly_convex_fn():
+    """The linearization c-bound must contain every feasible point
+    (Prop. 3.3): for h mu-weakly convex and any point with h(v) <= eps,
+    <g, v> <= c must hold."""
+    # h(v) = ||v||^2 - 0.25||v||^2 via cos perturbation: curvature >= -mu
+    def h(v):
+        return jnp.sum(v ** 2) + 0.5 * jnp.sum(jnp.cos(2.0 * v))
+
+    mu = 2.0 * 0.5 * 2.0  # |d2/dv2 of 0.5*cos(2v)| <= 2
+    key = jax.random.PRNGKey(0)
+    alpha = 4.0   # bound ||v||^2 <= alpha
+    eps = float(h(jnp.zeros(3))) + 0.3
+
+    v0 = jax.random.normal(key, (3,)) * 0.5
+    g = jax.grad(h)(v0)
+    c = eps + mu * (alpha + float(jnp.sum(v0 ** 2))) - float(h(v0)) \
+        + float(g @ v0)
+
+    # sample feasible points within the alpha-ball; none may violate
+    for i in range(200):
+        v = jax.random.normal(jax.random.fold_in(key, i), (3,))
+        v = v / jnp.maximum(1.0, jnp.linalg.norm(v) / 2.0)  # ||v||<=2
+        if float(h(v)) <= eps:
+            assert float(g @ v) <= c + 1e-4
+
+
+def test_first_order_gap_nonneg_for_quadratic():
+    fn = lambda x: jnp.sum(x ** 2) - 0.3 * jnp.sum(x) ** 2
+    # hessian 2I - 0.6 * 11^T: min eig = 2 - 0.6*d for d=3 -> -mu = 0.2-2
+    mu = 2.0
+    key = jax.random.PRNGKey(1)
+    for i in range(50):
+        x = jax.random.normal(jax.random.fold_in(key, i), (3,))
+        xr = jax.random.normal(jax.random.fold_in(key, 1000 + i), (3,))
+        assert float(first_order_gap(fn, x, xr, mu)) >= -1e-5
+
+
+def test_estimate_mu_convex_is_zero():
+    fn = lambda x: jnp.sum(x ** 2)
+    mu = estimate_mu(fn, jnp.zeros(4), jax.random.PRNGKey(0))
+    assert float(mu) <= 1e-6
+
+
+def test_estimate_mu_detects_concavity():
+    fn = lambda x: -jnp.sum(x ** 2)
+    mu = estimate_mu(fn, jnp.zeros(4), jax.random.PRNGKey(0))
+    assert abs(float(mu) - 2.0) < 0.2
+
+
+def test_cut_weighted_coeff_matches_manual():
+    cs = cuts_lib.empty_cutset(3, 2, _tpl(), _tpl(), _tpl())
+    cs = cuts_lib.add_cut(cs, {"a1": jnp.array([1.0, 2, 3])}, 0.0, 0)
+    cs = cuts_lib.add_cut(cs, {"a1": jnp.array([0.0, 1, 0])}, 0.0, 1)
+    w = jnp.array([0.5, 2.0, 7.0])
+    got = cuts_lib.cut_weighted_coeff(cs, w, "a1")
+    want = 0.5 * jnp.array([1.0, 2, 3]) + 2.0 * jnp.array([0.0, 1, 0])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6)

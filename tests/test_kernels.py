@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# cut_eval
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p,d,block_d", [
+    (1, 128, 128), (5, 3000, 1024), (8, 2048, 2048), (13, 5000, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cut_eval_sweep(p, d, block_d, dtype):
+    key = jax.random.PRNGKey(p * 7 + d)
+    ks = jax.random.split(key, 4)
+    a = (jax.random.normal(ks[0], (p, d)) * 0.1).astype(dtype)
+    v = jax.random.normal(ks[1], (d,)).astype(dtype)
+    c = jax.random.normal(ks[2], (p,))
+    act = (jax.random.uniform(ks[3], (p,)) > 0.3).astype(jnp.float32)
+    got = ops.cut_eval(a, v, c, act, block_d=block_d)
+    want = ref.cut_eval_ref(a, v, c, act)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,hkv,hd,blk", [
+    (64, 4, 2, 32, 16), (48, 4, 4, 64, 16), (128, 8, 2, 32, 32),
+])
+@pytest.mark.parametrize("window", [0, 24])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, h, hkv, hd, blk, window, dtype):
+    b = 2
+    key = jax.random.PRNGKey(s + h + window)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd)).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=blk, block_k=blk)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-3 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_unaligned_seq():
+    """S not a multiple of the block: the wrapper pads causally."""
+    b, s, h, hd = 1, 37, 2, 16
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    got = ops.flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# mlstm chunk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("l,hd", [(8, 8), (16, 16), (32, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mlstm_chunk_sweep(l, hd, dtype):
+    b, h = 2, 3
+    key = jax.random.PRNGKey(l + hd)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, h, l, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, h, l, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, h, l, hd)).astype(dtype)
+    li = (jax.random.normal(ks[3], (b, h, l, 1)) * 0.5)
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, h, l, 1)) + 2.0)
+    c0 = jnp.zeros((b, h, hd, hd))
+    n0 = jnp.zeros((b, h, 1, hd))
+    m0 = jnp.full((b, h, 1, 1), -1e9)
+    got = ops.mlstm_chunk(q, k, v, li, lf, c0, n0, m0)
+    want = ref.mlstm_chunk_ref(q, k, v, li, lf, c0, n0, m0)
+    tol = 6e-3 if dtype == jnp.float32 else 6e-2
+    for g, w, name in zip(got, want, ["y", "c", "n", "m"]):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=tol, atol=tol, err_msg=name)
+
+
+def test_mlstm_sequence_carries_state():
+    """Two chunks through the kernel == one pass of the jnp oracle over
+    the full sequence (state carried across chunk boundary)."""
+    from repro.models.xlstm import mlstm_chunk_body, init_mlstm_state
+    b, h, s, hd = 1, 2, 32, 8
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    li = jax.random.normal(ks[3], (b, s, h)) * 0.5
+    lf = jnp.asarray(jax.nn.log_sigmoid(
+        jax.random.normal(ks[4], (b, s, h)) + 2.0))
+    state = init_mlstm_state(b, h, hd)
+    y_kernel, st_kernel = ops.mlstm_sequence(q, k, v, li, lf, state,
+                                             chunk=16)
+    # oracle: full-sequence single chunk
+    y_ref, st_ref = mlstm_chunk_body(q, k, v, li, lf, state)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(st_kernel["c"]),
+                               np.asarray(st_ref["c"]),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,41 @@
+"""Smoke tests for the CLI drivers (train/serve) as subprocesses."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = dict(os.environ)
+ENV["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(args, timeout=900):
+    return subprocess.run([sys.executable, "-m"] + args, env=ENV,
+                          capture_output=True, text=True, timeout=timeout,
+                          cwd=os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_train_afto_driver(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "xlstm-125m", "--reduced",
+                "--mode", "afto", "--steps", "8", "--workers", "2",
+                "--batch", "1", "--seq", "33", "--t-pre", "4",
+                "--log-every", "4",
+                "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "8"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert '"loss"' in out.stdout
+    assert any(d.startswith("step_") for d in os.listdir(tmp_path / "ck"))
+
+
+def test_train_plain_driver():
+    out = _run(["repro.launch.train", "--arch", "llama3-8b", "--reduced",
+                "--mode", "plain", "--steps", "6", "--workers", "2",
+                "--batch", "1", "--seq", "33", "--log-every", "3"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert '"loss"' in out.stdout
+
+
+def test_serve_driver():
+    out = _run(["repro.launch.serve", "--arch", "llama3-8b", "--reduced",
+                "--batch", "2", "--prompt-len", "16", "--gen", "8"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "tok/s" in out.stdout

@@ -1,0 +1,150 @@
+"""Hypothesis property tests for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cuts as cuts_lib
+from repro.core.scheduler import StragglerConfig, StragglerScheduler
+from repro.fed.sketch import sketch, sketch_dot, unsketch
+
+_settings = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# mu-cut validity (Props. 3.3/3.4): for a mu-weakly-convex h, the cut
+# generated at any point never excludes any feasible point in the ball.
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000), curv=st.floats(0.1, 2.0),
+       dim=st.integers(2, 6))
+@settings(**_settings)
+def test_mu_cut_never_excludes_feasible(seed, curv, dim):
+    def h(v):
+        return jnp.sum(v ** 2) + curv * jnp.sum(jnp.cos(2.0 * v)) / 2.0
+
+    mu = 2.0 * curv  # second derivative of curv/2*cos(2v) is >= -2curv
+    key = jax.random.PRNGKey(seed)
+    radius = 2.0
+    alpha = radius ** 2
+    eps = float(h(jnp.zeros(dim))) + 0.2
+
+    v0 = jax.random.normal(key, (dim,)) * 0.7
+    g = jax.grad(h)(v0)
+    c = eps + mu * (alpha + float(jnp.sum(v0 ** 2))) - float(h(v0)) \
+        + float(g @ v0)
+
+    for i in range(50):
+        v = jax.random.normal(jax.random.fold_in(key, i), (dim,))
+        n = jnp.linalg.norm(v)
+        v = jnp.where(n > radius, v * (radius / n), v)
+        if float(h(v)) <= eps:
+            assert float(g @ v) <= c + 1e-4
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**_settings)
+def test_mu_zero_reduces_to_convex_cut(seed):
+    """mu=0 on a convex h gives the classical (tight) cutting plane."""
+    def h(v):
+        return jnp.sum(v ** 2)
+
+    key = jax.random.PRNGKey(seed)
+    v0 = jax.random.normal(key, (4,))
+    g = jax.grad(h)(v0)
+    eps = 0.5
+    c = eps + 0.0 - float(h(v0)) + float(g @ v0)
+    # the cut must be tight at points where h == eps along the gradient ray
+    # and valid for all h(v) <= eps
+    for i in range(50):
+        v = jax.random.normal(jax.random.fold_in(key, i), (4,)) * 0.4
+        if float(h(v)) <= eps:
+            assert float(g @ v) <= c + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# polytope bookkeeping invariants
+# ---------------------------------------------------------------------------
+
+@given(n_adds=st.integers(1, 10), p_max=st.integers(1, 5),
+       seed=st.integers(0, 1000))
+@settings(**_settings)
+def test_cutset_capacity_invariant(n_adds, p_max, seed):
+    key = jax.random.PRNGKey(seed)
+    tpl = jnp.zeros((2,))
+    cs = cuts_lib.empty_cutset(p_max, 2, tpl, tpl, tpl)
+    for t in range(n_adds):
+        a = jax.random.normal(jax.random.fold_in(key, t), (2,))
+        cs = cuts_lib.add_cut(cs, {"a1": a}, 0.0, t)
+    n_act = float(cuts_lib.n_active(cs))
+    assert n_act == min(n_adds, p_max)
+    # ages of active slots are the most recent adds
+    ages = np.asarray(cs.age)[np.asarray(cs.active) > 0]
+    assert set(ages.tolist()) == set(range(max(0, n_adds - p_max), n_adds))
+
+
+@given(seed=st.integers(0, 1000))
+@settings(**_settings)
+def test_drop_inactive_only_drops_zero_multipliers(seed):
+    key = jax.random.PRNGKey(seed)
+    tpl = jnp.zeros((2,))
+    cs = cuts_lib.empty_cutset(4, 2, tpl, tpl, tpl)
+    for t in range(4):
+        cs = cuts_lib.add_cut(
+            cs, {"a1": jax.random.normal(jax.random.fold_in(key, t),
+                                         (2,))}, 0.0, t)
+    mult = jnp.array([0.0, 1.0, 0.0, 2.0])
+    cs2 = cuts_lib.drop_inactive(cs, mult)
+    np.testing.assert_array_equal(np.asarray(cs2.active),
+                                  np.array([0.0, 1.0, 0.0, 1.0]))
+
+
+# ---------------------------------------------------------------------------
+# scheduler: staleness bound + S-arrival rule
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(2, 12), s=st.integers(1, 12), tau=st.integers(1, 8),
+       seed=st.integers(0, 100))
+@settings(**_settings)
+def test_scheduler_staleness_bound(n, s, tau, seed):
+    s = min(s, n)
+    sched = StragglerScheduler(StragglerConfig(
+        n_workers=n, s_active=s, tau=tau, n_stragglers=min(2, n - 1),
+        straggler_slowdown=25.0, seed=seed))
+    times = []
+    for _ in range(50):
+        mask, t = sched.next_active()
+        assert mask.sum() >= min(s, n)
+        assert sched.max_staleness() <= tau
+        times.append(t)
+    assert all(b >= a for a, b in zip(times, times[1:]))  # clock monotone
+
+
+# ---------------------------------------------------------------------------
+# count-sketch: adjoint identity + unbiasedness
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000), r=st.sampled_from([32, 64, 128]),
+       n=st.integers(10, 200))
+@settings(**_settings)
+def test_sketch_adjoint_identity(seed, r, n):
+    key = jax.random.PRNGKey(seed)
+    v = {"x": jax.random.normal(key, (n,))}
+    w = {"x": jax.random.normal(jax.random.fold_in(key, 1), (n,))}
+    sv, sw = sketch(v, seed, r), sketch(w, seed, r)
+    lifted = unsketch(w, sv, seed)
+    lhs = float(jnp.sum(lifted["x"] * w["x"]))
+    rhs = float(sketch_dot(sv, sw))
+    assert abs(lhs - rhs) <= 1e-3 * max(1.0, abs(rhs))
+
+
+def test_sketch_dot_unbiased():
+    """E[<S(a),S(b)>] = <a,b> over hash seeds."""
+    key = jax.random.PRNGKey(0)
+    a = {"x": jax.random.normal(key, (300,))}
+    b = {"x": jax.random.normal(jax.random.fold_in(key, 1), (300,))}
+    exact = float(jnp.sum(a["x"] * b["x"]))
+    ests = [float(sketch_dot(sketch(a, s, 128), sketch(b, s, 128)))
+            for s in range(40)]
+    assert abs(np.mean(ests) - exact) < 4 * np.std(ests) / np.sqrt(40) + 1.0

@@ -1,0 +1,72 @@
+"""Roofline parser + analytic cost model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import roofline as rl
+from repro.models.config import active_param_count, param_count, step_flops
+
+
+def test_shape_bytes_parser():
+    assert rl._shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert rl._shape_bytes("bf16[4096]") == 4096 * 2
+    assert rl._shape_bytes("(f32[8], bf16[8])") == 8 * 4 + 8 * 2
+    assert rl._shape_bytes("pred[]") == 0 or rl._shape_bytes("pred[]") == 1
+
+
+def test_collective_bytes_from_real_hlo():
+    def f(x):
+        return jnp.sum(jnp.tanh(x @ x.T))
+
+    # trivially no collectives on one device
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((32, 32), jnp.float32)) \
+        .compile()
+    out = rl.collective_bytes(c.as_text())
+    assert out["count"] == 0
+
+
+def test_param_count_matches_model_names():
+    # xlstm-125m omitted: the assigned spec fixes d_ff=0 (no FFN blocks)
+    # which yields ~67M params for 12L/768d — the 125M name assumes the
+    # paper's projection/FFN factors the assignment's d_ff=0 excludes.
+    expect = {"llama3-405b": 405e9, "llama3-8b": 8e9, "yi-34b": 34e9,
+              "mixtral-8x22b": 141e9, "kimi-k2-1t-a32b": 1.0e12,
+              "jamba-v0.1-52b": 52e9, "gemma3-12b": 12e9}
+    for name, n in expect.items():
+        got = param_count(get_config(name))["total"]
+        assert abs(got - n) / n < 0.15, (name, got, n)
+
+
+def test_active_params_moe():
+    cfg = get_config("kimi-k2-1t-a32b")
+    active = active_param_count(cfg)
+    assert abs(active - 32e9) / 32e9 < 0.25   # "a32b"
+    assert active < param_count(cfg)["total"] / 10
+
+
+def test_step_flops_scaling():
+    cfg = get_config("llama3-8b")
+    f1 = step_flops(cfg, 1, 1024, training=False)
+    f2 = step_flops(cfg, 2, 1024, training=False)
+    assert abs(f2["total"] / f1["total"] - 2.0) < 0.05
+    ftr = step_flops(cfg, 1, 1024, training=True)
+    assert abs(ftr["total"] / f1["total"] - 3.0) < 0.01
+
+
+def test_step_flops_6nd_consistency():
+    """fwd flops ~ 2*N*D for a dense arch at short seq."""
+    cfg = get_config("llama3-8b")
+    tokens = 4 * 1024
+    f = step_flops(cfg, 4, 1024, training=False)
+    n = active_param_count(cfg)
+    ratio = f["fwd_total"] / (2.0 * n * tokens)
+    assert 0.9 < ratio < 1.3, ratio
+
+
+def test_decode_flops_much_smaller():
+    cfg = get_config("llama3-8b")
+    dec = step_flops(cfg, 8, 1, training=False, kv_len=32768)
+    pre = step_flops(cfg, 8, 32768, training=False)
+    assert dec["total"] < pre["total"] / 1000
