@@ -1,0 +1,117 @@
+"""Engine benchmark: eager host loop vs compiled-scan trajectory at
+quickstart scale (the 4-worker quadratic trilevel problem, 200 master
+iterations).  Emits the machine-readable perf record consumed by
+``benchmarks/run.py --json`` so future PRs can diff
+``{iters_per_sec, sim_time, gap_sq}`` across engines."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Hyper, StragglerConfig, StragglerScheduler, run
+from repro.core.types import TrilevelProblem
+
+N_WORKERS, DIM = 4, 3
+
+
+def quickstart_problem(seed: int = 0) -> TrilevelProblem:
+    """The examples/quickstart.py problem (kept in sync by value, not
+    import, so the benchmark has no dependency on the examples tree)."""
+    key = jax.random.PRNGKey(seed)
+    data = {"A": jax.random.normal(key, (N_WORKERS, DIM, DIM)) * 0.3,
+            "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                   (N_WORKERS, DIM))}
+
+    def f1(d, x1, x2, x3):
+        return jnp.sum((x1 - d["A"] @ x3 - d["b"]) ** 2)
+
+    def f2(d, x1, x2, x3):
+        return jnp.sum((x2 + x3) ** 2) + 0.1 * jnp.sum(x2 ** 2)
+
+    def f3(d, x1, x2, x3):
+        return jnp.sum((x3 - x1) ** 2) + 0.1 * jnp.sum((x3 - x2) ** 2)
+
+    return TrilevelProblem(
+        f1=f1, f2=f2, f3=f3, data=data, n_workers=N_WORKERS,
+        x1_init=jnp.zeros(DIM), x2_init=jnp.zeros(DIM),
+        x3_init=jnp.zeros(DIM))
+
+
+def quickstart_setup(n_iterations: int):
+    problem = quickstart_problem()
+    hyper = Hyper(n_workers=N_WORKERS, s_active=3, tau=5, k_inner=3,
+                  p_max=6, t_pre=5, t1=100, eta_x=0.05, eta_z=0.05, d1=DIM)
+    cfg = StragglerConfig(n_workers=N_WORKERS, s_active=3, tau=5,
+                          n_stragglers=1, straggler_slowdown=5.0, seed=0)
+    schedule = StragglerScheduler(cfg).precompute(n_iterations)
+    return problem, hyper, cfg, schedule
+
+
+def _timed_run(problem, hyper, cfg, schedule, mode: str):
+    n_iterations = schedule.n_iterations
+    t0 = time.perf_counter()
+    res = run(problem, hyper, scheduler_cfg=cfg, n_iterations=n_iterations,
+              metrics_every=max(1, n_iterations // 10), mode=mode,
+              schedule=schedule)
+    jax.block_until_ready(res.state)
+    wall = time.perf_counter() - t0
+    return res, wall
+
+
+def record(n_iterations: int = 200) -> dict:
+    """The perf record: eager vs cold/warm scan on the same schedule.
+
+    eager and scan run bit-identical trajectories (same precomputed
+    schedule), so sim_time/gap_sq must agree; iters_per_sec is the
+    engine difference.  scan_warm is a second run reusing the cached
+    compiled trajectory — the steady-state cost benchmarks and sweeps
+    actually pay.
+    """
+    problem, hyper, cfg, schedule = quickstart_setup(n_iterations)
+    out = {"n_iterations": n_iterations}
+    res_eager, wall = _timed_run(problem, hyper, cfg, schedule, "eager")
+    out["eager"] = _entry(res_eager, wall, n_iterations)
+    res_cold, wall = _timed_run(problem, hyper, cfg, schedule, "scan")
+    out["scan_cold"] = _entry(res_cold, wall, n_iterations)
+    res_warm, wall = _timed_run(problem, hyper, cfg, schedule, "scan")
+    out["scan_warm"] = _entry(res_warm, wall, n_iterations)
+    out["speedup_warm"] = out["eager"]["wall_s"] / out["scan_warm"]["wall_s"]
+    out["speedup_cold"] = out["eager"]["wall_s"] / out["scan_cold"]["wall_s"]
+    out["final_state_allclose"] = bool(all(
+        jnp.allclose(a, b, rtol=1e-5, atol=1e-6)
+        for a, b in zip(jax.tree.leaves(res_eager.state),
+                        jax.tree.leaves(res_warm.state))))
+    return out
+
+
+def _entry(res, wall: float, n_iterations: int) -> dict:
+    return {"wall_s": wall,
+            "iters_per_sec": n_iterations / wall,
+            "sim_time": float(res.history["sim_time"][-1]),
+            "gap_sq": float(res.history["gap_sq"][-1])}
+
+
+def main(n_iterations: int = 200, record_out: dict = None):
+    """record_out, when given, receives the perf record so callers (e.g.
+    ``benchmarks/run.py --json``) don't have to re-measure."""
+    rec = record(n_iterations)
+    if record_out is not None:
+        record_out.update(rec)
+    rows = []
+    for key in ("eager", "scan_cold", "scan_warm"):
+        e = rec[key]
+        rows.append((f"engine_{key}", e["wall_s"] * 1e6 / n_iterations,
+                     f"iters_per_sec={e['iters_per_sec']:.1f};"
+                     f"gap_sq={e['gap_sq']:.5f}"))
+    rows.append(("engine_speedup", 0.0,
+                 f"warm={rec['speedup_warm']:.1f}x;"
+                 f"cold={rec['speedup_cold']:.1f}x;"
+                 f"allclose={rec['final_state_allclose']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.1f},{derived}")

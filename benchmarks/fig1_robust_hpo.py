@@ -18,7 +18,8 @@ SETTINGS = {
 }
 
 
-def run_dataset(dataset: str, n_iterations: int = 120, seed: int = 0):
+def run_dataset(dataset: str, n_iterations: int = 120, seed: int = 0,
+                engine: str = "scan"):
     n, s, stragglers, tau = SETTINGS[dataset]
     task = make_robust_hpo_problem(dataset, n_workers=n, seed=seed)
 
@@ -35,7 +36,7 @@ def run_dataset(dataset: str, n_iterations: int = 120, seed: int = 0):
                               straggler_slowdown=5.0, seed=seed)
         res = run(task.problem, hyper, scheduler_cfg=cfg,
                   n_iterations=n_iterations, metrics_fn=metrics,
-                  metrics_every=10)
+                  metrics_every=10, mode=engine)
         h = res.history
         for i in range(len(h["t"])):
             rows.append({"dataset": dataset, "algo": algo,
@@ -62,13 +63,13 @@ def speedup(rows, dataset: str, target_frac: float = 0.7):
     return 1.0 - out["AFTO"] / out["SFTO"]
 
 
-def main(n_iterations: int = 120, datasets=None):
+def main(n_iterations: int = 120, datasets=None, engine: str = "scan"):
     import time
     results = []
     datasets = datasets or list(SETTINGS)
     for ds in datasets:
         t0 = time.perf_counter()
-        rows = run_dataset(ds, n_iterations=n_iterations)
+        rows = run_dataset(ds, n_iterations=n_iterations, engine=engine)
         dt = time.perf_counter() - t0
         acc = speedup(rows, ds)
         final = {a: [r for r in rows if r["algo"] == a][-1]["mse_noisy"]

@@ -18,7 +18,8 @@ SETTINGS = {
 }
 
 
-def run_direction(direction: str, n_iterations: int = 40, seed: int = 0):
+def run_direction(direction: str, n_iterations: int = 40, seed: int = 0,
+                  engine: str = "scan"):
     n, s, stragglers, tau = SETTINGS[direction]
     domain = "svhn" if direction == "svhn_pretrain" else "mnist"
     task = make_domain_adaptation_problem(
@@ -38,7 +39,7 @@ def run_direction(direction: str, n_iterations: int = 40, seed: int = 0):
                               straggler_slowdown=5.0, seed=seed)
         res = run(task.problem, hyper, scheduler_cfg=cfg,
                   n_iterations=n_iterations, metrics_fn=metrics,
-                  metrics_every=max(2, n_iterations // 8))
+                  metrics_every=max(2, n_iterations // 8), mode=engine)
         h = res.history
         for i in range(len(h["t"])):
             rows.append({"direction": direction, "algo": algo,
@@ -48,12 +49,12 @@ def run_direction(direction: str, n_iterations: int = 40, seed: int = 0):
     return rows
 
 
-def main(n_iterations: int = 40, directions=None):
+def main(n_iterations: int = 40, directions=None, engine: str = "scan"):
     import time
     out = []
     for d in (directions or list(SETTINGS)):
         t0 = time.perf_counter()
-        rows = run_direction(d, n_iterations)
+        rows = run_direction(d, n_iterations, engine=engine)
         dt = time.perf_counter() - t0
         # sim-time to reach the worst algo's final loss
         finals = {a: [r for r in rows if r["algo"] == a][-1]

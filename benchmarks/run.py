@@ -1,12 +1,16 @@
 """Benchmark harness (deliverable d): one entry per paper table/figure
 plus the framework-level benchmarks.  Prints ``name,us_per_call,derived``
-CSV.  ``--fast`` trims iteration counts for CI-speed runs.
+CSV.  ``--fast`` trims iteration counts for CI-speed runs.  ``--json
+out.json`` additionally writes the machine-readable engine perf record
+(eager vs scan ``{iters_per_sec, sim_time, gap_sq}``) for trajectory
+tracking across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig1,...]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -16,16 +20,23 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,table2,"
-                         "kernels,comm,sketch,roofline")
+                         "kernels,comm,sketch,roofline,engine")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write the engine perf record (eager vs scan) "
+                         "to this path")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (bench_kernels, comm_complexity,
+    from benchmarks import (bench_kernels, comm_complexity, engine_speed,
                             fig1_robust_hpo, fig2_domain_adapt,
                             rate_thm45, roofline_table, sketch_fidelity,
                             table2_baselines)
 
+    engine_iters = 100 if args.fast else 200
+    engine_record: dict = {}
     suites = {
+        "engine": lambda: engine_speed.main(
+            n_iterations=engine_iters, record_out=engine_record),
         "fig1": lambda: fig1_robust_hpo.main(
             n_iterations=60 if args.fast else 120,
             datasets=("diabetes", "boston") if args.fast else None),
@@ -56,6 +67,19 @@ def main() -> None:
         except Exception as e:
             traceback.print_exc()
             print(f"{key},nan,ERROR:{e!r}", flush=True)
+            failed += 1
+
+    if args.json:
+        try:
+            # reuse the record from the engine suite if it just ran
+            rec = engine_record or engine_speed.record(
+                n_iterations=engine_iters)
+            with open(args.json, "w") as f:
+                json.dump(rec, f, indent=2)
+            print(f"wrote engine perf record to {args.json}", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"json,nan,ERROR:{e!r}", flush=True)
             failed += 1
     sys.exit(1 if failed else 0)
 

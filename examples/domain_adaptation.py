@@ -27,7 +27,7 @@ def metrics(state):
 
 
 res = run(task.problem, hyper, scheduler_cfg=sched, n_iterations=30,
-          metrics_fn=metrics, metrics_every=10)
+          metrics_fn=metrics, metrics_every=10, mode="scan")
 h = res.history
 print("iter  sim_time  test_acc  test_loss")
 for i in range(len(h["t"])):

@@ -41,8 +41,11 @@ hyper = Hyper(n_workers=N, s_active=3, tau=5, k_inner=3, p_max=6,
 sched = StragglerConfig(n_workers=N, s_active=3, tau=5, n_stragglers=1,
                         straggler_slowdown=5.0, seed=0)
 
+# mode="scan" (the default) precomputes the seeded arrival schedule and
+# compiles the whole 100-iteration trajectory into one lax.scan dispatch;
+# mode="eager" recovers the per-iteration host loop.
 result = run(problem, hyper, scheduler_cfg=sched, n_iterations=100,
-             metrics_every=20)
+             metrics_every=20, mode="scan")
 
 print("iter  sim_time  ||grad G||^2  cuts(I/II)  max_staleness")
 h = result.history

@@ -30,8 +30,10 @@ for algo, s_active in (("AFTO", S), ("SFTO", N)):
     sched = StragglerConfig(n_workers=N, s_active=s_active, tau=TAU,
                             n_stragglers=1, straggler_slowdown=5.0,
                             seed=0)
+    # the scanned engine runs the whole trajectory in one compiled
+    # dispatch; metrics here are pure JAX so they trace into the scan
     res = run(task.problem, hyper, scheduler_cfg=sched, n_iterations=100,
-              metrics_fn=metrics, metrics_every=25)
+              metrics_fn=metrics, metrics_every=25, mode="scan")
     h = res.history
     print(f"\n== {algo} ==")
     print("iter  sim_time  clean_mse  noisy_mse")

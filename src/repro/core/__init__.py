@@ -2,8 +2,10 @@
 from repro.core.types import (AFTOState, CutSet, Hyper, InnerState2,
                               InnerState3, StaleView, TrilevelProblem)
 from repro.core.afto import afto_step, cut_refresh, init_state
+from repro.core.engine import record_slots, run_scanned
 from repro.core.runner import RunResult, run
-from repro.core.scheduler import StragglerConfig, StragglerScheduler
+from repro.core.scheduler import (Schedule, StragglerConfig,
+                                  StragglerScheduler)
 from repro.core.stationarity import stationarity_gap_sq
 from repro.core.weakly_convex import estimate_mu, first_order_gap
 from repro.core import cuts, inner, lagrangian

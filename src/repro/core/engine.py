@@ -1,0 +1,174 @@
+"""Compiled trajectory engine: the whole AFTO run in one `lax.scan`.
+
+The straggler scheduler is a seeded host-side simulation with no feedback
+from the optimization state, so its entire arrival process can be
+materialized up front (`StragglerScheduler.precompute`) and the
+T-iteration trajectory of Alg. 1 driven inside a single donated-buffer
+`jax.lax.scan`:
+
+  * `afto_step` every master iteration (Eqs. 16-21),
+  * `cut_refresh` via `lax.cond` on every t_pre-th iteration with
+    t < t1 (Eqs. 23-25),
+  * gap / cut-count / user metrics accumulated into preallocated
+    history arrays at `metrics_every` strides (again under `lax.cond`,
+    so the stationarity gap is only computed at record steps).
+
+One XLA dispatch replaces T host round-trips, which is what lets the
+paper's wall-clock claims be measured instead of being drowned in
+Python dispatch overhead (`benchmarks/engine_speed.py` quantifies it).
+
+`metrics_fn` must be JAX-traceable here (it is traced into the scan
+body); host-callback metrics still work through the eager path of
+`repro.core.runner.run(mode="eager")`.
+
+Compiled trajectories are cached per (problem, hyper, metrics_fn,
+schedule length, record layout), so repeated runs — e.g. the AFTO/SFTO
+sweeps in the benchmarks — pay tracing + compilation once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import afto as afto_lib
+from repro.core import stationarity as stat_lib
+from repro.core.scheduler import Schedule
+from repro.core.types import AFTOState, Hyper, TrilevelProblem
+
+
+@dataclasses.dataclass
+class RunResult:
+    state: AFTOState
+    history: Dict
+
+
+def record_slots(n_iterations: int,
+                 metrics_every: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side record layout matching the eager runner.
+
+    Returns (record_its, slots): `record_its` are the iterations whose
+    metrics are recorded — every `metrics_every`-th plus the final one —
+    and `slots[it]` is the history-array row for iteration `it` (-1 when
+    iteration `it` records nothing).
+    """
+    record_its = np.array(
+        [it for it in range(n_iterations)
+         if (it + 1) % metrics_every == 0 or it == n_iterations - 1],
+        dtype=np.int64)
+    slots = np.full((n_iterations,), -1, np.int32)
+    slots[record_its] = np.arange(len(record_its), dtype=np.int32)
+    return record_its, slots
+
+
+def _hyper_key(hyper: Hyper) -> tuple:
+    return tuple(sorted(
+        (f.name, getattr(hyper, f.name))
+        for f in dataclasses.fields(hyper)))
+
+
+# Compiled-trajectory cache.  Keyed on object identity for problem /
+# metrics_fn (both are kept alive by the cache entry itself, so ids
+# cannot be recycled while a key references them) and structurally on
+# the hyper scalars and record layout.
+_CACHE: Dict[tuple, tuple] = {}
+_CACHE_MAX = 16
+
+
+def _build_scan(problem: TrilevelProblem, hyper: Hyper,
+                metrics_fn: Optional[Callable], keys, donate: bool):
+    def step_body(carry, xs):
+        st, hist = carry
+        mask, it, slot = xs
+        st = afto_lib.afto_step(problem, hyper, st, mask)
+        do_refresh = ((it + 1) % hyper.t_pre == 0) & (it < hyper.t1)
+        st = jax.lax.cond(
+            do_refresh,
+            lambda s: afto_lib.cut_refresh(problem, hyper, s),
+            lambda s: s, st)
+
+        def write(h):
+            vals = {
+                "gap_sq": stat_lib.stationarity_gap_sq(problem, hyper, st),
+                "n_cuts_i": jnp.sum(st.cuts_i.active),
+                "n_cuts_ii": jnp.sum(st.cuts_ii.active),
+            }
+            if metrics_fn is not None:
+                vals.update(metrics_fn(st))
+            return {k: h[k].at[slot].set(
+                jnp.asarray(vals[k], jnp.float32)) for k in keys}
+
+        hist = jax.lax.cond(slot >= 0, write, lambda h: h, hist)
+        return (st, hist), None
+
+    def scan_all(st, hist, masks, its, slots):
+        (st, hist), _ = jax.lax.scan(step_body, (st, hist),
+                                     (masks, its, slots))
+        return st, hist
+
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(scan_all, donate_argnums=donate_argnums)
+
+
+def _metric_keys(problem, hyper, metrics_fn, state):
+    keys = ["gap_sq", "n_cuts_i", "n_cuts_ii"]
+    if metrics_fn is not None:
+        extra = jax.eval_shape(metrics_fn, state)
+        keys += [k for k in extra if k not in keys]
+    return tuple(keys)
+
+
+def run_scanned(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
+                metrics_fn: Optional[Callable] = None,
+                metrics_every: int = 10,
+                state: Optional[AFTOState] = None) -> RunResult:
+    """Run the full AFTO trajectory over `schedule` in one compiled scan.
+
+    Produces the same history layout as the eager runner: arrays
+    (instead of Python lists) keyed by t / sim_time / host_time /
+    gap_sq / n_cuts_i / n_cuts_ii / max_staleness plus any `metrics_fn`
+    keys.  `host_time` is prorated from the single dispatch's total —
+    per-iteration host timestamps do not exist inside a compiled
+    trajectory.
+    """
+    n_iterations = schedule.n_iterations
+    donate = state is None
+    if state is None:
+        # init_state aliases some buffers across fields (e.g. z3 and
+        # inner3.z3); donation requires distinct buffers, so copy once.
+        state = jax.tree.map(jnp.array, afto_lib.init_state(problem, hyper))
+    record_its, slots = record_slots(n_iterations, metrics_every)
+    n_records = len(record_its)
+
+    keys = _metric_keys(problem, hyper, metrics_fn, state)
+    cache_key = (id(problem), id(metrics_fn), _hyper_key(hyper),
+                 n_iterations, metrics_every, donate)
+    hit = _CACHE.pop(cache_key, None)
+    if hit is None:
+        fn = _build_scan(problem, hyper, metrics_fn, keys, donate)
+        hit = (fn, problem, metrics_fn)   # keep-alive refs pin the ids
+        while len(_CACHE) >= _CACHE_MAX:
+            _CACHE.pop(next(iter(_CACHE)))
+    _CACHE[cache_key] = hit
+    fn = hit[0]
+
+    hist0 = {k: jnp.zeros((n_records,), jnp.float32) for k in keys}
+    masks = jnp.asarray(schedule.active, jnp.float32)
+    its = jnp.arange(n_iterations, dtype=jnp.int32)
+
+    t_start = time.perf_counter()
+    state, hist = fn(state, hist0, masks, its, jnp.asarray(slots))
+    jax.block_until_ready(state)
+    elapsed = time.perf_counter() - t_start
+
+    history = {k: np.asarray(v) for k, v in hist.items()}
+    history["t"] = (record_its + 1).astype(np.float64)
+    history["sim_time"] = np.asarray(schedule.sim_time)[record_its]
+    history["max_staleness"] = np.asarray(
+        schedule.max_staleness)[record_its].astype(np.float64)
+    history["host_time"] = elapsed * (record_its + 1) / n_iterations
+    return RunResult(state=state, history=history)

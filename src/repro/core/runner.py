@@ -1,24 +1,27 @@
-"""Host loop: schedule active sets, step, refresh cuts, record history."""
+"""Trajectory dispatcher: compiled-scan engine or eager host loop.
+
+`run(mode="scan")` (the default) materializes the straggler schedule up
+front and executes the whole trajectory inside one compiled `lax.scan`
+(`repro.core.engine.run_scanned`) — this is the fast path; `metrics_fn`
+must be JAX-traceable.  `run(mode="eager")` keeps the original
+per-iteration host loop, which supports arbitrary host-side
+`metrics_fn` callbacks and per-iteration host timestamps.
+"""
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import afto as afto_lib
+from repro.core import engine as engine_lib
 from repro.core import stationarity as stat_lib
-from repro.core.scheduler import StragglerConfig, StragglerScheduler
+from repro.core.engine import RunResult
+from repro.core.scheduler import (Schedule, StragglerConfig,
+                                  StragglerScheduler)
 from repro.core.types import AFTOState, Hyper, TrilevelProblem
-
-
-@dataclasses.dataclass
-class RunResult:
-    state: AFTOState
-    history: Dict[str, List[float]]
 
 
 def run(problem: TrilevelProblem, hyper: Hyper,
@@ -27,22 +30,42 @@ def run(problem: TrilevelProblem, hyper: Hyper,
         metrics_fn: Optional[Callable] = None,
         metrics_every: int = 10,
         state: Optional[AFTOState] = None,
-        jit: bool = True) -> RunResult:
+        jit: bool = True,
+        mode: str = "scan",
+        schedule: Optional[Schedule] = None) -> RunResult:
     """Run AFTO for `n_iterations` master iterations.
 
-    metrics_fn(state) -> dict of scalars, evaluated every `metrics_every`
-    iterations; simulated wall-clock (scheduler) and host wall-clock are
-    always recorded.
+    mode="scan": one compiled `lax.scan` over a precomputed arrival
+    schedule (pass `schedule` to reuse one; otherwise it is materialized
+    from `scheduler_cfg`).  metrics_fn(state) -> dict of scalars must be
+    jit-traceable and is evaluated inside the scan every `metrics_every`
+    iterations.
+
+    mode="eager": the per-iteration host loop; metrics_fn may be an
+    arbitrary host callback.  Simulated wall-clock (scheduler) and host
+    wall-clock are always recorded in both modes.
     """
     if scheduler_cfg is None:
         scheduler_cfg = StragglerConfig(
             n_workers=hyper.n_workers, s_active=hyper.s_active,
             tau=hyper.tau)
+    if schedule is not None:
+        n_iterations = schedule.n_iterations
+    if not jit:
+        mode = "eager"   # un-jitted debugging only exists on the host loop
+
+    if mode == "scan":
+        if schedule is None:
+            schedule = StragglerScheduler(scheduler_cfg).precompute(
+                n_iterations)
+        return engine_lib.run_scanned(
+            problem, hyper, schedule, metrics_fn=metrics_fn,
+            metrics_every=metrics_every, state=state)
+    if mode != "eager":
+        raise ValueError(f"unknown mode {mode!r}; expected 'scan'|'eager'")
+
     sched = StragglerScheduler(scheduler_cfg)
 
-    step = afto_lib.afto_step
-    refresh = afto_lib.cut_refresh
-    gap = stat_lib.stationarity_gap_sq
     if jit:
         step = jax.jit(lambda s, m: afto_lib.afto_step(problem, hyper, s, m))
         refresh = jax.jit(lambda s: afto_lib.cut_refresh(problem, hyper, s))
@@ -62,7 +85,10 @@ def run(problem: TrilevelProblem, hyper: Hyper,
     t_start = time.perf_counter()
 
     for it in range(n_iterations):
-        mask, sim_t = sched.next_active()
+        if schedule is not None:
+            mask, sim_t = schedule.active[it], float(schedule.sim_time[it])
+        else:
+            mask, sim_t = sched.next_active()
         state = step(state, jnp.asarray(mask))
         if (it + 1) % hyper.t_pre == 0 and it < hyper.t1:
             state = refresh(state)
@@ -74,7 +100,9 @@ def run(problem: TrilevelProblem, hyper: Hyper,
             hist["gap_sq"].append(float(gap(state)))
             hist["n_cuts_i"].append(float(jnp.sum(state.cuts_i.active)))
             hist["n_cuts_ii"].append(float(jnp.sum(state.cuts_ii.active)))
-            hist["max_staleness"].append(float(sched.max_staleness()))
+            hist["max_staleness"].append(float(
+                schedule.max_staleness[it] if schedule is not None
+                else sched.max_staleness()))
             if metrics_fn is not None:
                 for k, v in metrics_fn(state).items():
                     hist.setdefault(k, []).append(float(v))

@@ -9,10 +9,33 @@ recovers SFTO (the synchronous baseline in Fig. 1/2).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """The arrival process of `n_iterations` master iterations, materialized.
+
+    Because the straggler model is a seeded simulation with no feedback
+    from the optimization state, the entire process can be computed up
+    front and handed to the compiled trajectory engine
+    (`repro.core.engine.run_scanned`) as plain arrays.
+    """
+    active: np.ndarray         # (T, N) float32 arrival masks
+    sim_time: np.ndarray       # (T,) float64 completion sim-times
+    max_staleness: np.ndarray  # (T,) int64 max staleness after each iter
+
+    @property
+    def n_iterations(self) -> int:
+        return int(self.active.shape[0])
+
+    @property
+    def n_workers(self) -> int:
+        return int(self.active.shape[1])
 
 
 @dataclasses.dataclass
@@ -88,3 +111,23 @@ class StragglerScheduler:
 
     def max_staleness(self) -> int:
         return int(np.max(self.t - self.last_active))
+
+    def precompute(self, n_iterations: int) -> Schedule:
+        """Materialize the next `n_iterations` of the arrival process.
+
+        Steps a deep copy of the current scheduler state, so `self` is
+        left untouched; the result is bit-identical to calling
+        `next_active()` `n_iterations` times on this scheduler.
+        """
+        clone = copy.deepcopy(self)
+        n = self.cfg.n_workers
+        active = np.empty((n_iterations, n), np.float32)
+        sim_time = np.empty((n_iterations,), np.float64)
+        staleness = np.empty((n_iterations,), np.int64)
+        for i in range(n_iterations):
+            mask, t_done = clone.next_active()
+            active[i] = mask
+            sim_time[i] = t_done
+            staleness[i] = clone.max_staleness()
+        return Schedule(active=active, sim_time=sim_time,
+                        max_staleness=staleness)

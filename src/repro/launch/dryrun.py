@@ -184,6 +184,37 @@ def build_train(cfg: ModelConfig, shape: InputShape, mesh,
     return fn, args, shardings
 
 
+def build_train_scan(cfg: ModelConfig, shape: InputShape, mesh,
+                     hyper: FedHyper, chunk: int, t_pre: int = 2):
+    """A `chunk`-iteration slice of the compiled trajectory engine: scan
+    of afto_llm_step with the t_pre-periodic cut_refresh folded in via
+    lax.cond — proves the scan-driven runner lowers and compiles at
+    production shapes (cf. repro.core.engine for the core runner)."""
+    _, (state_shapes, batch, _), (state_specs, batch_specs, _) = \
+        build_train(cfg, shape, mesh, hyper, "train")
+    n = _n_workers(mesh)
+    batch_c = {k: _sds((chunk,) + v.shape, v.dtype)
+               for k, v in batch.items()}
+    batch_c_specs = {k: P(None, *spec) for k, spec in batch_specs.items()}
+    masks = _sds((chunk, n), jnp.float32)
+    its = _sds((chunk,), jnp.int32)
+
+    def fn(st, bt, ms, it0):
+        def body(s, xs):
+            b, m, it = xs
+            s = afto_llm_step(cfg, hyper, s, b, m)
+            s = jax.lax.cond(
+                (it + 1) % t_pre == 0,
+                lambda s2: cut_refresh_llm(cfg, hyper, s2, b),
+                lambda s2: s2, s)
+            return s, None
+        st, _ = jax.lax.scan(body, st, (bt, ms, it0))
+        return st
+
+    return fn, (state_shapes, batch_c, masks, its), \
+        (state_specs, batch_c_specs, P(None, None), P(None))
+
+
 HEAD_DIM_FALLBACK = False  # set by --shard-head-dim (perf lever)
 
 
@@ -288,7 +319,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
             layer_mode: str = "unroll",
             attn_impl: str = "naive", sketch_r: int = 4096,
             kv_seq_shard: bool = False,
-            first_order: bool = False) -> dict:
+            first_order: bool = False,
+            scan_chunk: int = 4) -> dict:
     cfg = get_config(arch)
     if attn_impl != "naive":
         cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
@@ -306,7 +338,10 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
                      sketch_r=sketch_r, first_order_cuts=first_order,
                      p_max=p_max, k_inner=1, remat=True, unroll=unroll)
     t0 = time.time()
-    if step_kind in ("afto_train", "cut_refresh"):
+    if step_kind == "afto_scan":
+        fn, args, shardings = build_train_scan(cfg, shape, mesh, hyper,
+                                               chunk=scan_chunk)
+    elif step_kind in ("afto_train", "cut_refresh"):
         fn, args, shardings = build_train(
             cfg, shape, mesh, hyper,
             "cut_refresh" if step_kind == "cut_refresh" else "train")
@@ -370,8 +405,11 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
     ap.add_argument("--step", default=None,
-                    choices=[None, "afto_train", "plain_train", "prefill",
-                             "decode", "cut_refresh"])
+                    choices=[None, "afto_train", "afto_scan", "plain_train",
+                             "prefill", "decode", "cut_refresh"])
+    ap.add_argument("--scan-chunk", type=int, default=4,
+                    help="iterations per compiled-trajectory slice for "
+                         "--step afto_scan")
     ap.add_argument("--cut-mode", default="exact",
                     choices=["exact", "sketch"])
     ap.add_argument("--p-max", type=int, default=2)
@@ -419,7 +457,8 @@ def main():
                           attn_impl=args.attn_impl,
                           sketch_r=args.sketch_r,
                           kv_seq_shard=args.kv_seq_shard,
-                          first_order=args.first_order)
+                          first_order=args.first_order,
+                          scan_chunk=args.scan_chunk)
         except Exception as e:  # a dry-run failure is a bug in the system
             traceback.print_exc()
             res = {"arch": arch, "shape": shape, "mesh": args.mesh,

@@ -4,6 +4,11 @@ Trains a reduced (or xlstm-125m-class) model with the federated trilevel
 AFTO step — or plain AdamW for comparison — on synthetic token streams,
 with checkpointing and loss logging.  Runs on CPU.
 
+The default `--engine scan` drives `log_every`-sized chunks of the
+trajectory inside one donated-buffer `lax.scan` over a precomputed
+straggler schedule (one XLA dispatch per chunk instead of one per master
+iteration); `--engine eager` keeps the per-step host loop.
+
   PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m \
       --reduced --steps 200 --mode afto
 """
@@ -13,6 +18,7 @@ import argparse
 import dataclasses
 import json
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +34,60 @@ from repro.models import transformer as tfm
 from repro.optim import adamw
 
 
+def _chunk_tokens(cfg, args, start: int, stop: int) -> np.ndarray:
+    n, b, s = args.workers, args.batch, args.seq
+    return np.stack([
+        np.asarray(make_token_stream(cfg.vocab_size, n * b, s,
+                                     seed=args.seed * 7919 + it))
+        .reshape(n, b, s)
+        for it in range(start, stop)])
+
+
+def run_afto_scan(cfg, args, hyper, state, sched, val_loss) -> dict:
+    """Chunked compiled trajectory: `log_every` master iterations per
+    donated-buffer lax.scan dispatch, schedule precomputed up front."""
+    schedule = sched.precompute(args.steps)
+    chunk = max(1, args.log_every)
+    # init_fed_state may alias buffers across fields; donation needs
+    # each buffer to appear once.
+    state = jax.tree.map(jnp.array, state)
+
+    def body(st, xs):
+        toks, mask, it = xs
+        batch = {"tokens": toks, "val_tokens": toks}
+        st = afto_llm_step(cfg, hyper, st, batch, mask)
+        st = jax.lax.cond(
+            ((it + 1) % args.t_pre == 0) & (it < args.t1),
+            lambda s2: cut_refresh_llm(cfg, hyper, s2, batch),
+            lambda s2: s2, st)
+        return st, None
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def run_chunk(st, toks, masks, its):
+        st, _ = jax.lax.scan(body, st, (toks, masks, its))
+        return st
+
+    history = []
+    t0 = time.time()
+    for start in range(0, args.steps, chunk):
+        stop = min(start + chunk, args.steps)
+        toks = _chunk_tokens(cfg, args, start, stop)
+        state = run_chunk(state, jnp.asarray(toks),
+                          jnp.asarray(schedule.active[start:stop]),
+                          jnp.arange(start, stop, dtype=jnp.int32))
+        w = jax.tree.map(lambda x: x[0], state.X3)
+        loss = float(val_loss(w, jnp.asarray(toks[-1][0])))
+        history.append({"step": stop, "loss": loss,
+                        "sim_time": float(schedule.sim_time[stop - 1]),
+                        "host_s": round(time.time() - t0, 1),
+                        "cuts": float(jnp.sum(state.cuts.active))})
+        print(json.dumps(history[-1]))
+        # save whenever a ckpt_every boundary was crossed inside the chunk
+        if args.ckpt_dir and stop // args.ckpt_every > start // args.ckpt_every:
+            save_checkpoint(args.ckpt_dir, state.z3, stop)
+    return {"history": history}
+
+
 def run_afto(cfg, args) -> dict:
     n, b, s = args.workers, args.batch, args.seq
     hyper = FedHyper(n_workers=n, cut_mode=args.cut_mode,
@@ -35,13 +95,16 @@ def run_afto(cfg, args) -> dict:
                      remat=False, eta_x=args.lr, eta_z=args.lr)
     state = init_fed_state(cfg, hyper, jax.random.PRNGKey(args.seed),
                            b, s - 1)
-    step = jax.jit(lambda st, bt, m: afto_llm_step(cfg, hyper, st, bt, m))
-    refresh = jax.jit(lambda st, bt: cut_refresh_llm(cfg, hyper, st, bt))
     val_loss = jax.jit(lambda w, tk: tfm.train_loss(cfg, w, tk))
-
     sched = StragglerScheduler(StragglerConfig(
         n_workers=n, s_active=max(1, n - 1), tau=args.tau,
         n_stragglers=1, seed=args.seed))
+
+    if args.engine == "scan":
+        return run_afto_scan(cfg, args, hyper, state, sched, val_loss)
+
+    step = jax.jit(lambda st, bt, m: afto_llm_step(cfg, hyper, st, bt, m))
+    refresh = jax.jit(lambda st, bt: cut_refresh_llm(cfg, hyper, st, bt))
     history = []
     t0 = time.time()
     for it in range(args.steps):
@@ -94,6 +157,9 @@ def main():
     ap.add_argument("--reduced", action="store_true",
                     help="use the reduced smoke variant (CPU-friendly)")
     ap.add_argument("--mode", default="afto", choices=["afto", "plain"])
+    ap.add_argument("--engine", default="scan", choices=["scan", "eager"],
+                    help="scan = chunked compiled trajectory (default); "
+                         "eager = one dispatch per master iteration")
     ap.add_argument("--cut-mode", default="sketch",
                     choices=["sketch", "exact"])
     ap.add_argument("--sketch-r", type=int, default=256)

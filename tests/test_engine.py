@@ -1,0 +1,174 @@
+"""Compiled trajectory engine: schedule precompute + scan-vs-eager."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_quadratic_problem
+from repro.core import (Hyper, StragglerConfig, StragglerScheduler, run,
+                        run_scanned)
+from repro.core.engine import record_slots
+
+
+def _hyper(**kw):
+    base = dict(n_workers=4, s_active=3, tau=5, k_inner=3, p_max=6,
+                t_pre=5, t1=100, eta_x=0.05, eta_z=0.05, d1=3)
+    base.update(kw)
+    return Hyper(**base)
+
+
+def _cfg(**kw):
+    base = dict(n_workers=4, s_active=3, tau=5, n_stragglers=1,
+                straggler_slowdown=5.0, seed=0)
+    base.update(kw)
+    return StragglerConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# schedule precompute (regression: bit-identical to stepping)
+# ---------------------------------------------------------------------------
+
+def test_precompute_bit_identical_to_stepping():
+    sched = StragglerScheduler(_cfg())
+    stepped = StragglerScheduler(_cfg())
+    schedule = sched.precompute(64)
+    assert schedule.n_iterations == 64
+    assert schedule.n_workers == 4
+    for i in range(64):
+        mask, t_done = stepped.next_active()
+        assert np.array_equal(schedule.active[i], mask), i
+        assert schedule.sim_time[i] == t_done, i
+        assert schedule.max_staleness[i] == stepped.max_staleness(), i
+
+
+def test_precompute_leaves_scheduler_untouched():
+    sched = StragglerScheduler(_cfg(seed=7))
+    sched.precompute(32)
+    fresh = StragglerScheduler(_cfg(seed=7))
+    for _ in range(5):
+        m1, t1 = sched.next_active()
+        m2, t2 = fresh.next_active()
+        assert np.array_equal(m1, m2) and t1 == t2
+
+
+def test_precompute_mid_stream():
+    """Precompute after stepping continues the same process."""
+    sched = StragglerScheduler(_cfg(seed=3))
+    ref = StragglerScheduler(_cfg(seed=3))
+    for _ in range(10):
+        sched.next_active()
+        ref.next_active()
+    schedule = sched.precompute(16)
+    for i in range(16):
+        mask, t_done = ref.next_active()
+        assert np.array_equal(schedule.active[i], mask)
+        assert schedule.sim_time[i] == t_done
+
+
+def test_precompute_respects_tau():
+    schedule = StragglerScheduler(
+        _cfg(s_active=2, tau=4, n_stragglers=2,
+             straggler_slowdown=20.0, seed=3)).precompute(60)
+    assert schedule.max_staleness.max() <= 4
+
+
+# ---------------------------------------------------------------------------
+# record layout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_iterations,metrics_every", [
+    (40, 10), (41, 10), (7, 10), (1, 1), (10, 3)])
+def test_record_slots_matches_eager_layout(n_iterations, metrics_every):
+    record_its, slots = record_slots(n_iterations, metrics_every)
+    expect = [it for it in range(n_iterations)
+              if (it + 1) % metrics_every == 0 or it == n_iterations - 1]
+    assert record_its.tolist() == expect
+    for it in range(n_iterations):
+        if it in expect:
+            assert slots[it] == expect.index(it)
+        else:
+            assert slots[it] == -1
+
+
+# ---------------------------------------------------------------------------
+# scan-vs-eager equivalence
+# ---------------------------------------------------------------------------
+
+def test_scan_matches_eager_trajectory():
+    prob = make_quadratic_problem()
+    hyper, cfg = _hyper(), _cfg()
+    schedule = StragglerScheduler(cfg).precompute(40)
+
+    res_e = run(prob, hyper, scheduler_cfg=cfg, n_iterations=40,
+                metrics_every=10, mode="eager", schedule=schedule)
+    res_s = run(prob, hyper, scheduler_cfg=cfg, n_iterations=40,
+                metrics_every=10, mode="scan", schedule=schedule)
+
+    for a, b in zip(jax.tree.leaves(res_e.state),
+                    jax.tree.leaves(res_s.state)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+    h_e, h_s = res_e.history, res_s.history
+    assert list(h_e["t"]) == list(h_s["t"])
+    np.testing.assert_allclose(h_e["sim_time"], h_s["sim_time"])
+    np.testing.assert_allclose(h_e["max_staleness"], h_s["max_staleness"])
+    np.testing.assert_allclose(h_e["gap_sq"], h_s["gap_sq"],
+                               rtol=1e-4, atol=1e-6)
+    assert list(h_e["n_cuts_i"]) == list(h_s["n_cuts_i"])
+    assert list(h_e["n_cuts_ii"]) == list(h_s["n_cuts_ii"])
+
+
+def test_scan_matches_eager_with_metrics_fn():
+    prob = make_quadratic_problem()
+    hyper, cfg = _hyper(), _cfg(seed=1)
+    schedule = StragglerScheduler(cfg).precompute(25)
+
+    def metrics(state):
+        return {"z1_norm_sq": jnp.sum(state.z1 ** 2)}
+
+    res_e = run(prob, hyper, scheduler_cfg=cfg, n_iterations=25,
+                metrics_every=10, metrics_fn=metrics, mode="eager",
+                schedule=schedule)
+    res_s = run(prob, hyper, scheduler_cfg=cfg, n_iterations=25,
+                metrics_every=10, metrics_fn=metrics, mode="scan",
+                schedule=schedule)
+    # 25 iters at stride 10 -> records at 10, 20, 25 (the final iter)
+    assert len(res_s.history["z1_norm_sq"]) == 3
+    np.testing.assert_allclose(res_e.history["z1_norm_sq"],
+                               res_s.history["z1_norm_sq"],
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_scan_fresh_schedule_matches_eager_fresh_scheduler():
+    """No explicit schedule: both modes materialize the same seeded
+    process from scheduler_cfg, so trajectories still agree."""
+    prob = make_quadratic_problem()
+    hyper, cfg = _hyper(), _cfg()
+    res_e = run(prob, hyper, scheduler_cfg=cfg, n_iterations=20,
+                metrics_every=5, mode="eager")
+    res_s = run(prob, hyper, scheduler_cfg=cfg, n_iterations=20,
+                metrics_every=5, mode="scan")
+    np.testing.assert_allclose(res_e.history["gap_sq"],
+                               res_s.history["gap_sq"],
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(res_e.history["sim_time"],
+                               res_s.history["sim_time"])
+
+
+def test_run_scanned_caller_state_not_donated():
+    from repro.core import afto as afto_lib
+    prob = make_quadratic_problem()
+    hyper, cfg = _hyper(), _cfg()
+    schedule = StragglerScheduler(cfg).precompute(10)
+    state = afto_lib.init_state(prob, hyper)
+    res = run_scanned(prob, hyper, schedule, metrics_every=5, state=state)
+    # the caller's buffers must remain readable after the run
+    assert np.all(np.isfinite(np.asarray(state.z1)))
+    assert np.all(np.isfinite(res.history["gap_sq"]))
+
+
+def test_run_rejects_unknown_mode():
+    prob = make_quadratic_problem()
+    with pytest.raises(ValueError):
+        run(prob, _hyper(), n_iterations=2, mode="wat")
