@@ -35,7 +35,7 @@ def main():
     act = jnp.ones((p,))
     oracle = jax.jit(ref.cut_eval_ref)
     us = _time(oracle, a, v, c, act)
-    got = ops.cut_eval(a, v, c, act)
+    got = ops.cut_eval(a, v, c, act, impl="pallas")   # force the kernel
     err = float(jnp.max(jnp.abs(got - oracle(a, v, c, act))))
     rows.append(("kernel_cut_eval_oracle", us,
                  f"P={p};D={d};interp_max_err={err:.2e}"))

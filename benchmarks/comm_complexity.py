@@ -19,7 +19,10 @@ def main(n_iterations: int = 60):
     prob = make_quadratic_problem(n_workers=4, dim=3)
     hyper = Hyper(n_workers=4, s_active=3, tau=5, k_inner=3, p_max=6,
                   t_pre=5, t1=100, eta_x=0.05, eta_z=0.05, d1=3)
-    res = run(prob, hyper, n_iterations=n_iterations, metrics_every=10)
+    # single-seed sweep: the cut-count trajectory rides the same swept
+    # dispatch path the figure benchmarks use
+    res = run(prob, hyper, n_iterations=n_iterations, metrics_every=10,
+              mode="sweep", seeds=(0,)).run(0)
 
     d = (3, 3, 3)
     s = hyper.s_active

@@ -1,11 +1,37 @@
-"""Shared tiny problem factory (mirrors tests/conftest.py without
-importing pytest machinery)."""
+"""Shared benchmark helpers: the tiny problem factory (mirrors
+tests/conftest.py without importing pytest machinery) and the
+method-sweep dispatch scaffold used by the figure benchmarks."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import StragglerConfig, StragglerScheduler, run
 from repro.core.types import TrilevelProblem
+
+
+def swept_method_histories(problem, hyper, s_actives, n_iterations: int,
+                           metrics_fn, metrics_every: int, *,
+                           n_workers: int, tau: int, n_stragglers: int,
+                           seed: int, straggler_slowdown: float = 5.0):
+    """One swept dispatch over methods that differ only in their arrival
+    schedules (e.g. AFTO's S-of-N vs SFTO's all-N): precomputes one
+    schedule per `s_actives` entry and returns the per-method history
+    list.  Each method's S also rides the sweep as a per-run
+    `hyper.s_active`, so the rows stay correct even if the step math
+    ever starts reading S directly (today only the masks differ)."""
+    schedules = [
+        StragglerScheduler(StragglerConfig(
+            n_workers=n_workers, s_active=s_active, tau=tau,
+            n_stragglers=n_stragglers,
+            straggler_slowdown=straggler_slowdown,
+            seed=seed)).precompute(n_iterations)
+        for s_active in s_actives]
+    res = run(problem, hyper, n_iterations=n_iterations,
+              metrics_fn=metrics_fn, metrics_every=metrics_every,
+              mode="sweep", schedules=schedules,
+              sweep_hypers={"s_active": list(s_actives)})
+    return [res.run(r).history for r in range(len(s_actives))]
 
 
 def make_quadratic_problem(n_workers: int = 4, dim: int = 3,

@@ -1,0 +1,61 @@
+"""CI smoke: lower + compile a compiled-trajectory slice of the fed LLM
+engine (`launch/dryrun.py --step afto_scan`) with sketch-mode cuts on a
+small fake-device mesh.
+
+Uses the classic `jax.sharding.Mesh` API so the check runs on every jax
+the repo supports (the `jax.make_mesh(axis_types=...)` path used by the
+production dry-run needs a newer jax; `tests/test_dryrun_small.py`
+guards on the same attribute).  Run as a subprocess-free entry point:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.dryrun_scan_smoke
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def main(arch: str = "llama3-8b", scan_chunk: int = 2) -> dict:
+    from repro.configs import get_config, reduced
+    from repro.configs.shapes import InputShape
+    from repro.fed.trilevel_llm import FedHyper
+    from repro.launch import dryrun as dr
+
+    devices = np.asarray(jax.devices()[:8]).reshape(2, 4)
+    mesh = Mesh(devices, ("data", "model"))
+    cfg = reduced(get_config(arch))
+    shape = InputShape("train_small", seq_len=64, global_batch=4,
+                      kind="train")
+    hyper = FedHyper(n_workers=2, cut_mode="sketch", sketch_r=64,
+                     p_max=2, k_inner=1, remat=False, unroll=False)
+    fn, args, shardings = dr.build_train_scan(cfg, shape, mesh, hyper,
+                                              chunk=scan_chunk)
+    named = jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        shardings, is_leaf=lambda x: isinstance(x, P))
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=named).lower(*args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):     # older jax: one dict per program
+        ca = ca[0] if ca else {}
+    out = {"arch": cfg.name, "scan_chunk": scan_chunk,
+           "cut_mode": hyper.cut_mode,
+           "flops": float(ca.get("flops", 0.0)),
+           "status": "ok"}
+    return out
+
+
+if __name__ == "__main__":
+    res = main()
+    print(json.dumps(res))
+    sys.exit(0 if res["status"] == "ok" and res["flops"] > 0 else 1)

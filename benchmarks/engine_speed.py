@@ -1,19 +1,26 @@
-"""Engine benchmark: eager host loop vs compiled-scan trajectory at
-quickstart scale (the 4-worker quadratic trilevel problem, 200 master
-iterations).  Emits the machine-readable perf record consumed by
-``benchmarks/run.py --json`` so future PRs can diff
-``{iters_per_sec, sim_time, gap_sq}`` across engines."""
+"""Engine benchmarks at quickstart scale (the 4-worker quadratic
+trilevel problem): eager host loop vs compiled-scan trajectory, the
+batched sweep engine vs an equivalent Python loop of scanned runs, and
+the Pallas `cut_eval` kernel at paper-scale D.  Emits the
+machine-readable perf record consumed by ``benchmarks/run.py --json`` so
+future PRs can diff ``{iters_per_sec, runs_per_sec_swept, ...}`` across
+engines."""
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import Hyper, StragglerConfig, StragglerScheduler, run
+from repro.core import (Hyper, StragglerConfig, StragglerScheduler, run,
+                        run_scanned, run_swept)
 from repro.core.types import TrilevelProblem
 
 N_WORKERS, DIM = 4, 3
+SWEEP_RUNS = 4          # R for the swept-vs-looped comparison
+KERNEL_D = 1 << 18      # paper-scale flattened cut space (sketched)
+KERNEL_P = 8
 
 
 def quickstart_problem(seed: int = 0) -> TrilevelProblem:
@@ -61,7 +68,8 @@ def _timed_run(problem, hyper, cfg, schedule, mode: str):
 
 
 def record(n_iterations: int = 200) -> dict:
-    """The perf record: eager vs cold/warm scan on the same schedule.
+    """The perf record: eager vs cold/warm scan on the same schedule,
+    plus the swept-engine and cut_eval-kernel records.
 
     eager and scan run bit-identical trajectories (same precomputed
     schedule), so sim_time/gap_sq must agree; iters_per_sec is the
@@ -83,7 +91,91 @@ def record(n_iterations: int = 200) -> dict:
         jnp.allclose(a, b, rtol=1e-5, atol=1e-6)
         for a, b in zip(jax.tree.leaves(res_eager.state),
                         jax.tree.leaves(res_warm.state))))
+    out.update(sweep_record(n_iterations))
+    out["cut_eval_kernel"] = kernel_record()
     return out
+
+
+def sweep_record(n_iterations: int = 200, n_runs: int = SWEEP_RUNS,
+                 reps: int = 3) -> dict:
+    """Swept-vs-looped: R seeded trajectories as one `run_swept` dispatch
+    vs the equivalent warm Python loop of `run_scanned` calls.  Reports
+    the best of `reps` timed passes per engine (the steady-state cost;
+    single passes are noisy at quickstart scale) and cross-checks that
+    the swept rows reproduce the looped final states."""
+    problem, hyper, cfg, _ = quickstart_setup(n_iterations)
+    schedules = [
+        StragglerScheduler(dataclasses.replace(cfg, seed=s))
+        .precompute(n_iterations) for s in range(n_runs)]
+    me = max(1, n_iterations // 10)
+
+    # warm both engines (compile once)
+    looped_res = [run_scanned(problem, hyper, s, metrics_every=me)
+                  for s in schedules]
+    swept_res = run_swept(problem, hyper, schedules, metrics_every=me)
+
+    looped_wall = swept_wall = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for s in schedules:
+            run_scanned(problem, hyper, s, metrics_every=me)
+        looped_wall = min(looped_wall, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_swept(problem, hyper, schedules, metrics_every=me)
+        swept_wall = min(swept_wall, time.perf_counter() - t0)
+
+    match = all(
+        jnp.allclose(a, jax.tree.map(lambda x: x[r], b), rtol=2e-5,
+                     atol=1e-6)
+        for r in range(n_runs)
+        for a, b in zip(jax.tree.leaves(looped_res[r].state),
+                        jax.tree.leaves(swept_res.state)))
+    return {
+        "sweep": {
+            "n_runs": n_runs,
+            "looped_wall_s": looped_wall,
+            "swept_wall_s": swept_wall,
+            "runs_per_sec_looped": n_runs / looped_wall,
+            "runs_per_sec_swept": n_runs / swept_wall,
+            "swept_speedup": looped_wall / swept_wall,
+            "states_allclose": bool(match),
+        },
+        # top-level series for easy cross-PR diffing
+        "runs_per_sec_swept": n_runs / swept_wall,
+    }
+
+
+def kernel_record(p: int = KERNEL_P, d: int = KERNEL_D,
+                  iters: int = 3) -> dict:
+    """cut_eval mat-vec at paper-scale D: kernel (interpret off-TPU,
+    Mosaic on TPU) vs the jnp reference, with effective bandwidth."""
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (p, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    c = jnp.zeros((p,), jnp.float32)
+    act = jnp.ones((p,), jnp.float32)
+
+    def timed(fn):
+        jax.block_until_ready(fn())            # warm/compile
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    # impl forced so the record always captures kernel-vs-ref, even where
+    # the auto route would (rightly) pick the jnp mat-vec (interpret-mode
+    # streaming off-TPU); on TPU the kernel column is the Mosaic kernel.
+    t_kernel = timed(lambda: ops.cut_eval(a, v, c, act, impl="pallas"))
+    t_ref = timed(lambda: ops.cut_eval(a, v, c, act, impl="ref"))
+    bytes_touched = (p * d + d + 2 * p) * 4
+    return {"p": p, "d": d,
+            "kernel_us": t_kernel * 1e6, "ref_us": t_ref * 1e6,
+            "kernel_gbps": bytes_touched / t_kernel / 1e9,
+            "ref_gbps": bytes_touched / t_ref / 1e9}
 
 
 def _entry(res, wall: float, n_iterations: int) -> dict:
@@ -109,6 +201,17 @@ def main(n_iterations: int = 200, record_out: dict = None):
                  f"warm={rec['speedup_warm']:.1f}x;"
                  f"cold={rec['speedup_cold']:.1f}x;"
                  f"allclose={rec['final_state_allclose']}"))
+    sw = rec["sweep"]
+    rows.append(("engine_sweep",
+                 sw["swept_wall_s"] * 1e6 / (sw["n_runs"] * n_iterations),
+                 f"runs_per_sec_swept={sw['runs_per_sec_swept']:.1f};"
+                 f"runs_per_sec_looped={sw['runs_per_sec_looped']:.1f};"
+                 f"speedup={sw['swept_speedup']:.1f}x;"
+                 f"allclose={sw['states_allclose']}"))
+    ker = rec["cut_eval_kernel"]
+    rows.append(("cut_eval_kernel", ker["kernel_us"],
+                 f"d={ker['d']};kernel_gbps={ker['kernel_gbps']:.2f};"
+                 f"ref_gbps={ker['ref_gbps']:.2f}"))
     return rows
 
 

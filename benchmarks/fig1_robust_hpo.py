@@ -6,6 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from benchmarks.conftest_shim import swept_method_histories
 from repro.apps.robust_hpo import default_hyper, make_robust_hpo_problem
 from repro.core import StragglerConfig, run
 
@@ -19,7 +20,10 @@ SETTINGS = {
 
 
 def run_dataset(dataset: str, n_iterations: int = 120, seed: int = 0,
-                engine: str = "scan"):
+                engine: str = "sweep"):
+    """AFTO vs SFTO as ONE swept dispatch: the two methods differ only in
+    their arrival schedules (S-of-N vs all-N), so both trajectories ride
+    the same compiled scan body under the sweep vmap."""
     n, s, stragglers, tau = SETTINGS[dataset]
     task = make_robust_hpo_problem(dataset, n_workers=n, seed=seed)
 
@@ -28,16 +32,25 @@ def run_dataset(dataset: str, n_iterations: int = 120, seed: int = 0,
         return {"mse_clean": task.test_mse(w, 0.0),
                 "mse_noisy": task.test_mse(w, 0.3, seed=seed)}
 
+    algos = (("AFTO", s), ("SFTO", n))
     rows = []
-    for algo, s_active in (("AFTO", s), ("SFTO", n)):
-        hyper = default_hyper(task, n, s_active, tau)
-        cfg = StragglerConfig(n_workers=n, s_active=s_active, tau=tau,
-                              n_stragglers=stragglers,
-                              straggler_slowdown=5.0, seed=seed)
-        res = run(task.problem, hyper, scheduler_cfg=cfg,
-                  n_iterations=n_iterations, metrics_fn=metrics,
-                  metrics_every=10, mode=engine)
-        h = res.history
+    if engine == "sweep":
+        per_algo = swept_method_histories(
+            task.problem, default_hyper(task, n, s, tau),
+            [s_active for _, s_active in algos], n_iterations, metrics,
+            10, n_workers=n, tau=tau, n_stragglers=stragglers, seed=seed)
+    else:
+        per_algo = []
+        for algo, s_active in algos:
+            hyper = default_hyper(task, n, s_active, tau)
+            cfg = StragglerConfig(n_workers=n, s_active=s_active, tau=tau,
+                                  n_stragglers=stragglers,
+                                  straggler_slowdown=5.0, seed=seed)
+            per_algo.append(run(
+                task.problem, hyper, scheduler_cfg=cfg,
+                n_iterations=n_iterations, metrics_fn=metrics,
+                metrics_every=10, mode=engine).history)
+    for (algo, _), h in zip(algos, per_algo):
         for i in range(len(h["t"])):
             rows.append({"dataset": dataset, "algo": algo,
                          "iter": h["t"][i], "sim_time": h["sim_time"][i],
@@ -63,7 +76,7 @@ def speedup(rows, dataset: str, target_frac: float = 0.7):
     return 1.0 - out["AFTO"] / out["SFTO"]
 
 
-def main(n_iterations: int = 120, datasets=None, engine: str = "scan"):
+def main(n_iterations: int = 120, datasets=None, engine: str = "sweep"):
     import time
     results = []
     datasets = datasets or list(SETTINGS)

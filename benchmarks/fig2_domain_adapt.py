@@ -6,6 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from benchmarks.conftest_shim import swept_method_histories
 from repro.apps.domain_adaptation import (default_hyper,
                                           make_domain_adaptation_problem)
 from repro.core import StragglerConfig, run
@@ -19,7 +20,9 @@ SETTINGS = {
 
 
 def run_direction(direction: str, n_iterations: int = 40, seed: int = 0,
-                  engine: str = "scan"):
+                  engine: str = "sweep"):
+    """AFTO vs SFTO in one swept dispatch (they differ only in arrival
+    schedules); engine="scan"/"eager" keeps the per-method loop."""
     n, s, stragglers, tau = SETTINGS[direction]
     domain = "svhn" if direction == "svhn_pretrain" else "mnist"
     task = make_domain_adaptation_problem(
@@ -30,17 +33,28 @@ def run_direction(direction: str, n_iterations: int = 40, seed: int = 0,
         v = jax.tree.map(lambda x: jnp.mean(x, 0), state.X2)
         return task.test_metrics(v)
 
+    algos = (("AFTO", s), ("SFTO", n))
+    me = max(2, n_iterations // 8)
+    if engine == "sweep":
+        per_algo = swept_method_histories(
+            task.problem,
+            default_hyper(n, s, tau, t_pre=20, k_inner=1, p_max=2),
+            [s_active for _, s_active in algos], n_iterations, metrics,
+            me, n_workers=n, tau=tau, n_stragglers=stragglers, seed=seed)
+    else:
+        per_algo = []
+        for algo, s_active in algos:
+            hyper = default_hyper(n, s_active, tau, t_pre=20, k_inner=1,
+                                  p_max=2)
+            cfg = StragglerConfig(n_workers=n, s_active=s_active, tau=tau,
+                                  n_stragglers=stragglers,
+                                  straggler_slowdown=5.0, seed=seed)
+            per_algo.append(run(
+                task.problem, hyper, scheduler_cfg=cfg,
+                n_iterations=n_iterations, metrics_fn=metrics,
+                metrics_every=me, mode=engine).history)
     rows = []
-    for algo, s_active in (("AFTO", s), ("SFTO", n)):
-        hyper = default_hyper(n, s_active, tau, t_pre=20, k_inner=1,
-                              p_max=2)
-        cfg = StragglerConfig(n_workers=n, s_active=s_active, tau=tau,
-                              n_stragglers=stragglers,
-                              straggler_slowdown=5.0, seed=seed)
-        res = run(task.problem, hyper, scheduler_cfg=cfg,
-                  n_iterations=n_iterations, metrics_fn=metrics,
-                  metrics_every=max(2, n_iterations // 8), mode=engine)
-        h = res.history
+    for (algo, _), h in zip(algos, per_algo):
         for i in range(len(h["t"])):
             rows.append({"direction": direction, "algo": algo,
                          "iter": h["t"][i], "sim_time": h["sim_time"][i],
@@ -49,7 +63,7 @@ def run_direction(direction: str, n_iterations: int = 40, seed: int = 0,
     return rows
 
 
-def main(n_iterations: int = 40, directions=None, engine: str = "scan"):
+def main(n_iterations: int = 40, directions=None, engine: str = "sweep"):
     import time
     out = []
     for d in (directions or list(SETTINGS)):

@@ -10,18 +10,34 @@ import numpy as np
 
 from repro.apps.baselines import run_adbo, run_fednest
 from repro.apps.robust_hpo import default_hyper, make_robust_hpo_problem
-from repro.core import StragglerConfig, run
+from repro.core import StragglerConfig, StragglerScheduler, init_state, run
+from repro.utils.tree import tree_stack
 
 DATASETS = ("diabetes", "boston", "red_wine", "white_wine")
 
 
-def run_afto(task, n, n_iterations, seed):
-    hyper = default_hyper(task, n, max(1, n - 1), 10)
-    cfg = StragglerConfig(n_workers=n, s_active=max(1, n - 1), tau=10,
-                          n_stragglers=1, seed=seed)
-    res = run(task.problem, hyper, scheduler_cfg=cfg,
-              n_iterations=n_iterations, metrics_every=n_iterations)
-    return jax.tree.map(lambda x: jnp.mean(x, 0), res.state.X3)
+def run_afto_swept(tasks, n, n_iterations, seeds):
+    """All AFTO seed repetitions of one dataset as ONE swept dispatch:
+    per-seed datasets ride the sweep's stacked `data` axis, per-seed
+    model inits its stacked initial states, and per-seed arrival
+    processes its schedule stack.  Returns the per-seed mean-worker x3.
+
+    The per-seed tasks share their objective closures (same dataset
+    family and worker count), so run 0's TrilevelProblem supplies the
+    traced program and only the data/state leaves vary per run."""
+    hyper = default_hyper(tasks[0], n, max(1, n - 1), 10)
+    schedules = [
+        StragglerScheduler(StragglerConfig(
+            n_workers=n, s_active=max(1, n - 1), tau=10, n_stragglers=1,
+            seed=seed)).precompute(n_iterations)
+        for seed in seeds]
+    data = tree_stack([t.problem.data for t in tasks])
+    states = tree_stack([init_state(t.problem, hyper) for t in tasks])
+    res = run(tasks[0].problem, hyper, n_iterations=n_iterations,
+              metrics_every=n_iterations, mode="sweep",
+              schedules=schedules, sweep_states=states, sweep_data=data)
+    return [jax.tree.map(lambda x: jnp.mean(x[r], 0), res.state.X3)
+            for r in range(len(seeds))]
 
 
 def main(n_iterations: int = 150, seeds=(0, 1), noise: float = 0.3,
@@ -36,9 +52,10 @@ def main(n_iterations: int = 150, seeds=(0, 1), noise: float = 0.3,
     for ds in datasets:
         t0 = time.perf_counter()
         scores = {"AFTO": [], "ADBO": [], "FEDNEST": []}
-        for seed in seeds:
-            task = make_robust_hpo_problem(ds, n_workers=4, seed=seed)
-            w = run_afto(task, 4, n_iterations * grad_equal, seed)
+        tasks = [make_robust_hpo_problem(ds, n_workers=4, seed=seed)
+                 for seed in seeds]
+        ws = run_afto_swept(tasks, 4, n_iterations * grad_equal, seeds)
+        for task, seed, w in zip(tasks, seeds, ws):
             scores["AFTO"].append(float(task.test_mse(w, noise, seed)))
             out = run_adbo(task, n_iterations=n_iterations * grad_equal,
                            seed=seed)

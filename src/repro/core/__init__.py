@@ -1,8 +1,9 @@
 """AFTO core: the paper's contribution (mu-cuts + async federated loop)."""
 from repro.core.types import (AFTOState, CutSet, Hyper, InnerState2,
                               InnerState3, StaleView, TrilevelProblem)
-from repro.core.afto import afto_step, cut_refresh, init_state
-from repro.core.engine import record_slots, run_scanned
+from repro.core.afto import afto_step, afto_step_aux, cut_refresh, init_state
+from repro.core.engine import (SweepResult, record_slots, run_scanned,
+                               run_swept)
 from repro.core.runner import RunResult, run
 from repro.core.scheduler import (Schedule, StragglerConfig,
                                   StragglerScheduler)

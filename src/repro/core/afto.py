@@ -93,6 +93,20 @@ def afto_step(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
 
     active: (N,) {0,1} float mask of workers whose update arrives now.
     """
+    return afto_step_aux(problem, hyper, state, active)[0]
+
+
+def afto_step_aux(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
+                  active) -> Tuple[AFTOState, dict]:
+    """`afto_step` plus the step's cut-algebra intermediates.
+
+    The returned aux dict carries the flattened II-polytope operator and
+    the cut values at the *post-step* point — exactly the products the
+    stationarity gap needs at record iterations, so the compiled engine
+    can fuse the gap into its record branch without recomputing them
+    (`repro.core.stationarity.stationarity_gap_sq(aux=...)`).  Valid only
+    while the polytope is unchanged (i.e. before any `cut_refresh`).
+    """
     t = state.t
 
     # ---- workers (Eq. 16): gradients of \hat L_p at each worker's stale view
@@ -122,22 +136,25 @@ def afto_step(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
     X3 = masked_step(state.X3, g3, hyper.eta_x)
 
     # ---- master Gauss-Seidel primal updates (Eqs. 17-19)
+    # One flattened (P, D) operator serves the whole master step: the
+    # a-block gradients for z1/z2/z3 all come out of a single w @ A
+    # mat-vec, and the same matrix feeds the cut_eval kernel below.
     lam_a = state.lam * state.cuts_ii.active
+    spec = cuts_lib.flat_spec(state.cuts_ii)
+    a_flat = cuts_lib.flatten_cuts(state.cuts_ii, spec)
+    ga1, ga2, ga3, _, _ = cuts_lib.cut_weighted_coeff_flat(
+        spec, a_flat, lam_a)
 
     theta_sum = jax.tree.map(lambda th: jnp.sum(th, axis=0), state.theta)
-    gz1 = tree_axpy(
-        -1.0, theta_sum, cuts_lib.cut_weighted_coeff(state.cuts_ii, lam_a,
-                                                     "a1"))
+    gz1 = tree_axpy(-1.0, theta_sum, ga1)
     z1 = tree_axpy(-hyper.eta_z, gz1, state.z1)
-
-    gz2 = cuts_lib.cut_weighted_coeff(state.cuts_ii, lam_a, "a2")
-    z2 = tree_axpy(-hyper.eta_z, gz2, state.z2)
-
-    gz3 = cuts_lib.cut_weighted_coeff(state.cuts_ii, lam_a, "a3")
-    z3 = tree_axpy(-hyper.eta_z, gz3, state.z3)
+    z2 = tree_axpy(-hyper.eta_z, ga2, state.z2)
+    z3 = tree_axpy(-hyper.eta_z, ga3, state.z3)
 
     # ---- dual updates with projection (Eqs. 20/21)
-    cutval = cuts_lib.eval_cuts(state.cuts_ii, z1, z2, z3, X2=X2, X3=X3)
+    cutval = cuts_lib.eval_cuts_flat(
+        a_flat, cuts_lib.flatten_point(spec, z1, z2, z3, X2, X3),
+        state.cuts_ii.c, state.cuts_ii.active)
     lam = proj_lambda(
         state.lam + hyper.eta_lambda * (cutval - hyper.c1(t) * state.lam),
         hyper) * state.cuts_ii.active
@@ -169,9 +186,10 @@ def afto_step(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
         t_hat=jnp.where(active > 0, t + 1, state.stale.t_hat),
     )
 
-    return dataclasses.replace(
+    new_state = dataclasses.replace(
         state, X1=X1, X2=X2, X3=X3, z1=z1, z2=z2, z3=z3,
         theta=theta, lam=lam, stale=stale, t=t + 1)
+    return new_state, {"flat_ii": a_flat, "cutval": cutval}
 
 
 def _bmask(active, x):

@@ -20,10 +20,12 @@ used as printed.  With mu=0 both reduce to the classical convex cut.
 """
 from __future__ import annotations
 
-from typing import Any
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import CutSet
 from repro.utils.tree import (tree_dot, tree_norm_sq, tree_zeros_like)
@@ -114,6 +116,139 @@ def drop_inactive(cuts: CutSet, multipliers, tol: float = 1e-8) -> CutSet:
 
 
 # ---------------------------------------------------------------------------
+# flattened layout: the whole coefficient space as one (P, D) matrix
+# ---------------------------------------------------------------------------
+#
+# The per-iteration cut algebra (eval_cuts, the Lagrangian cut terms and
+# the weighted-coefficient gradients) is a handful of contractions of the
+# same (P, D) operator against D-length variable vectors.  Flattening the
+# five coefficient block trees (a1/a2/a3 with leading (P,), b2/b3 with
+# leading (P, N)) into one contiguous f32 matrix turns all of them into
+# the wide mat-vec the Pallas `cut_eval` kernel is shaped for, and makes
+# the whole thing batch cleanly under the sweep vmap.  Column order is
+# the jax.tree leaf order of (a1, a2, a3, b2, b3).
+
+_BLOCK_NAMES = ("a1", "a2", "a3", "b2", "b3")
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Layout of the flattened cut coefficient space.
+
+    Per-leaf entries run over the concatenated leaves of the five blocks
+    (a1, a2, a3, b2, b3) in order; `shapes` are the *point* shapes (the
+    coefficient leaf shape without its leading (P,) cut axis, so b-block
+    shapes keep the worker axis).
+    """
+    tdefs: Tuple[Any, ...]          # one treedef per block
+    nleaves: Tuple[int, ...]        # leaves per block
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+    d_total: int
+
+
+# Specs are tiny and purely shape-derived, so one cache entry per cut-set
+# layout (i.e. per problem) is enough; keyed structurally so traced and
+# concrete CutSets share entries.
+_SPEC_CACHE: Dict[tuple, FlatSpec] = {}
+
+
+def flat_spec(cuts: CutSet) -> FlatSpec:
+    """The (cached) flattening spec for this CutSet's layout."""
+    blocks = tuple(getattr(cuts, name) for name in _BLOCK_NAMES)
+    flat = [jax.tree.flatten(b) for b in blocks]
+    key = tuple(
+        (tdef, tuple((l.shape, str(l.dtype)) for l in leaves))
+        for leaves, tdef in flat)
+    spec = _SPEC_CACHE.get(key)
+    if spec is None:
+        leaves = [l for ls, _ in flat for l in ls]
+        shapes = tuple(l.shape[1:] for l in leaves)
+        sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+        offsets = tuple(np.concatenate([[0], np.cumsum(sizes)[:-1]])
+                        .astype(int)) if sizes else ()
+        spec = FlatSpec(
+            tdefs=tuple(tdef for _, tdef in flat),
+            nleaves=tuple(len(ls) for ls, _ in flat),
+            shapes=shapes,
+            dtypes=tuple(l.dtype for l in leaves),
+            sizes=sizes, offsets=offsets, d_total=sum(sizes))
+        _SPEC_CACHE[key] = spec
+    return spec
+
+
+def flatten_cuts(cuts: CutSet, spec: Optional[FlatSpec] = None):
+    """All coefficient blocks as one contiguous (P, D) f32 matrix.
+
+    The reshape sizes come from `spec`, so passing a spec from a
+    different layout fails loudly instead of silently misaligning
+    columns."""
+    if spec is None:
+        spec = flat_spec(cuts)
+    leaves = [l for name in _BLOCK_NAMES
+              for l in jax.tree.leaves(getattr(cuts, name))]
+    p = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(p, size).astype(jnp.float32)
+         for l, size in zip(leaves, spec.sizes)], axis=1)
+
+
+def flatten_point(spec: FlatSpec, z1, z2, z3, X2=None, X3=None):
+    """The variable point (z1, z2, z3, {x2_j}, {x3_j}) as a (D,) f32
+    vector in the spec's column order.  X2/X3 may be None (zero block,
+    e.g. layer-I cuts carry no b2 coefficients)."""
+    parts = []
+    i = 0
+    for b_idx, block in enumerate((z1, z2, z3, X2, X3)):
+        n = spec.nleaves[b_idx]
+        if block is None:
+            parts.extend(jnp.zeros((spec.sizes[i + k],), jnp.float32)
+                         for k in range(n))
+        else:
+            leaves = jax.tree.leaves(block)
+            parts.extend(l.reshape(-1).astype(jnp.float32) for l in leaves)
+        i += n
+    return jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.float32)
+
+
+def unflatten_coeff(spec: FlatSpec, vec):
+    """Inverse of the column layout for a single (D,) vector: returns the
+    (a1, a2, a3, b2, b3) block trees (point shapes, original dtypes)."""
+    out = []
+    i = 0
+    for b_idx in range(len(_BLOCK_NAMES)):
+        n = spec.nleaves[b_idx]
+        leaves = [
+            vec[spec.offsets[i + k]:spec.offsets[i + k] + spec.sizes[i + k]]
+            .reshape(spec.shapes[i + k]).astype(spec.dtypes[i + k])
+            for k in range(n)]
+        out.append(jax.tree.unflatten(spec.tdefs[b_idx], leaves))
+        i += n
+    return tuple(out)
+
+
+def eval_cuts_flat(a_flat, v_flat, c, active, impl: str = None):
+    """Per-slot cut values from flattened operands: the `cut_eval`
+    mat-vec  (A @ v - c) * active.  impl=None auto-routes (Mosaic kernel
+    on TPU, the identical-math XLA mat-vec off-TPU — see ops.cut_eval)
+    on forward-only hot paths; impl="ref" (plain jnp, transposable to
+    any order) is required on differentiated paths."""
+    from repro.kernels import ops
+    return ops.cut_eval(a_flat, v_flat, c, active, impl=impl)
+
+
+def cut_weighted_coeff_flat(spec: FlatSpec, a_flat, weights):
+    """sum_l w_l * coeff_l for EVERY block at once: one (P,)x(P,D)
+    mat-vec, unflattened to the (a1, a2, a3, b2, b3) block trees.  The
+    b-block results keep the worker axis (N, ...), i.e. worker j's entry
+    is sum_l w_l * b_{l,j}."""
+    return unflatten_coeff(
+        spec, weights.astype(jnp.float32) @ a_flat)
+
+
+# ---------------------------------------------------------------------------
 # evaluation
 # ---------------------------------------------------------------------------
 
@@ -139,7 +274,24 @@ def _dot_pn(stacked, V):
 
 
 def eval_cuts(cuts: CutSet, z1, z2, z3, X2=None, X3=None):
-    """Per-slot cut values  <a,z> + sum_j <b,x_j> - c  (0 for inactive)."""
+    """Per-slot cut values  <a,z> + sum_j <b,x_j> - c  (0 for inactive).
+
+    Routed through the flattened (P, D) layout as one `cut_eval`-shaped
+    mat-vec via `repro.kernels.ops.cut_eval`.  Uses the transposable
+    impl="ref" route because this entry point sits inside the inner
+    Lagrangians, which are differentiated to second order at cut refresh
+    (see ops.cut_eval); the forward-only hot paths (afto_step, the
+    stationarity gap) call `eval_cuts_flat` with the Pallas kernel.
+    `eval_cuts_tree` is the tree-op reference this is tested against."""
+    spec = flat_spec(cuts)
+    v = flatten_point(spec, z1, z2, z3, X2, X3)
+    return eval_cuts_flat(flatten_cuts(cuts, spec), v, cuts.c, cuts.active,
+                          impl="ref")
+
+
+def eval_cuts_tree(cuts: CutSet, z1, z2, z3, X2=None, X3=None):
+    """Tree-op reference implementation of `eval_cuts` (kept for tests
+    and as documentation of the per-block contraction)."""
     val = _dot_p(cuts.a1, z1) + _dot_p(cuts.a2, z2) + _dot_p(cuts.a3, z3)
     if X2 is not None:
         val = val + _dot_pn(cuts.b2, X2)

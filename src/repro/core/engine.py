@@ -1,4 +1,5 @@
-"""Compiled trajectory engine: the whole AFTO run in one `lax.scan`.
+"""Compiled trajectory engine: whole AFTO runs (and sweeps) in one
+`lax.scan` dispatch.
 
 The straggler scheduler is a seeded host-side simulation with no feedback
 from the optimization state, so its entire arrival process can be
@@ -10,12 +11,16 @@ T-iteration trajectory of Alg. 1 driven inside a single donated-buffer
   * `cut_refresh` via `lax.cond` on every t_pre-th iteration with
     t < t1 (Eqs. 23-25),
   * gap / cut-count / user metrics accumulated into preallocated
-    history arrays at `metrics_every` strides (again under `lax.cond`,
-    so the stationarity gap is only computed at record steps).
+    history arrays at `metrics_every` strides (under `lax.cond`, and the
+    stationarity gap is *fused* with the step: it reuses the step's
+    flattened cut operator and cut values instead of recomputing them —
+    see `afto_step_aux` / `stationarity_gap_sq(aux=...)`).
 
-One XLA dispatch replaces T host round-trips, which is what lets the
-paper's wall-clock claims be measured instead of being drowned in
-Python dispatch overhead (`benchmarks/engine_speed.py` quantifies it).
+`run_scanned` drives one trajectory; `run_swept` vmaps the same scan
+body over a leading run axis R (stacked initial states, stacked schedule
+masks, per-run data and sweepable hyper scalars) so a whole benchmark
+sweep — every (seed, method) cell — is ONE donated XLA dispatch
+returning (R,)-leading states and histories.
 
 `metrics_fn` must be JAX-traceable here (it is traced into the scan
 body); host-callback metrics still work through the eager path of
@@ -29,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +50,25 @@ from repro.core.types import AFTOState, Hyper, TrilevelProblem
 class RunResult:
     state: AFTOState
     history: Dict
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """R trajectories from one dispatch: every state leaf and per-run
+    history array carries a leading (R,) axis ("t" is shared)."""
+    state: AFTOState
+    history: Dict
+
+    @property
+    def n_runs(self) -> int:
+        return int(jax.tree.leaves(self.state)[0].shape[0])
+
+    def run(self, r: int) -> RunResult:
+        """Row r as a RunResult with the single-run history layout."""
+        state_r = jax.tree.map(lambda x: x[r], self.state)
+        hist_r = {k: (v[r] if getattr(v, "ndim", 1) == 2 else v)
+                  for k, v in self.history.items()}
+        return RunResult(state=state_r, history=hist_r)
 
 
 def record_slots(n_iterations: int,
@@ -71,20 +95,30 @@ def _hyper_key(hyper: Hyper) -> tuple:
         for f in dataclasses.fields(hyper)))
 
 
-# Compiled-trajectory cache.  Keyed on object identity for problem /
+# Compiled-trajectory caches.  Keyed on object identity for problem /
 # metrics_fn (both are kept alive by the cache entry itself, so ids
 # cannot be recycled while a key references them) and structurally on
 # the hyper scalars and record layout.
 _CACHE: Dict[tuple, tuple] = {}
+_SWEEP_CACHE: Dict[tuple, tuple] = {}
 _CACHE_MAX = 16
 
+# How many times each builder actually traced a new scan/sweep — the
+# retrace regression tests assert this stays flat across warm calls.
+BUILD_COUNTS = {"scan": 0, "sweep": 0}
 
-def _build_scan(problem: TrilevelProblem, hyper: Hyper,
-                metrics_fn: Optional[Callable], keys, donate: bool):
+# Hyper fields that determine array shapes or unrolled loop lengths;
+# they must be Python constants at trace time and cannot be swept.
+_STATIC_HYPER_FIELDS = frozenset({"n_workers", "p_max", "k_inner", "d1"})
+
+
+def _make_step_body(problem: TrilevelProblem, hyper: Hyper,
+                    metrics_fn: Optional[Callable], keys):
+    """The per-iteration scan body shared by run_scanned and run_swept."""
     def step_body(carry, xs):
         st, hist = carry
         mask, it, slot = xs
-        st = afto_lib.afto_step(problem, hyper, st, mask)
+        st, step_aux = afto_lib.afto_step_aux(problem, hyper, st, mask)
         do_refresh = ((it + 1) % hyper.t_pre == 0) & (it < hyper.t1)
         st = jax.lax.cond(
             do_refresh,
@@ -92,8 +126,15 @@ def _build_scan(problem: TrilevelProblem, hyper: Hyper,
             lambda s: s, st)
 
         def write(h):
+            # the gap reuses the step's flat cut operator + cut values;
+            # a refresh rewrote the polytope, so recompute them there.
+            aux = jax.lax.cond(
+                do_refresh,
+                lambda s, _a: stat_lib.make_gap_aux(problem, hyper, s),
+                lambda _s, a: a, st, step_aux)
             vals = {
-                "gap_sq": stat_lib.stationarity_gap_sq(problem, hyper, st),
+                "gap_sq": stat_lib.stationarity_gap_sq(
+                    problem, hyper, st, aux=aux),
                 "n_cuts_i": jnp.sum(st.cuts_i.active),
                 "n_cuts_ii": jnp.sum(st.cuts_ii.active),
             }
@@ -104,6 +145,14 @@ def _build_scan(problem: TrilevelProblem, hyper: Hyper,
 
         hist = jax.lax.cond(slot >= 0, write, lambda h: h, hist)
         return (st, hist), None
+
+    return step_body
+
+
+def _build_scan(problem: TrilevelProblem, hyper: Hyper,
+                metrics_fn: Optional[Callable], keys, donate: bool):
+    BUILD_COUNTS["scan"] += 1
+    step_body = _make_step_body(problem, hyper, metrics_fn, keys)
 
     def scan_all(st, hist, masks, its, slots):
         (st, hist), _ = jax.lax.scan(step_body, (st, hist),
@@ -172,3 +221,172 @@ def run_scanned(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
         schedule.max_staleness)[record_its].astype(np.float64)
     history["host_time"] = elapsed * (record_its + 1) / n_iterations
     return RunResult(state=state, history=history)
+
+
+# ---------------------------------------------------------------------------
+# batched sweeps: R trajectories in one vmapped dispatch
+# ---------------------------------------------------------------------------
+
+def _build_sweep(problem: TrilevelProblem, hyper: Hyper,
+                 metrics_fn: Optional[Callable], keys,
+                 sweep_names: tuple, has_data: bool, init_inside: bool):
+    BUILD_COUNTS["sweep"] += 1
+
+    def one_run(st, hist, masks, sweep_vals, data, its, slots):
+        prob = problem if data is None else \
+            dataclasses.replace(problem, data=data)
+        hyp = dataclasses.replace(
+            hyper, **dict(zip(sweep_names, sweep_vals))) \
+            if sweep_names else hyper
+        step_body = _make_step_body(prob, hyp, metrics_fn, keys)
+        (st, hist), _ = jax.lax.scan(step_body, (st, hist),
+                                     (masks, its, slots))
+        return st, hist
+
+    def vmapped(st, hist, masks, sweep_vals, data, its, slots):
+        return jax.vmap(
+            one_run,
+            in_axes=(0, 0, 0, 0, 0 if has_data else None, None, None))(
+                st, hist, masks, sweep_vals, data, its, slots)
+
+    if not init_inside:
+        return jax.jit(vmapped, donate_argnums=(0, 1))
+
+    # default-init sweeps build the stacked initial state inside the
+    # compiled dispatch (masks carries R statically) — the ~60 tiny
+    # init_state + tile host dispatches otherwise dominate the whole
+    # warm sweep at quickstart scale.
+    def sweep_all(hist, masks, sweep_vals, data, its, slots):
+        st0 = afto_lib.init_state(problem, hyper)
+        st = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x[None], masks.shape[:1] + x.shape).astype(x.dtype), st0)
+        return vmapped(st, hist, masks, sweep_vals, data, its, slots)
+
+    return jax.jit(sweep_all, donate_argnums=(0,))
+
+
+def run_swept(problem: TrilevelProblem, hyper: Hyper,
+              schedules: Sequence[Schedule],
+              metrics_fn: Optional[Callable] = None,
+              metrics_every: int = 10,
+              states: Optional[AFTOState] = None,
+              data=None,
+              sweep_hypers: Optional[Dict] = None) -> SweepResult:
+    """Run R = len(schedules) whole trajectories in ONE vmapped dispatch.
+
+    The scan body of `run_scanned` is `jax.vmap`'d over a leading run
+    axis: stacked initial states, stacked schedule masks, per-run data
+    slices and per-run hyper scalars; the iteration/slot streams are
+    shared.  All schedules must have the same length and worker count.
+
+      states       optional stacked AFTOState ((R,)-leading leaves, e.g.
+                   per-seed inits via utils.tree.tree_stack); defaults to
+                   R copies of `init_state`.  Copied internally — the
+                   dispatch donates its own buffers, never the caller's.
+      data         optional replacement for `problem.data` with a
+                   leading (R,) axis per leaf (per-seed datasets).
+      sweep_hypers dict of Hyper field name -> (R,) values, threaded
+                   into the traced step per run.  Shape-determining
+                   fields (n_workers/p_max/k_inner/d1) stay static and
+                   cannot be swept.
+
+    History layout: per-run keys (gap_sq, n_cuts_*, sim_time,
+    max_staleness, host_time, metrics_fn keys) are (R, n_records)
+    arrays; "t" is shared (n_records,).  `host_time` is an
+    elapsed/R-proration: the single dispatch interleaves all R
+    trajectories, so per-run host seconds do not exist — each run is
+    charged an equal 1/R share of the dispatch wall-clock, prorated
+    over iterations exactly like the single-run engine.
+    """
+    schedules = list(schedules)
+    if not schedules:
+        raise ValueError("run_swept needs at least one schedule")
+    n_runs = len(schedules)
+    n_iterations = schedules[0].n_iterations
+    for s in schedules[1:]:
+        if (s.n_iterations, s.n_workers) != (n_iterations,
+                                             schedules[0].n_workers):
+            raise ValueError(
+                "all swept schedules must share n_iterations/n_workers")
+
+    sweep_hypers = dict(sweep_hypers or {})
+    field_names = {f.name for f in dataclasses.fields(Hyper)}
+    for name in sweep_hypers:
+        if name not in field_names:
+            raise ValueError(f"unknown hyper field {name!r}")
+        if name in _STATIC_HYPER_FIELDS:
+            raise ValueError(
+                f"hyper field {name!r} is shape-determining and cannot "
+                "be swept; run separate sweeps instead")
+    sweep_names = tuple(sorted(sweep_hypers))
+    sweep_vals = tuple(jnp.asarray(sweep_hypers[k]) for k in sweep_names)
+    for name, v in zip(sweep_names, sweep_vals):
+        if v.shape != (n_runs,):
+            raise ValueError(
+                f"sweep_hypers[{name!r}] must have shape ({n_runs},), "
+                f"got {v.shape}")
+
+    init_inside = states is None
+    if not init_inside:
+        # private copy: the swept dispatch donates its inputs
+        states = jax.tree.map(jnp.array, states)
+    if data is not None:
+        data = jax.tree.map(jnp.asarray, data)
+        for leaf in jax.tree.leaves(data):
+            if leaf.shape[:1] != (n_runs,):
+                raise ValueError(
+                    "swept data leaves need a leading (R,) axis")
+
+    record_its, slots = record_slots(n_iterations, metrics_every)
+    n_records = len(record_its)
+    if metrics_fn is None:
+        state_one = None           # _metric_keys won't trace anything
+    elif init_inside:
+        state_one = jax.eval_shape(
+            lambda: afto_lib.init_state(problem, hyper))
+    else:
+        state_one = jax.tree.map(lambda x: x[0], states)
+    keys = _metric_keys(problem, hyper, metrics_fn, state_one)
+
+    cache_key = (id(problem), id(metrics_fn), _hyper_key(hyper),
+                 sweep_names, data is not None, init_inside, n_runs,
+                 n_iterations, metrics_every)
+    hit = _SWEEP_CACHE.pop(cache_key, None)
+    if hit is None:
+        fn = _build_sweep(problem, hyper, metrics_fn, keys, sweep_names,
+                          data is not None, init_inside)
+        hit = (fn, problem, metrics_fn)   # keep-alive refs pin the ids
+        while len(_SWEEP_CACHE) >= _CACHE_MAX:
+            _SWEEP_CACHE.pop(next(iter(_SWEEP_CACHE)))
+    _SWEEP_CACHE[cache_key] = hit
+    fn = hit[0]
+
+    hist0 = {k: jnp.zeros((n_runs, n_records), jnp.float32) for k in keys}
+    masks = jnp.asarray(
+        np.stack([s.active for s in schedules]), jnp.float32)
+    its = jnp.arange(n_iterations, dtype=jnp.int32)
+
+    t_start = time.perf_counter()
+    if init_inside:
+        state, hist = fn(hist0, masks, sweep_vals, data, its,
+                         jnp.asarray(slots))
+    else:
+        state, hist = fn(states, hist0, masks, sweep_vals, data, its,
+                         jnp.asarray(slots))
+    jax.block_until_ready(state)
+    elapsed = time.perf_counter() - t_start
+
+    history = {k: np.asarray(v) for k, v in hist.items()}
+    history["t"] = (record_its + 1).astype(np.float64)
+    history["sim_time"] = np.stack(
+        [np.asarray(s.sim_time)[record_its] for s in schedules])
+    history["max_staleness"] = np.stack(
+        [np.asarray(s.max_staleness)[record_its].astype(np.float64)
+         for s in schedules])
+    # one dispatch covers R trajectories: charge each run elapsed/R
+    # (an approximation — the runs execute interleaved, not serially).
+    history["host_time"] = np.broadcast_to(
+        (elapsed / n_runs) * (record_its + 1) / n_iterations,
+        (n_runs, n_records)).copy()
+    return SweepResult(state=state, history=history)

@@ -1,4 +1,10 @@
-"""Augmented / regularized Lagrangians (paper Eqs. 4, 11, 14, 15)."""
+"""Augmented / regularized Lagrangians (paper Eqs. 4, 11, 14, 15).
+
+The hyper-polyhedral cut terms in `l_p2` / `l_p` evaluate through the
+flattened (P, D) cut operator (`cuts.eval_cuts` -> Pallas `cut_eval`
+mat-vec with a custom VJP), so they stay one wide contraction on the hot
+path and remain differentiable through the inner ADMM rollouts.
+"""
 from __future__ import annotations
 
 import jax

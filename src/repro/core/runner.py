@@ -1,16 +1,20 @@
-"""Trajectory dispatcher: compiled-scan engine or eager host loop.
+"""Trajectory dispatcher: compiled-scan engine, batched sweep, or eager
+host loop.
 
 `run(mode="scan")` (the default) materializes the straggler schedule up
 front and executes the whole trajectory inside one compiled `lax.scan`
 (`repro.core.engine.run_scanned`) — this is the fast path; `metrics_fn`
-must be JAX-traceable.  `run(mode="eager")` keeps the original
+must be JAX-traceable.  `run(mode="sweep")` batches R trajectories
+(per-seed schedules, per-run data/hypers) into one vmapped dispatch
+(`repro.core.engine.run_swept`).  `run(mode="eager")` keeps the original
 per-iteration host loop, which supports arbitrary host-side
 `metrics_fn` callbacks and per-iteration host timestamps.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +22,7 @@ import jax.numpy as jnp
 from repro.core import afto as afto_lib
 from repro.core import engine as engine_lib
 from repro.core import stationarity as stat_lib
-from repro.core.engine import RunResult
+from repro.core.engine import RunResult, SweepResult
 from repro.core.scheduler import (Schedule, StragglerConfig,
                                   StragglerScheduler)
 from repro.core.types import AFTOState, Hyper, TrilevelProblem
@@ -32,7 +36,12 @@ def run(problem: TrilevelProblem, hyper: Hyper,
         state: Optional[AFTOState] = None,
         jit: bool = True,
         mode: str = "scan",
-        schedule: Optional[Schedule] = None) -> RunResult:
+        schedule: Optional[Schedule] = None,
+        schedules: Optional[Sequence[Schedule]] = None,
+        seeds: Optional[Sequence[int]] = None,
+        sweep_states: Optional[AFTOState] = None,
+        sweep_data=None,
+        sweep_hypers: Optional[Dict] = None):
     """Run AFTO for `n_iterations` master iterations.
 
     mode="scan": one compiled `lax.scan` over a precomputed arrival
@@ -41,9 +50,16 @@ def run(problem: TrilevelProblem, hyper: Hyper,
     jit-traceable and is evaluated inside the scan every `metrics_every`
     iterations.
 
+    mode="sweep": R whole trajectories in one vmapped dispatch
+    (returns a `SweepResult`).  Pass `schedules` (one per run), or
+    `seeds` — each seed re-seeds `scheduler_cfg`'s arrival process.
+    `sweep_states` / `sweep_data` / `sweep_hypers` forward to
+    `engine.run_swept` for per-run initial states, per-run problem data
+    and swept hyper scalars.
+
     mode="eager": the per-iteration host loop; metrics_fn may be an
     arbitrary host callback.  Simulated wall-clock (scheduler) and host
-    wall-clock are always recorded in both modes.
+    wall-clock are always recorded in every mode.
     """
     if scheduler_cfg is None:
         scheduler_cfg = StragglerConfig(
@@ -52,7 +68,32 @@ def run(problem: TrilevelProblem, hyper: Hyper,
     if schedule is not None:
         n_iterations = schedule.n_iterations
     if not jit:
+        if mode == "sweep":
+            raise ValueError("mode='sweep' requires jit")
         mode = "eager"   # un-jitted debugging only exists on the host loop
+
+    if mode == "sweep":
+        if state is not None or schedule is not None:
+            raise ValueError(
+                "mode='sweep' takes per-run sweep_states/schedules; the "
+                "single-run state/schedule parameters would be silently "
+                "ignored")
+        if schedules is not None and seeds is not None:
+            raise ValueError(
+                "pass either explicit `schedules` or `seeds` (which "
+                "materialize one schedule per seed), not both")
+        if schedules is None:
+            seed_list = list(seeds) if seeds is not None \
+                else [scheduler_cfg.seed]
+            schedules = [
+                StragglerScheduler(
+                    dataclasses.replace(scheduler_cfg, seed=s)
+                ).precompute(n_iterations)
+                for s in seed_list]
+        return engine_lib.run_swept(
+            problem, hyper, schedules, metrics_fn=metrics_fn,
+            metrics_every=metrics_every, states=sweep_states,
+            data=sweep_data, sweep_hypers=sweep_hypers)
 
     if mode == "scan":
         if schedule is None:
@@ -62,7 +103,8 @@ def run(problem: TrilevelProblem, hyper: Hyper,
             problem, hyper, schedule, metrics_fn=metrics_fn,
             metrics_every=metrics_every, state=state)
     if mode != "eager":
-        raise ValueError(f"unknown mode {mode!r}; expected 'scan'|'eager'")
+        raise ValueError(
+            f"unknown mode {mode!r}; expected 'scan'|'sweep'|'eager'")
 
     sched = StragglerScheduler(scheduler_cfg)
 

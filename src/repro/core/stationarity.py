@@ -1,4 +1,12 @@
-"""Stationarity gap (Definitions 4.1/4.2, Eqs. 26/27)."""
+"""Stationarity gap (Definitions 4.1/4.2, Eqs. 26/27).
+
+The cut-dependent terms ride on the flattened (P, D) cut operator: one
+`w @ A` mat-vec yields the z-block gradients AND the per-worker b-block
+sums, and the cut values come from the `cut_eval` kernel.  At record
+iterations inside the compiled engine the step has already produced both
+products (`afto_step_aux`), so the gap accepts them via `aux=` instead
+of recomputing — only the f1 gradients at the post-step point remain.
+"""
 from __future__ import annotations
 
 import jax
@@ -10,10 +18,37 @@ from repro.core.types import AFTOState, Hyper, TrilevelProblem
 from repro.utils.tree import tree_norm_sq, tree_sub, tree_axpy
 
 
+def make_gap_aux(problem: TrilevelProblem, hyper: Hyper, state: AFTOState):
+    """The cut products the gap needs: the flattened II-polytope operator
+    and the cut values at `state`'s point.  Structure-identical to the
+    aux returned by `afto_step_aux`, so the engine can select between
+    them under `lax.cond` (it must recompute when a `cut_refresh`
+    rewrote the polytope after the step)."""
+    spec = cuts_lib.flat_spec(state.cuts_ii)
+    a_flat = cuts_lib.flatten_cuts(state.cuts_ii, spec)
+    cutval = cuts_lib.eval_cuts_flat(
+        a_flat,
+        cuts_lib.flatten_point(spec, state.z1, state.z2, state.z3,
+                               state.X2, state.X3),
+        state.cuts_ii.c, state.cuts_ii.active)
+    return {"flat_ii": a_flat, "cutval": cutval}
+
+
 def stationarity_gap_sq(problem: TrilevelProblem, hyper: Hyper,
-                        state: AFTOState):
-    """|| grad G^t ||^2 of the *unregularized* L_p (Eq. 26)."""
+                        state: AFTOState, aux=None):
+    """|| grad G^t ||^2 of the *unregularized* L_p (Eq. 26).
+
+    aux, when given, must be `make_gap_aux`-shaped products valid at
+    `state` (the engine passes the step's own)."""
+    if aux is None:
+        aux = make_gap_aux(problem, hyper, state)
     lam_a = state.lam * state.cuts_ii.active
+    spec = cuts_lib.flat_spec(state.cuts_ii)
+    # one mat-vec: a-block gradients for the master z's plus the
+    # per-worker b-block sums (lam is shared across workers here, so the
+    # stale per-worker contraction collapses to the same product).
+    ga1, ga2, ga3, gb2, gb3 = cuts_lib.cut_weighted_coeff_flat(
+        spec, aux["flat_ii"], lam_a)
 
     # worker blocks
     def f1_grads(data_j, x1_j, x2_j, x3_j):
@@ -23,26 +58,17 @@ def stationarity_gap_sq(problem: TrilevelProblem, hyper: Hyper,
     g1_f, g2_f, g3_f = jax.vmap(f1_grads)(
         problem.data, state.X1, state.X2, state.X3)
     g1 = jax.tree.map(jnp.add, g1_f, state.theta)
-    lam_np = jnp.broadcast_to(lam_a[None], (hyper.n_workers,) + lam_a.shape)
-    g2 = jax.tree.map(jnp.add, g2_f,
-                      afto_lib._cut_coeff_per_worker(state.cuts_ii, lam_np,
-                                                     "b2"))
-    g3 = jax.tree.map(jnp.add, g3_f,
-                      afto_lib._cut_coeff_per_worker(state.cuts_ii, lam_np,
-                                                     "b3"))
+    g2 = jax.tree.map(jnp.add, g2_f, gb2)
+    g3 = jax.tree.map(jnp.add, g3_f, gb3)
     gap = tree_norm_sq(g1) + tree_norm_sq(g2) + tree_norm_sq(g3)
 
     # master z blocks
     theta_sum = jax.tree.map(lambda th: jnp.sum(th, axis=0), state.theta)
-    gz1 = tree_axpy(-1.0, theta_sum,
-                    cuts_lib.cut_weighted_coeff(state.cuts_ii, lam_a, "a1"))
-    gz2 = cuts_lib.cut_weighted_coeff(state.cuts_ii, lam_a, "a2")
-    gz3 = cuts_lib.cut_weighted_coeff(state.cuts_ii, lam_a, "a3")
-    gap = gap + tree_norm_sq(gz1) + tree_norm_sq(gz2) + tree_norm_sq(gz3)
+    gz1 = tree_axpy(-1.0, theta_sum, ga1)
+    gap = gap + tree_norm_sq(gz1) + tree_norm_sq(ga2) + tree_norm_sq(ga3)
 
     # projected dual residuals (Eq. 27)
-    cutval = cuts_lib.eval_cuts(state.cuts_ii, state.z1, state.z2, state.z3,
-                                X2=state.X2, X3=state.X3)
+    cutval = aux["cutval"]
     lam_res = (state.lam - afto_lib.proj_lambda(
         state.lam + hyper.eta_lambda * cutval, hyper)) / hyper.eta_lambda
     gap = gap + jnp.sum((lam_res * state.cuts_ii.active) ** 2)

@@ -51,6 +51,10 @@ def cut_eval(a, v, c, active, *, block_d: int = BLOCK_D,
     """a: (P, D), v: (D,), c: (P,), active: (P,) -> (P,) cut values."""
     p, d = a.shape
     p_pad = ((p + P_PAD - 1) // P_PAD) * P_PAD
+    # never tile wider than the (128-aligned) variable space itself —
+    # quickstart-scale D would otherwise zero-pad to a full 2048 lane
+    # tile and waste the whole MXU row on padding.
+    block_d = min(block_d, max(128, ((d + 127) // 128) * 128))
     d_pad = ((d + block_d - 1) // block_d) * block_d
     a_p = jnp.zeros((p_pad, d_pad), a.dtype).at[:p, :d].set(a)
     v_p = jnp.zeros((1, d_pad), v.dtype).at[0, :d].set(v)

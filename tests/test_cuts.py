@@ -101,3 +101,205 @@ def test_cut_weighted_coeff_matches_manual():
     want = 0.5 * jnp.array([1.0, 2, 3]) + 2.0 * jnp.array([0.0, 1, 0])
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flattened (P, D) layout: round-trips + flat-vs-tree-vs-kernel regression
+# ---------------------------------------------------------------------------
+
+def _nested_cutset(p_max=4, n_workers=2, key=None):
+    """A cutset over nested/mixed-shape templates with two random cuts."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    z1_tpl = {"phi": jnp.zeros((2,))}
+    z2_tpl = {"w": jnp.zeros((2, 3)), "b": jnp.zeros((3,))}
+    z3_tpl = jnp.zeros((4,))
+    cs = cuts_lib.empty_cutset(p_max, n_workers, z1_tpl, z2_tpl, z3_tpl)
+
+    def rand_like(tpl, k):
+        leaves, tdef = jax.tree.flatten(tpl)
+        outs = [jax.random.normal(jax.random.fold_in(k, i), l.shape)
+                for i, l in enumerate(leaves)]
+        return jax.tree.unflatten(tdef, outs)
+
+    def stack_n(tpl, k):
+        return jax.tree.map(
+            lambda x: jax.random.normal(k, (n_workers,) + x.shape), tpl)
+
+    for t in range(2):
+        k = jax.random.fold_in(key, t)
+        coeffs = {"a1": rand_like(z1_tpl, k),
+                  "a2": rand_like(z2_tpl, jax.random.fold_in(k, 10)),
+                  "a3": rand_like(z3_tpl, jax.random.fold_in(k, 20)),
+                  "b2": stack_n(z2_tpl, jax.random.fold_in(k, 30)),
+                  "b3": stack_n(z3_tpl, jax.random.fold_in(k, 40))}
+        cs = cuts_lib.add_cut(cs, coeffs, 0.1 * t, t)
+    return cs, (z1_tpl, z2_tpl, z3_tpl)
+
+
+def test_flatten_unflatten_roundtrip_nested():
+    cs, _ = _nested_cutset()
+    spec = cuts_lib.flat_spec(cs)
+    a_flat = cuts_lib.flatten_cuts(cs, spec)
+    assert a_flat.shape == (4, spec.d_total)
+    for slot in range(2):
+        a1, a2, a3, b2, b3 = cuts_lib.unflatten_coeff(spec, a_flat[slot])
+        for got, want in zip(
+                jax.tree.leaves((a1, a2, a3, b2, b3)),
+                jax.tree.leaves(tuple(
+                    jax.tree.map(lambda x: x[slot], getattr(cs, n))
+                    for n in ("a1", "a2", "a3", "b2", "b3")))):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6)
+
+
+def test_flatten_point_matches_kernel_ref():
+    """flat eval == kernels/ref.py:cut_eval_ref on the flattened
+    operands == the tree-op eval_cuts_tree reference."""
+    from repro.kernels import ref as kref
+
+    cs, (z1_tpl, z2_tpl, z3_tpl) = _nested_cutset()
+    spec = cuts_lib.flat_spec(cs)
+    key = jax.random.PRNGKey(7)
+    z1 = jax.tree.map(lambda x: jax.random.normal(key, x.shape), z1_tpl)
+    z2 = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(key, 1), x.shape),
+        z2_tpl)
+    z3 = jax.random.normal(jax.random.fold_in(key, 2), (4,))
+    X2 = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(key, 3),
+                                    (2,) + x.shape), z2_tpl)
+    X3 = jax.random.normal(jax.random.fold_in(key, 4), (2, 4))
+
+    a_flat = cuts_lib.flatten_cuts(cs, spec)
+    v = cuts_lib.flatten_point(spec, z1, z2, z3, X2, X3)
+    want_tree = cuts_lib.eval_cuts_tree(cs, z1, z2, z3, X2=X2, X3=X3)
+    want_ref = kref.cut_eval_ref(a_flat, v, cs.c, cs.active)
+    np.testing.assert_allclose(np.asarray(want_ref), np.asarray(want_tree),
+                               rtol=1e-5, atol=1e-6)
+    got = cuts_lib.eval_cuts(cs, z1, z2, z3, X2=X2, X3=X3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_ref),
+                               rtol=1e-5, atol=1e-6)
+    # the Pallas kernel route agrees too (interpret off-TPU)
+    got_k = cuts_lib.eval_cuts_flat(a_flat, v, cs.c, cs.active,
+                                    impl="pallas")
+    np.testing.assert_allclose(np.asarray(got_k), np.asarray(want_ref),
+                               rtol=1e-5, atol=1e-6)
+    # X2=None zeroes the b2 columns
+    np.testing.assert_allclose(
+        np.asarray(cuts_lib.eval_cuts(cs, z1, z2, z3, X3=X3)),
+        np.asarray(cuts_lib.eval_cuts_tree(cs, z1, z2, z3, X3=X3)),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_cut_weighted_coeff_flat_matches_tree_ops():
+    cs, _ = _nested_cutset()
+    spec = cuts_lib.flat_spec(cs)
+    a_flat = cuts_lib.flatten_cuts(cs, spec)
+    w = jnp.array([0.5, -2.0, 7.0, 0.25]) * cs.active
+    flat = cuts_lib.cut_weighted_coeff_flat(spec, a_flat, w)
+    for b_idx, name in enumerate(("a1", "a2", "a3", "b2", "b3")):
+        want = cuts_lib.cut_weighted_coeff(cs, w, name)
+        for g, t in zip(jax.tree.leaves(flat[b_idx]),
+                        jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(t),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_flat_spec_is_cached_per_layout():
+    cs, _ = _nested_cutset()
+    assert cuts_lib.flat_spec(cs) is cuts_lib.flat_spec(cs)
+    other = cuts_lib.empty_cutset(2, 1, _tpl(1), _tpl(1), _tpl(1))
+    assert cuts_lib.flat_spec(other) is not cuts_lib.flat_spec(cs)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: flatten/unflatten round-trip over arbitrary templates
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _cut_layouts(draw):
+        """(p_max, n_workers, templates, active mask), random nesting."""
+        p_max = draw(st.integers(1, 5))
+        n_workers = draw(st.integers(1, 3))
+
+        def tpl_strategy():
+            leaf = st.tuples(st.integers(1, 3), st.integers(1, 3)).map(
+                lambda s: jnp.zeros(s))
+            return st.one_of(
+                leaf,
+                st.lists(leaf, min_size=1, max_size=2).map(tuple),
+                st.dictionaries(st.sampled_from(("a", "b", "c")), leaf,
+                                min_size=1, max_size=2))
+
+        tpls = tuple(draw(tpl_strategy()) for _ in range(3))
+        active = draw(st.lists(st.booleans(), min_size=p_max,
+                               max_size=p_max))
+        return p_max, n_workers, tpls, np.asarray(active, np.float32)
+
+
+def _roundtrip_property_body(layout, seed):
+    """flatten_cuts rows unflatten back to the stored coefficient blocks
+    and flatten_point inverts unflatten_coeff, for arbitrary pytree
+    templates, slot counts, worker counts and active masks."""
+    p_max, n_workers, (z1_tpl, z2_tpl, z3_tpl), active = layout
+    cs = cuts_lib.empty_cutset(p_max, n_workers, z1_tpl, z2_tpl, z3_tpl)
+    key = jax.random.PRNGKey(seed)
+
+    def rand(tpl, k, lead=()):
+        leaves, tdef = jax.tree.flatten(tpl)
+        outs = [jax.random.normal(jax.random.fold_in(k, i),
+                                  lead + l.shape)
+                for i, l in enumerate(leaves)]
+        return jax.tree.unflatten(tdef, outs)
+
+    for t in range(p_max):
+        k = jax.random.fold_in(key, t)
+        cs = cuts_lib.add_cut(cs, {
+            "a1": rand(z1_tpl, k), "a2": rand(z2_tpl, k),
+            "a3": rand(z3_tpl, k),
+            "b2": rand(z2_tpl, jax.random.fold_in(k, 1), (n_workers,)),
+            "b3": rand(z3_tpl, jax.random.fold_in(k, 2), (n_workers,)),
+        }, float(t), t)
+    cs = cuts_lib.drop_inactive(cs, jnp.asarray(active))
+
+    spec = cuts_lib.flat_spec(cs)
+    a_flat = cuts_lib.flatten_cuts(cs, spec)
+    assert a_flat.shape == (p_max, spec.d_total)
+    slot = p_max - 1
+    blocks = cuts_lib.unflatten_coeff(spec, a_flat[slot])
+    for got, want in zip(
+            jax.tree.leaves(blocks),
+            jax.tree.leaves(tuple(
+                jax.tree.map(lambda x: x[slot], getattr(cs, n))
+                for n in ("a1", "a2", "a3", "b2", "b3")))):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=0)
+    # flatten_point(unflatten_coeff(v)) == v
+    v = jax.random.normal(key, (spec.d_total,))
+    a1, a2, a3, b2, b3 = cuts_lib.unflatten_coeff(spec, v)
+    v_back = cuts_lib.flatten_point(spec, a1, a2, a3, b2, b3)
+    np.testing.assert_allclose(np.asarray(v_back), np.asarray(v),
+                               rtol=1e-6, atol=0)
+    # eval through the flat path == tree-op reference at a random point
+    val_flat = cuts_lib.eval_cuts(cs, a1, a2, a3, X2=b2, X3=b3)
+    val_tree = cuts_lib.eval_cuts_tree(cs, a1, a2, a3, X2=b2, X3=b3)
+    np.testing.assert_allclose(np.asarray(val_flat), np.asarray(val_tree),
+                               rtol=1e-4, atol=1e-5)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(_cut_layouts(), st.integers(0, 2 ** 31 - 1))
+    def test_flatten_roundtrip_property(layout, seed):
+        _roundtrip_property_body(layout, seed)
+else:                                      # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_flatten_roundtrip_property():
+        pass
