@@ -1,10 +1,12 @@
 """Engine benchmarks at quickstart scale (the 4-worker quadratic
 trilevel problem): eager host loop vs compiled-scan trajectory, the
-batched sweep engine vs an equivalent Python loop of scanned runs, and
-the Pallas `cut_eval` kernel at paper-scale D.  Emits the
+batched sweep engine vs an equivalent Python loop of scanned runs, the
+Pallas `cut_eval` kernel at paper-scale D, and incremental polytope
+maintenance (`add_cut` row writes / `drop_inactive` masks / evictions on
+the canonical `FlatCuts`) at paper-scale (P, D).  Emits the
 machine-readable perf record consumed by ``benchmarks/run.py --json`` so
-future PRs can diff ``{iters_per_sec, runs_per_sec_swept, ...}`` across
-engines."""
+future PRs can diff ``{iters_per_sec, runs_per_sec_swept,
+cut_updates_per_sec, ...}`` across engines."""
 from __future__ import annotations
 
 import dataclasses
@@ -21,6 +23,7 @@ N_WORKERS, DIM = 4, 3
 SWEEP_RUNS = 4          # R for the swept-vs-looped comparison
 KERNEL_D = 1 << 18      # paper-scale flattened cut space (sketched)
 KERNEL_P = 8
+CUT_UPDATES = 64        # interleaved maintenance ops per timed pass
 
 
 def quickstart_problem(seed: int = 0) -> TrilevelProblem:
@@ -93,6 +96,9 @@ def record(n_iterations: int = 200) -> dict:
                         jax.tree.leaves(res_warm.state))))
     out.update(sweep_record(n_iterations))
     out["cut_eval_kernel"] = kernel_record()
+    out["cut_maintenance"] = cut_update_record()
+    # top-level series for easy cross-PR diffing
+    out["cut_updates_per_sec"] = out["cut_maintenance"]["updates_per_sec"]
     return out
 
 
@@ -178,6 +184,63 @@ def kernel_record(p: int = KERNEL_P, d: int = KERNEL_D,
             "ref_gbps": bytes_touched / t_ref / 1e9}
 
 
+def cut_update_record(p: int = KERNEL_P, d: int = KERNEL_D,
+                      n_updates: int = CUT_UPDATES, reps: int = 3) -> dict:
+    """Incremental polytope maintenance at paper-scale (P, D): one jit'd
+    `lax.scan` of interleaved `add_cut` (flatten-new-row +
+    dynamic_update_slice, with evictions once the P slots fill) and
+    `drop_inactive` (row mask) ops on the canonical `FlatCuts`.  This is
+    the cost the engine pays at every cut refresh — before the flat
+    layout became canonical it also included an O(P*D) re-flatten per
+    consumer, which this record would catch regressing."""
+    from repro.core import cuts as cuts_lib
+
+    n = N_WORKERS
+    dz = max(1, d // (3 + 2 * n))        # D = 3*dz + 2*N*dz ~= d
+    tpl = jnp.zeros((dz,), jnp.float32)
+    fc0 = cuts_lib.empty_cuts(p, n, tpl, tpl, tpl)
+
+    key = jax.random.PRNGKey(0)
+    xs = {
+        "a1": jax.random.normal(key, (n_updates, dz), jnp.float32),
+        "a2": jax.random.normal(jax.random.fold_in(key, 1),
+                                (n_updates, dz), jnp.float32),
+        "a3": jax.random.normal(jax.random.fold_in(key, 2),
+                                (n_updates, dz), jnp.float32),
+        "b2": jax.random.normal(jax.random.fold_in(key, 3),
+                                (n_updates, n, dz), jnp.float32),
+        "b3": jax.random.normal(jax.random.fold_in(key, 4),
+                                (n_updates, n, dz), jnp.float32),
+        "c": jax.random.normal(jax.random.fold_in(key, 5), (n_updates,),
+                               jnp.float32),
+        "mult": jax.random.bernoulli(jax.random.fold_in(key, 6), 0.7,
+                                     (n_updates, p)).astype(jnp.float32),
+        "t": jnp.arange(n_updates, dtype=jnp.int32),
+    }
+
+    @jax.jit
+    def maintain(fc, xs):
+        def one(fc, x):
+            fc = cuts_lib.add_cut(
+                fc, {"a1": x["a1"], "a2": x["a2"], "a3": x["a3"],
+                     "b2": x["b2"], "b3": x["b3"]}, x["c"], x["t"])
+            fc = cuts_lib.drop_inactive(fc, x["mult"])
+            return fc, None
+        fc, _ = jax.lax.scan(one, fc, xs)
+        return fc
+
+    jax.block_until_ready(maintain(fc0, xs))          # warm/compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(maintain(fc0, xs))
+        best = min(best, time.perf_counter() - t0)
+    return {"p": p, "d": fc0.spec.d_total, "n_updates": n_updates,
+            "wall_s": best,
+            "updates_per_sec": n_updates / best,
+            "us_per_update": best * 1e6 / n_updates}
+
+
 def _entry(res, wall: float, n_iterations: int) -> dict:
     return {"wall_s": wall,
             "iters_per_sec": n_iterations / wall,
@@ -212,6 +275,10 @@ def main(n_iterations: int = 200, record_out: dict = None):
     rows.append(("cut_eval_kernel", ker["kernel_us"],
                  f"d={ker['d']};kernel_gbps={ker['kernel_gbps']:.2f};"
                  f"ref_gbps={ker['ref_gbps']:.2f}"))
+    cm = rec["cut_maintenance"]
+    rows.append(("cut_maintenance", cm["us_per_update"],
+                 f"p={cm['p']};d={cm['d']};"
+                 f"cut_updates_per_sec={cm['updates_per_sec']:.1f}"))
     return rows
 
 

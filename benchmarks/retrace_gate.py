@@ -1,0 +1,52 @@
+"""CI retrace gate: warm scan + sweep runs must compile exactly once.
+
+`repro.core.engine.BUILD_COUNTS` counts how many times the scan/sweep
+builders actually traced a new compiled trajectory.  In a fresh process,
+two scanned runs over the same schedule plus two identical sweeps must
+leave both counters at 1 — an accidental per-step `flat_spec`/re-flatten
+of the canonical cut matrix (or any cache-key regression) shows up as a
+retrace or a re-materialized build and fails this gate fast.
+
+  PYTHONPATH=src python -m benchmarks.retrace_gate
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+
+
+def main(n_iterations: int = 40, n_runs: int = 2) -> dict:
+    from benchmarks.engine_speed import quickstart_setup
+    from repro.core import engine
+    from repro.core.scheduler import StragglerScheduler
+
+    assert engine.BUILD_COUNTS == {"scan": 0, "sweep": 0}, (
+        "retrace gate must run in a fresh process", engine.BUILD_COUNTS)
+
+    problem, hyper, cfg, schedule = quickstart_setup(n_iterations)
+    schedules = [
+        StragglerScheduler(dataclasses.replace(cfg, seed=s))
+        .precompute(n_iterations) for s in range(n_runs)]
+
+    for _ in range(2):
+        engine.run_scanned(problem, hyper, schedule, metrics_every=10)
+    for _ in range(2):
+        engine.run_swept(problem, hyper, schedules, metrics_every=10)
+
+    ok = engine.BUILD_COUNTS == {"scan": 1, "sweep": 1}
+    out = {"build_counts": dict(engine.BUILD_COUNTS),
+           "status": "ok" if ok else "RETRACE"}
+    if not ok:
+        raise AssertionError(
+            f"scan/sweep retraced across warm runs: {engine.BUILD_COUNTS} "
+            "(expected {'scan': 1, 'sweep': 1})")
+    return out
+
+
+if __name__ == "__main__":
+    try:
+        print(json.dumps(main()))
+    except AssertionError as e:
+        print(json.dumps({"status": "FAIL", "error": str(e)}))
+        sys.exit(1)

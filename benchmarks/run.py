@@ -3,8 +3,11 @@ plus the framework-level benchmarks.  Prints ``name,us_per_call,derived``
 CSV.  ``--fast`` trims iteration counts for CI-speed runs.  ``--json
 out.json`` additionally writes the machine-readable engine perf record
 (eager vs scan ``{iters_per_sec, sim_time, gap_sq}``, the swept-engine
-series ``runs_per_sec_swept`` vs ``runs_per_sec_looped``, and the
-``cut_eval`` kernel microbenchmark) for trajectory tracking across PRs.
+series ``runs_per_sec_swept`` vs ``runs_per_sec_looped``, the
+``cut_eval`` kernel microbenchmark, and the incremental cut-maintenance
+series ``cut_updates_per_sec`` — interleaved add/drop/evict on the
+canonical ``FlatCuts`` at paper-scale (P, D)) for trajectory tracking
+across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig1,...]
 """
@@ -24,8 +27,8 @@ def main() -> None:
                          "kernels,comm,sketch,roofline,engine")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write the engine perf record (eager vs scan vs "
-                         "swept, plus the cut_eval kernel record) to "
-                         "this path")
+                         "swept, plus the cut_eval kernel and "
+                         "cut-maintenance records) to this path")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 

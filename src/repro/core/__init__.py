@@ -1,6 +1,7 @@
 """AFTO core: the paper's contribution (mu-cuts + async federated loop)."""
-from repro.core.types import (AFTOState, CutSet, Hyper, InnerState2,
-                              InnerState3, StaleView, TrilevelProblem)
+from repro.core.types import (AFTOState, CutSet, FlatCuts, FlatSpec, Hyper,
+                              InnerState2, InnerState3, StaleView,
+                              TrilevelProblem)
 from repro.core.afto import afto_step, afto_step_aux, cut_refresh, init_state
 from repro.core.engine import (SweepResult, record_slots, run_scanned,
                                run_swept)

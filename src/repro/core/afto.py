@@ -5,6 +5,12 @@ is the T_pre-periodic hyper-polytope update (Eqs. 23-25).  Both are pure,
 jit-able functions of (state, mask); asynchrony (who is active when, and
 what simulated wall-clock each iteration costs) lives in
 `repro.core.scheduler` on the host.
+
+Both polytopes live in `AFTOState` as canonical `FlatCuts` (one dense
+(P, D) matrix each): every cut contraction in the step reads the stored
+matrix directly, and `cut_refresh` writes the two new cuts as single
+rows — nothing here calls `flat_spec`/`flatten_cuts`, so the scanned
+trajectory never re-materializes the operator from block trees.
 """
 from __future__ import annotations
 
@@ -18,7 +24,7 @@ import jax.numpy as jnp
 from repro.core import cuts as cuts_lib
 from repro.core import inner as inner_lib
 from repro.core import lagrangian as lag
-from repro.core.types import (AFTOState, CutSet, Hyper, InnerState2,
+from repro.core.types import (AFTOState, Hyper, InnerState2,
                               InnerState3, StaleView, TrilevelProblem)
 from repro.utils.tree import (tree_axpy, tree_sub, tree_zeros_like)
 
@@ -50,8 +56,8 @@ def init_state(problem: TrilevelProblem, hyper: Hyper) -> AFTOState:
     z1, z2, z3 = problem.x1_init, problem.x2_init, problem.x3_init
     X1, X2, X3 = (_stack_n(z1, n), _stack_n(z2, n), _stack_n(z3, n))
     theta = tree_zeros_like(X1)
-    cuts_i = cuts_lib.empty_cutset(p, n, z1, z2, z3)
-    cuts_ii = cuts_lib.empty_cutset(p, n, z1, z2, z3)
+    cuts_i = cuts_lib.empty_cuts(p, n, z1, z2, z3)
+    cuts_ii = cuts_lib.empty_cuts(p, n, z1, z2, z3)
     inner3 = InnerState3(x3=X3, z3=z3, phi=tree_zeros_like(X3))
     inner2 = InnerState2(x2=X2, z2=z2, phi=tree_zeros_like(X2),
                          s=jnp.zeros((p,), jnp.float32),
@@ -67,20 +73,6 @@ def init_state(problem: TrilevelProblem, hyper: Hyper) -> AFTOState:
                      gamma_k=jnp.zeros((p,), jnp.float32),
                      inner3=inner3, inner2=inner2, stale=stale,
                      t=jnp.zeros((), jnp.int32))
-
-
-# ---------------------------------------------------------------------------
-# per-worker cut-coefficient contraction with per-worker (stale) weights
-# ---------------------------------------------------------------------------
-
-def _cut_coeff_per_worker(cuts: CutSet, lam_np, block: str):
-    """sum_l lam[j,l] * b_{l,j}  ->  tree with leading worker axis."""
-    w = lam_np * cuts.active[None, :]          # (N, P)
-    tree = getattr(cuts, block)                # leaves (P, N, ...)
-    return jax.tree.map(
-        lambda b: jnp.einsum(
-            "np,pn...->n...", w, b.astype(jnp.float32)).astype(b.dtype),
-        tree)
 
 
 # ---------------------------------------------------------------------------
@@ -118,14 +110,16 @@ def afto_step_aux(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
     g1_f, g2_f, g3_f = jax.vmap(f1_grads)(
         problem.data, state.X1, state.X2, state.X3)
 
-    # consensus dual term (stale own theta) and cut terms (stale lambda)
+    # consensus dual term (stale own theta) and cut terms (stale lambda):
+    # the per-worker b-block sums are column slices of the canonical
+    # (P, D) matrix contracted with the (N, P) stale weight table.
     g1 = jax.tree.map(jnp.add, g1_f, state.stale.theta)
     g2 = jax.tree.map(jnp.add, g2_f,
-                      _cut_coeff_per_worker(state.cuts_ii, state.stale.lam,
-                                            "b2"))
+                      cuts_lib.cut_coeff_per_worker(
+                          state.cuts_ii, state.stale.lam, "b2"))
     g3 = jax.tree.map(jnp.add, g3_f,
-                      _cut_coeff_per_worker(state.cuts_ii, state.stale.lam,
-                                            "b3"))
+                      cuts_lib.cut_coeff_per_worker(
+                          state.cuts_ii, state.stale.lam, "b3"))
 
     def masked_step(X, g, eta):
         return jax.tree.map(
@@ -136,12 +130,13 @@ def afto_step_aux(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
     X3 = masked_step(state.X3, g3, hyper.eta_x)
 
     # ---- master Gauss-Seidel primal updates (Eqs. 17-19)
-    # One flattened (P, D) operator serves the whole master step: the
-    # a-block gradients for z1/z2/z3 all come out of a single w @ A
-    # mat-vec, and the same matrix feeds the cut_eval kernel below.
+    # The canonical (P, D) operator serves the whole master step AS
+    # STORED: the a-block gradients for z1/z2/z3 all come out of a
+    # single w @ A mat-vec, and the same matrix feeds the cut_eval
+    # kernel below — no per-step re-flatten.
     lam_a = state.lam * state.cuts_ii.active
-    spec = cuts_lib.flat_spec(state.cuts_ii)
-    a_flat = cuts_lib.flatten_cuts(state.cuts_ii, spec)
+    spec = state.cuts_ii.spec
+    a_flat = state.cuts_ii.a
     ga1, ga2, ga3, _, _ = cuts_lib.cut_weighted_coeff_flat(
         spec, a_flat, lam_a)
 
@@ -204,7 +199,12 @@ def _bmask(active, x):
 def cut_refresh(problem: TrilevelProblem, hyper: Hyper,
                 state: AFTOState) -> AFTOState:
     """Generate one I-layer and one II-layer mu-cut at the current point,
-    then drop inactive cuts.  Runs every t_pre master iterations, t < t1."""
+    then drop inactive cuts.  Runs every t_pre master iterations, t < t1.
+
+    Each `add_cut` is one row write into the canonical (P, D) matrix
+    (only the NEW cut's coefficient dict is flattened); the drop rule is
+    a row mask — the block trees are never materialized here, so the
+    refresh runs inside the scan without touching `flat_spec`."""
     t = state.t
 
     # warm-start the inner states at the current outer point (duals kept)

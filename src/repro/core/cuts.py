@@ -17,6 +17,30 @@ the level-I stack ({x_{3,j}}, z1, z2', z3) gives ``a1 + a2 + (N+1)a3``
 (N worker copies of x3 plus z3, one copy each of z1/z2').  We implement
 the derivation; Eq. 24's printed constant matches the derivation and is
 used as printed.  With mu=0 both reduce to the classical convex cut.
+
+STORAGE MODEL (canonical flat layout)
+-------------------------------------
+The polytope is stored as `FlatCuts`: one dense f32 `(P, D)` coefficient
+matrix `a` plus `c`/`active`/`age` rows and a static `FlatSpec` column
+layout.  Maintenance is incremental —
+
+  * `add_cut`       one `dynamic_update_slice` row write (only the NEW
+                    cut's coefficient dict is flattened),
+  * `drop_inactive` a row mask on `active`,
+  * eviction        the same row write over the oldest slot —
+
+so no per-iteration consumer ever re-materializes the matrix from block
+trees.  `eval_cuts`, `cut_weighted_coeff`, `cut_coeff_per_worker` and
+the Lagrangian / stationarity cut terms all contract `fc.a` directly
+(the `cut_eval`-shaped wide mat-vec).
+
+The tree-of-trees `CutSet` survives only as a derived COMPATIBILITY
+VIEW: `to_tree(fc)` materializes per-block coefficient trees (tests,
+external callers, the tree-op reference implementations) and
+`from_tree(cs)` flattens back.  Flattening thus happens in exactly two
+places: at cut construction (the new row) and at the `to_tree` /
+`from_tree` boundary — never inside `afto_step`, `cut_refresh` or
+`stationarity_gap_sq`.
 """
 from __future__ import annotations
 
@@ -27,31 +51,81 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import CutSet
-from repro.utils.tree import (tree_dot, tree_norm_sq, tree_zeros_like)
+from repro.core.types import CutSet, FlatCuts, FlatSpec
+from repro.utils.tree import tree_dot, tree_norm_sq
+
+
+_BLOCK_NAMES = ("a1", "a2", "a3", "b2", "b3")
+
+# Specs are tiny and purely shape-derived, so one cache entry per cut-set
+# layout (i.e. per problem) is enough; keyed structurally so traced and
+# concrete cut sets share entries.  Two caches (template-keyed and
+# stacked-block-keyed) may hold equal-content FlatSpec objects; jit
+# compares specs by value, so that is fine.
+_SPEC_CACHE: Dict[tuple, FlatSpec] = {}
+_TPL_SPEC_CACHE: Dict[tuple, FlatSpec] = {}
+
+
+def _build_spec(flat_blocks, point_shapes, dtypes) -> FlatSpec:
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in point_shapes)
+    offsets = tuple(np.concatenate([[0], np.cumsum(sizes)[:-1]])
+                    .astype(int)) if sizes else ()
+    return FlatSpec(
+        tdefs=tuple(tdef for _, tdef in flat_blocks),
+        nleaves=tuple(len(ls) for ls, _ in flat_blocks),
+        shapes=tuple(point_shapes),
+        dtypes=tuple(dtypes),
+        sizes=sizes, offsets=offsets, d_total=sum(sizes))
+
+
+def spec_from_templates(n_workers: int, z1_tpl, z2_tpl, z3_tpl) -> FlatSpec:
+    """The (cached) FlatSpec for a polytope over these variable templates.
+
+    Column order is the jax.tree leaf order of (a1, a2, a3, b2, b3);
+    b-block point shapes carry the leading worker axis (N, ...)."""
+    tpls = (z1_tpl, z2_tpl, z3_tpl, z2_tpl, z3_tpl)
+    flat = [jax.tree.flatten(t) for t in tpls]
+    key = (int(n_workers), tuple(
+        (tdef, tuple((l.shape, str(l.dtype)) for l in leaves))
+        for leaves, tdef in flat))
+    spec = _TPL_SPEC_CACHE.get(key)
+    if spec is None:
+        shapes, dtypes = [], []
+        for b_idx, (leaves, _) in enumerate(flat):
+            lead = (int(n_workers),) if b_idx >= 3 else ()
+            shapes.extend(lead + l.shape for l in leaves)
+            dtypes.extend(l.dtype for l in leaves)
+        spec = _build_spec(flat, shapes, dtypes)
+        _TPL_SPEC_CACHE[key] = spec
+    return spec
+
+
+def _leaf_range(spec: FlatSpec, b_idx: int) -> Tuple[int, int]:
+    """Contiguous per-leaf index range of block `b_idx` in the spec."""
+    start = sum(spec.nleaves[:b_idx])
+    return start, start + spec.nleaves[b_idx]
 
 
 # ---------------------------------------------------------------------------
-# construction
+# construction + incremental maintenance (canonical FlatCuts path)
 # ---------------------------------------------------------------------------
 
-def empty_cutset(p_max: int, n_workers: int, z1_tpl, z2_tpl, z3_tpl) -> CutSet:
-    """All-zero, all-inactive polytope with (P,)/(P,N,...) stacked slots."""
-    def stack_p(tpl):
-        return jax.tree.map(
-            lambda x: jnp.zeros((p_max,) + x.shape, x.dtype), tpl)
-
-    def stack_pn(tpl):
-        return jax.tree.map(
-            lambda x: jnp.zeros((p_max, n_workers) + x.shape, x.dtype), tpl)
-
-    return CutSet(
-        a1=stack_p(z1_tpl), a2=stack_p(z2_tpl), a3=stack_p(z3_tpl),
-        b2=stack_pn(z2_tpl), b3=stack_pn(z3_tpl),
+def empty_cuts(p_max: int, n_workers: int, z1_tpl, z2_tpl, z3_tpl
+               ) -> FlatCuts:
+    """All-zero, all-inactive polytope in the canonical flat layout."""
+    spec = spec_from_templates(n_workers, z1_tpl, z2_tpl, z3_tpl)
+    return FlatCuts(
+        a=jnp.zeros((p_max, spec.d_total), jnp.float32),
         c=jnp.zeros((p_max,), jnp.float32),
         active=jnp.zeros((p_max,), jnp.float32),
         age=jnp.full((p_max,), -1, jnp.int32),
-    )
+        spec=spec)
+
+
+def empty_cutset(p_max: int, n_workers: int, z1_tpl, z2_tpl, z3_tpl
+                 ) -> CutSet:
+    """Compatibility constructor for the derived block-tree view."""
+    return to_tree(empty_cuts(p_max, n_workers, z1_tpl, z2_tpl, z3_tpl))
 
 
 def make_cut(h0, grads, point, eps, mu, bound_alpha):
@@ -69,22 +143,47 @@ def make_cut(h0, grads, point, eps, mu, bound_alpha):
     return grads, c
 
 
-def add_cut(cuts: CutSet, coeffs, c, t) -> CutSet:
+def flatten_coeffs(spec: FlatSpec, coeffs: Dict[str, Any]):
+    """One cut's coefficient dict as a (D,) f32 row in spec column order
+    (missing blocks zero).  This is THE construction-time flatten: the
+    only place a new cut's trees are linearized."""
+    return flatten_point(spec, coeffs.get("a1"), coeffs.get("a2"),
+                         coeffs.get("a3"), coeffs.get("b2"),
+                         coeffs.get("b3"))
+
+
+def _next_slot(active, age):
+    """First inactive slot, else the oldest active one (eviction).
+
+    Integer scores: adding 1e9 in f32 loses the age low bits (spacing at
+    1e9 is 64) and mis-evicts — caught by the hypothesis capacity test."""
+    score = jnp.where(active > 0, age, jnp.int32(-(2 ** 30)))
+    return jnp.argmin(score)
+
+
+def add_cut(cuts, coeffs, c, t):
     """Write the cut into the first inactive slot (or evict the oldest).
 
-    Shape-stable: slot choice is a traced argmin; missing coefficient
-    blocks stay zero.
-    """
-    # prefer inactive slots; among active, evict the oldest.  Integer
-    # scores: adding 1e9 in f32 loses the age low bits (spacing at 1e9
-    # is 64) and mis-evicts — caught by the hypothesis capacity test.
-    score = jnp.where(cuts.active > 0, cuts.age,
-                      jnp.int32(-(2 ** 30)))
-    slot = jnp.argmin(score)
+    On the canonical `FlatCuts` this is ONE row write: the new cut's
+    coefficient dict is flattened to a (D,) row and
+    `lax.dynamic_update_slice`d into the matrix (shape-stable, traced
+    slot).  Evicted rows are fully overwritten, so no stale coefficients
+    survive.  A `CutSet` argument takes the legacy per-block tree write
+    (compatibility path for tree-view callers)."""
+    slot = _next_slot(cuts.active, cuts.age)
+    if isinstance(cuts, FlatCuts):
+        row = flatten_coeffs(cuts.spec, coeffs)
+        return FlatCuts(
+            a=jax.lax.dynamic_update_slice(cuts.a, row[None, :], (slot, 0)),
+            c=cuts.c.at[slot].set(jnp.asarray(c, cuts.c.dtype)),
+            active=cuts.active.at[slot].set(1.0),
+            age=cuts.age.at[slot].set(jnp.asarray(t, jnp.int32)),
+            spec=cuts.spec)
 
     def write_block(cur, new):
         if new is None:
-            return cur
+            return jax.tree.map(
+                lambda buf: buf.at[slot].set(jnp.zeros_like(buf[slot])), cur)
         return jax.tree.map(lambda buf, g: buf.at[slot].set(g), cur, new)
 
     return CutSet(
@@ -99,64 +198,60 @@ def add_cut(cuts: CutSet, coeffs, c, t) -> CutSet:
     )
 
 
-def clear_slot_blocks(cuts: CutSet, slot) -> CutSet:
-    """Zero all coefficient blocks of `slot` (used when evicting)."""
-    def z(tree):
-        return jax.tree.map(lambda buf: buf.at[slot].set(jnp.zeros_like(buf[slot])), tree)
-    return CutSet(a1=z(cuts.a1), a2=z(cuts.a2), a3=z(cuts.a3),
-                  b2=z(cuts.b2), b3=z(cuts.b3), c=cuts.c,
-                  active=cuts.active, age=cuts.age)
-
-
-def drop_inactive(cuts: CutSet, multipliers, tol: float = 1e-8) -> CutSet:
-    """Eq. 25: drop cut l when its multiplier is (numerically) zero."""
+def drop_inactive(cuts, multipliers, tol: float = 1e-8):
+    """Eq. 25: drop cut l when its multiplier is (numerically) zero.
+    A pure row mask on `active` — coefficients stay in place (an
+    inactive row contributes nothing; a later add overwrites it)."""
     keep = (jnp.abs(multipliers) > tol).astype(cuts.active.dtype)
-    return CutSet(a1=cuts.a1, a2=cuts.a2, a3=cuts.a3, b2=cuts.b2, b3=cuts.b3,
-                  c=cuts.c, active=cuts.active * keep, age=cuts.age)
+    return dataclasses.replace(cuts, active=cuts.active * keep)
+
+
+def n_active(cuts):
+    return jnp.sum(cuts.active)
 
 
 # ---------------------------------------------------------------------------
-# flattened layout: the whole coefficient space as one (P, D) matrix
+# to_tree / from_tree: the compatibility boundary
 # ---------------------------------------------------------------------------
-#
-# The per-iteration cut algebra (eval_cuts, the Lagrangian cut terms and
-# the weighted-coefficient gradients) is a handful of contractions of the
-# same (P, D) operator against D-length variable vectors.  Flattening the
-# five coefficient block trees (a1/a2/a3 with leading (P,), b2/b3 with
-# leading (P, N)) into one contiguous f32 matrix turns all of them into
-# the wide mat-vec the Pallas `cut_eval` kernel is shaped for, and makes
-# the whole thing batch cleanly under the sweep vmap.  Column order is
-# the jax.tree leaf order of (a1, a2, a3, b2, b3).
 
-_BLOCK_NAMES = ("a1", "a2", "a3", "b2", "b3")
-
-
-@dataclasses.dataclass(frozen=True)
-class FlatSpec:
-    """Layout of the flattened cut coefficient space.
-
-    Per-leaf entries run over the concatenated leaves of the five blocks
-    (a1, a2, a3, b2, b3) in order; `shapes` are the *point* shapes (the
-    coefficient leaf shape without its leading (P,) cut axis, so b-block
-    shapes keep the worker axis).
-    """
-    tdefs: Tuple[Any, ...]          # one treedef per block
-    nleaves: Tuple[int, ...]        # leaves per block
-    shapes: Tuple[Tuple[int, ...], ...]
-    dtypes: Tuple[Any, ...]
-    sizes: Tuple[int, ...]
-    offsets: Tuple[int, ...]
-    d_total: int
+def to_tree(fc: FlatCuts) -> CutSet:
+    """Materialize the derived block-tree `CutSet` view (lazy: only
+    called at the compatibility boundary, never on the scanned path)."""
+    spec = fc.spec
+    p = fc.a.shape[0]
+    blocks = []
+    i = 0
+    for b_idx in range(len(_BLOCK_NAMES)):
+        n = spec.nleaves[b_idx]
+        leaves = [
+            fc.a[:, spec.offsets[i + k]:spec.offsets[i + k]
+                 + spec.sizes[i + k]]
+            .reshape((p,) + spec.shapes[i + k]).astype(spec.dtypes[i + k])
+            for k in range(n)]
+        blocks.append(jax.tree.unflatten(spec.tdefs[b_idx], leaves))
+        i += n
+    a1, a2, a3, b2, b3 = blocks
+    return CutSet(a1=a1, a2=a2, a3=a3, b2=b2, b3=b3,
+                  c=fc.c, active=fc.active, age=fc.age)
 
 
-# Specs are tiny and purely shape-derived, so one cache entry per cut-set
-# layout (i.e. per problem) is enough; keyed structurally so traced and
-# concrete CutSets share entries.
-_SPEC_CACHE: Dict[tuple, FlatSpec] = {}
+def from_tree(cs: CutSet) -> FlatCuts:
+    """Flatten a block-tree `CutSet` into the canonical `FlatCuts`."""
+    spec = flat_spec(cs)
+    return FlatCuts(a=flatten_cuts(cs, spec), c=cs.c, active=cs.active,
+                    age=cs.age, spec=spec)
 
 
-def flat_spec(cuts: CutSet) -> FlatSpec:
-    """The (cached) flattening spec for this CutSet's layout."""
+# ---------------------------------------------------------------------------
+# flattened layout plumbing (spec inference + point/coeff flattening)
+# ---------------------------------------------------------------------------
+
+def flat_spec(cuts) -> FlatSpec:
+    """The (cached) flattening spec for this cut set's layout.  On the
+    canonical `FlatCuts` this is just `cuts.spec`; for the block-tree
+    view it is derived (and cached) from the stacked leaf shapes."""
+    if isinstance(cuts, FlatCuts):
+        return cuts.spec
     blocks = tuple(getattr(cuts, name) for name in _BLOCK_NAMES)
     flat = [jax.tree.flatten(b) for b in blocks]
     key = tuple(
@@ -166,25 +261,21 @@ def flat_spec(cuts: CutSet) -> FlatSpec:
     if spec is None:
         leaves = [l for ls, _ in flat for l in ls]
         shapes = tuple(l.shape[1:] for l in leaves)
-        sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
-        offsets = tuple(np.concatenate([[0], np.cumsum(sizes)[:-1]])
-                        .astype(int)) if sizes else ()
-        spec = FlatSpec(
-            tdefs=tuple(tdef for _, tdef in flat),
-            nleaves=tuple(len(ls) for ls, _ in flat),
-            shapes=shapes,
-            dtypes=tuple(l.dtype for l in leaves),
-            sizes=sizes, offsets=offsets, d_total=sum(sizes))
+        dtypes = tuple(l.dtype for l in leaves)
+        spec = _build_spec(flat, shapes, dtypes)
         _SPEC_CACHE[key] = spec
     return spec
 
 
-def flatten_cuts(cuts: CutSet, spec: Optional[FlatSpec] = None):
+def flatten_cuts(cuts, spec: Optional[FlatSpec] = None):
     """All coefficient blocks as one contiguous (P, D) f32 matrix.
 
-    The reshape sizes come from `spec`, so passing a spec from a
-    different layout fails loudly instead of silently misaligning
-    columns."""
+    On `FlatCuts` this is the stored matrix itself (no work).  For the
+    block-tree view the reshape sizes come from `spec`, so passing a
+    spec from a different layout fails loudly instead of silently
+    misaligning columns."""
+    if isinstance(cuts, FlatCuts):
+        return cuts.a
     if spec is None:
         spec = flat_spec(cuts)
     leaves = [l for name in _BLOCK_NAMES
@@ -229,6 +320,10 @@ def unflatten_coeff(spec: FlatSpec, vec):
     return tuple(out)
 
 
+# ---------------------------------------------------------------------------
+# evaluation / contraction (all consume the flat matrix directly)
+# ---------------------------------------------------------------------------
+
 def eval_cuts_flat(a_flat, v_flat, c, active, impl: str = None):
     """Per-slot cut values from flattened operands: the `cut_eval`
     mat-vec  (A @ v - c) * active.  impl=None auto-routes (Mosaic kernel
@@ -237,6 +332,26 @@ def eval_cuts_flat(a_flat, v_flat, c, active, impl: str = None):
     any order) is required on differentiated paths."""
     from repro.kernels import ops
     return ops.cut_eval(a_flat, v_flat, c, active, impl=impl)
+
+
+def eval_cuts(cuts, z1, z2, z3, X2=None, X3=None):
+    """Per-slot cut values  <a,z> + sum_j <b,x_j> - c  (0 for inactive).
+
+    Contracts the canonical (P, D) matrix against the flattened point —
+    no cut re-flattening (only the point vector is assembled).  Uses the
+    transposable impl="ref" route because this entry point sits inside
+    the inner Lagrangians, which are differentiated to second order at
+    cut refresh (see ops.cut_eval); the forward-only hot paths
+    (afto_step, the stationarity gap) call `eval_cuts_flat` with the
+    Pallas kernel.  Accepts the block-tree `CutSet` view too (flattening
+    it first — compatibility path, tested against `eval_cuts_tree`)."""
+    if isinstance(cuts, FlatCuts):
+        spec, a_flat = cuts.spec, cuts.a
+    else:
+        spec = flat_spec(cuts)
+        a_flat = flatten_cuts(cuts, spec)
+    v = flatten_point(spec, z1, z2, z3, X2, X3)
+    return eval_cuts_flat(a_flat, v, cuts.c, cuts.active, impl="ref")
 
 
 def cut_weighted_coeff_flat(spec: FlatSpec, a_flat, weights):
@@ -248,8 +363,58 @@ def cut_weighted_coeff_flat(spec: FlatSpec, a_flat, weights):
         spec, weights.astype(jnp.float32) @ a_flat)
 
 
+def cut_coeff_per_worker(fc: FlatCuts, weights_np, block: str):
+    """sum_l w[j,l] * b_{l,j}  ->  tree with leading worker axis (N, ...).
+
+    The per-worker (stale-weight) contraction of Eq. 16, read straight
+    off the canonical matrix: each b-block leaf is a (P, N, ...) column
+    slice of `fc.a`, contracted with the (N, P) weight table."""
+    spec = fc.spec
+    w = (weights_np * fc.active[None, :]).astype(jnp.float32)   # (N, P)
+    b_idx = _BLOCK_NAMES.index(block)
+    lo, hi = _leaf_range(spec, b_idx)
+    p = fc.a.shape[0]
+    leaves = []
+    for i in range(lo, hi):
+        col = fc.a[:, spec.offsets[i]:spec.offsets[i] + spec.sizes[i]]
+        col = col.reshape((p,) + spec.shapes[i])                # (P, N, ...)
+        leaves.append(jnp.einsum("np,pn...->n...", w, col)
+                      .astype(spec.dtypes[i]))
+    return jax.tree.unflatten(spec.tdefs[b_idx], leaves)
+
+
+def cut_weighted_coeff(cuts, weights, block: str):
+    """sum_l w_l * coeff_block_l  — the gradient of sum_l w_l * cutval_l
+    w.r.t. the variable corresponding to `block` ("a1".."b3").
+
+    For b-blocks the result keeps the worker axis (N, ...).  On the
+    canonical `FlatCuts` this slices the block's columns out of the
+    matrix; the block-tree path is the reference the flat one is tested
+    against.
+    """
+    w = weights * cuts.active
+    if isinstance(cuts, FlatCuts):
+        spec = cuts.spec
+        b_idx = _BLOCK_NAMES.index(block)
+        lo, hi = _leaf_range(spec, b_idx)
+        wf = w.astype(jnp.float32)
+        leaves = [
+            (wf @ cuts.a[:, spec.offsets[i]:spec.offsets[i] + spec.sizes[i]])
+            .reshape(spec.shapes[i]).astype(spec.dtypes[i])
+            for i in range(lo, hi)]
+        return jax.tree.unflatten(spec.tdefs[b_idx], leaves)
+    tree = getattr(cuts, block)
+    if block.startswith("a"):
+        return jax.tree.map(
+            lambda a: jnp.tensordot(w, a.astype(jnp.float32), axes=(0, 0))
+            .astype(a.dtype), tree)
+    return jax.tree.map(
+        lambda b: jnp.tensordot(w, b.astype(jnp.float32), axes=(0, 0))
+        .astype(b.dtype), tree)
+
+
 # ---------------------------------------------------------------------------
-# evaluation
+# tree-op reference implementations (tests / documentation of the math)
 # ---------------------------------------------------------------------------
 
 def _dot_p(stacked, v):
@@ -273,49 +438,15 @@ def _dot_pn(stacked, V):
     return sum(leaves) if leaves else 0.0
 
 
-def eval_cuts(cuts: CutSet, z1, z2, z3, X2=None, X3=None):
-    """Per-slot cut values  <a,z> + sum_j <b,x_j> - c  (0 for inactive).
-
-    Routed through the flattened (P, D) layout as one `cut_eval`-shaped
-    mat-vec via `repro.kernels.ops.cut_eval`.  Uses the transposable
-    impl="ref" route because this entry point sits inside the inner
-    Lagrangians, which are differentiated to second order at cut refresh
-    (see ops.cut_eval); the forward-only hot paths (afto_step, the
-    stationarity gap) call `eval_cuts_flat` with the Pallas kernel.
-    `eval_cuts_tree` is the tree-op reference this is tested against."""
-    spec = flat_spec(cuts)
-    v = flatten_point(spec, z1, z2, z3, X2, X3)
-    return eval_cuts_flat(flatten_cuts(cuts, spec), v, cuts.c, cuts.active,
-                          impl="ref")
-
-
-def eval_cuts_tree(cuts: CutSet, z1, z2, z3, X2=None, X3=None):
+def eval_cuts_tree(cuts, z1, z2, z3, X2=None, X3=None):
     """Tree-op reference implementation of `eval_cuts` (kept for tests
-    and as documentation of the per-block contraction)."""
+    and as documentation of the per-block contraction).  Accepts either
+    layout (FlatCuts is viewed through `to_tree` first)."""
+    if isinstance(cuts, FlatCuts):
+        cuts = to_tree(cuts)
     val = _dot_p(cuts.a1, z1) + _dot_p(cuts.a2, z2) + _dot_p(cuts.a3, z3)
     if X2 is not None:
         val = val + _dot_pn(cuts.b2, X2)
     if X3 is not None:
         val = val + _dot_pn(cuts.b3, X3)
     return (val - cuts.c) * cuts.active
-
-
-def cut_weighted_coeff(cuts: CutSet, weights, block: str):
-    """sum_l w_l * coeff_block_l  — the gradient of sum_l w_l * cutval_l
-    w.r.t. the variable corresponding to `block` ("a1".."b3").
-
-    For b-blocks the result keeps the worker axis (N, ...).
-    """
-    w = weights * cuts.active
-    tree = getattr(cuts, block)
-    if block.startswith("a"):
-        return jax.tree.map(
-            lambda a: jnp.tensordot(w, a.astype(jnp.float32), axes=(0, 0))
-            .astype(a.dtype), tree)
-    return jax.tree.map(
-        lambda b: jnp.tensordot(w, b.astype(jnp.float32), axes=(0, 0))
-        .astype(b.dtype), tree)
-
-
-def n_active(cuts: CutSet):
-    return jnp.sum(cuts.active)

@@ -13,8 +13,14 @@ T-iteration trajectory of Alg. 1 driven inside a single donated-buffer
   * gap / cut-count / user metrics accumulated into preallocated
     history arrays at `metrics_every` strides (under `lax.cond`, and the
     stationarity gap is *fused* with the step: it reuses the step's
-    flattened cut operator and cut values instead of recomputing them —
+    canonical cut operator and cut values instead of recomputing them —
     see `afto_step_aux` / `stationarity_gap_sq(aux=...)`).
+
+The scan carry holds each polytope as canonical `FlatCuts` — two dense
+(P, D)/(P,) array groups instead of ~10 stacked block trees — so the
+carry is small, `cut_refresh` writes rows in place, and the dense
+matrix is directly shardable over a future worker-mesh `shard_map`
+(a tree of stacked blocks is not).
 
 `run_scanned` drives one trajectory; `run_swept` vmaps the same scan
 body over a leading run axis R (stacked initial states, stacked schedule
@@ -102,6 +108,21 @@ def _hyper_key(hyper: Hyper) -> tuple:
 _CACHE: Dict[tuple, tuple] = {}
 _SWEEP_CACHE: Dict[tuple, tuple] = {}
 _CACHE_MAX = 16
+
+
+def _cached_build(cache: Dict[tuple, tuple], key: tuple, build,
+                  keep_alive: tuple):
+    """Fetch the compiled trajectory for `key`, building on miss; the
+    `keep_alive` refs ride in the entry so the ids in `key` cannot be
+    recycled while the entry lives.  Re-inserting on hit keeps the dict
+    in LRU order for the size-capped eviction."""
+    hit = cache.pop(key, None)
+    if hit is None:
+        hit = (build(),) + keep_alive
+        while len(cache) >= _CACHE_MAX:
+            cache.pop(next(iter(cache)))
+    cache[key] = hit
+    return hit[0]
 
 # How many times each builder actually traced a new scan/sweep — the
 # retrace regression tests assert this stays flat across warm calls.
@@ -196,14 +217,10 @@ def run_scanned(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
     keys = _metric_keys(problem, hyper, metrics_fn, state)
     cache_key = (id(problem), id(metrics_fn), _hyper_key(hyper),
                  n_iterations, metrics_every, donate)
-    hit = _CACHE.pop(cache_key, None)
-    if hit is None:
-        fn = _build_scan(problem, hyper, metrics_fn, keys, donate)
-        hit = (fn, problem, metrics_fn)   # keep-alive refs pin the ids
-        while len(_CACHE) >= _CACHE_MAX:
-            _CACHE.pop(next(iter(_CACHE)))
-    _CACHE[cache_key] = hit
-    fn = hit[0]
+    fn = _cached_build(
+        _CACHE, cache_key,
+        lambda: _build_scan(problem, hyper, metrics_fn, keys, donate),
+        (problem, metrics_fn))
 
     hist0 = {k: jnp.zeros((n_records,), jnp.float32) for k in keys}
     masks = jnp.asarray(schedule.active, jnp.float32)
@@ -289,7 +306,12 @@ def run_swept(problem: TrilevelProblem, hyper: Hyper,
       sweep_hypers dict of Hyper field name -> (R,) values, threaded
                    into the traced step per run.  Shape-determining
                    fields (n_workers/p_max/k_inner/d1) stay static and
-                   cannot be swept.
+                   cannot be swept.  Sweeping t_pre/t1 is allowed but
+                   costs: the refresh predicate becomes per-run, the
+                   vmapped `lax.cond` lowers to a select, and the full
+                   `cut_refresh` (inner rollouts + second-order grads)
+                   executes every iteration for every run — correct
+                   results, single-run-engine perf lost.
 
     History layout: per-run keys (gap_sq, n_cuts_*, sim_time,
     max_staleness, host_time, metrics_fn keys) are (R, n_records)
@@ -352,15 +374,11 @@ def run_swept(problem: TrilevelProblem, hyper: Hyper,
     cache_key = (id(problem), id(metrics_fn), _hyper_key(hyper),
                  sweep_names, data is not None, init_inside, n_runs,
                  n_iterations, metrics_every)
-    hit = _SWEEP_CACHE.pop(cache_key, None)
-    if hit is None:
-        fn = _build_sweep(problem, hyper, metrics_fn, keys, sweep_names,
-                          data is not None, init_inside)
-        hit = (fn, problem, metrics_fn)   # keep-alive refs pin the ids
-        while len(_SWEEP_CACHE) >= _CACHE_MAX:
-            _SWEEP_CACHE.pop(next(iter(_SWEEP_CACHE)))
-    _SWEEP_CACHE[cache_key] = hit
-    fn = hit[0]
+    fn = _cached_build(
+        _SWEEP_CACHE, cache_key,
+        lambda: _build_sweep(problem, hyper, metrics_fn, keys, sweep_names,
+                             data is not None, init_inside),
+        (problem, metrics_fn))
 
     hist0 = {k: jnp.zeros((n_runs, n_records), jnp.float32) for k in keys}
     masks = jnp.asarray(

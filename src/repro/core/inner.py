@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import cuts as cuts_lib
 from repro.core import lagrangian as lag
-from repro.core.types import (CutSet, Hyper, InnerState2, InnerState3,
+from repro.core.types import (FlatCuts, Hyper, InnerState2, InnerState3,
                               TrilevelProblem)
 from repro.utils.tree import (tree_axpy, tree_norm_sq, tree_sub)
 
@@ -67,7 +67,7 @@ def h_i(problem: TrilevelProblem, hyper: Hyper,
 # ---------------------------------------------------------------------------
 
 def rollout2(problem: TrilevelProblem, hyper: Hyper, z1, z3, X3,
-             cuts_i: CutSet, init: InnerState2) -> InnerState2:
+             cuts_i: FlatCuts, init: InnerState2) -> InnerState2:
     """K rounds of Jacobi ADMM on Eq. 11 (with slack/cut multipliers);
     differentiable w.r.t. (z1, z3, X3)."""
 
@@ -108,7 +108,7 @@ def rollout2(problem: TrilevelProblem, hyper: Hyper, z1, z3, X3,
 
 
 def h_ii(problem: TrilevelProblem, hyper: Hyper,
-         X2, z2, z1, z3, X3, cuts_i: CutSet, init: InnerState2):
+         X2, z2, z1, z3, X3, cuts_i: FlatCuts, init: InnerState2):
     """h_II({x2_j},{x3_j},z) = ||[{x2_j}; z2] - phi_II(z1, z3, {x3_j})||^2."""
     est = rollout2(problem, hyper, z1, z3, X3, cuts_i,
                    jax.lax.stop_gradient(init))

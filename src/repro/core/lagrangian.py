@@ -1,9 +1,10 @@
 """Augmented / regularized Lagrangians (paper Eqs. 4, 11, 14, 15).
 
-The hyper-polyhedral cut terms in `l_p2` / `l_p` evaluate through the
-flattened (P, D) cut operator (`cuts.eval_cuts` -> Pallas `cut_eval`
-mat-vec with a custom VJP), so they stay one wide contraction on the hot
-path and remain differentiable through the inner ADMM rollouts.
+The hyper-polyhedral cut terms in `l_p2` / `l_p` contract the canonical
+`FlatCuts` (P, D) matrix directly (`cuts.eval_cuts` assembles only the
+point vector), so they stay one wide mat-vec on the hot path and remain
+differentiable through the inner ADMM rollouts.  The `CutSet` block-tree
+view is accepted too at the compatibility boundary.
 """
 from __future__ import annotations
 
@@ -11,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cuts as cuts_lib
-from repro.core.types import (AFTOState, CutSet, Hyper, InnerState2,
+from repro.core.types import (AFTOState, FlatCuts, Hyper, InnerState2,
                               InnerState3, TrilevelProblem)
 from repro.utils.tree import tree_dot, tree_norm_sq, tree_sub
 
@@ -36,7 +37,7 @@ def l_p3(problem: TrilevelProblem, hyper: Hyper, z1, z2, st: InnerState3):
 # ---------------------------------------------------------------------------
 
 def l_p2(problem: TrilevelProblem, hyper: Hyper, z1, z3, X3,
-         cuts_i: CutSet, st: InnerState2):
+         cuts_i: FlatCuts, st: InnerState2):
     """sum_j f2_j + consensus terms + gamma/rho2 terms over the I-polytope.
 
     The I-layer cut value is evaluated at (X3, z1, z2'=st.z2, z3): the cut's
@@ -62,7 +63,7 @@ def l_p2(problem: TrilevelProblem, hyper: Hyper, z1, z3, X3,
 # Top-level Lagrangian over the hyper-polyhedral problem (Eq. 14/15)
 # ---------------------------------------------------------------------------
 
-def l_p(problem: TrilevelProblem, state_vars, cuts_ii: CutSet, lam, theta):
+def l_p(problem: TrilevelProblem, state_vars, cuts_ii: FlatCuts, lam, theta):
     """L_p (Eq. 14) at explicit variables.
 
     state_vars = (X1, X2, X3, z1, z2, z3); theta is stacked (N, ...).
@@ -79,7 +80,7 @@ def l_p(problem: TrilevelProblem, state_vars, cuts_ii: CutSet, lam, theta):
 
 
 def l_p_hat(problem: TrilevelProblem, hyper: Hyper, t, state_vars,
-            cuts_ii: CutSet, lam, theta):
+            cuts_ii: FlatCuts, lam, theta):
     """Regularized Lagrangian (Eq. 15)."""
     base = l_p(problem, state_vars, cuts_ii, lam, theta)
     reg_lam = 0.5 * hyper.c1(t) * jnp.sum((lam * cuts_ii.active) ** 2)

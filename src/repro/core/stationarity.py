@@ -1,11 +1,13 @@
 """Stationarity gap (Definitions 4.1/4.2, Eqs. 26/27).
 
-The cut-dependent terms ride on the flattened (P, D) cut operator: one
-`w @ A` mat-vec yields the z-block gradients AND the per-worker b-block
-sums, and the cut values come from the `cut_eval` kernel.  At record
-iterations inside the compiled engine the step has already produced both
-products (`afto_step_aux`), so the gap accepts them via `aux=` instead
-of recomputing — only the f1 gradients at the post-step point remain.
+The cut-dependent terms ride on the CANONICAL (P, D) cut operator
+carried in `AFTOState` (`state.cuts_ii.a` — read as stored, never
+re-flattened): one `w @ A` mat-vec yields the z-block gradients AND the
+per-worker b-block sums, and the cut values come from the `cut_eval`
+kernel.  At record iterations inside the compiled engine the step has
+already produced both products (`afto_step_aux`), so the gap accepts
+them via `aux=` instead of recomputing — only the f1 gradients at the
+post-step point remain.
 """
 from __future__ import annotations
 
@@ -23,13 +25,13 @@ def make_gap_aux(problem: TrilevelProblem, hyper: Hyper, state: AFTOState):
     and the cut values at `state`'s point.  Structure-identical to the
     aux returned by `afto_step_aux`, so the engine can select between
     them under `lax.cond` (it must recompute when a `cut_refresh`
-    rewrote the polytope after the step)."""
-    spec = cuts_lib.flat_spec(state.cuts_ii)
-    a_flat = cuts_lib.flatten_cuts(state.cuts_ii, spec)
+    rewrote the polytope after the step).  The operator is the stored
+    canonical matrix — only the point vector is assembled here."""
+    a_flat = state.cuts_ii.a
     cutval = cuts_lib.eval_cuts_flat(
         a_flat,
-        cuts_lib.flatten_point(spec, state.z1, state.z2, state.z3,
-                               state.X2, state.X3),
+        cuts_lib.flatten_point(state.cuts_ii.spec, state.z1, state.z2,
+                               state.z3, state.X2, state.X3),
         state.cuts_ii.c, state.cuts_ii.active)
     return {"flat_ii": a_flat, "cutval": cutval}
 
@@ -43,7 +45,7 @@ def stationarity_gap_sq(problem: TrilevelProblem, hyper: Hyper,
     if aux is None:
         aux = make_gap_aux(problem, hyper, state)
     lam_a = state.lam * state.cuts_ii.active
-    spec = cuts_lib.flat_spec(state.cuts_ii)
+    spec = state.cuts_ii.spec
     # one mat-vec: a-block gradients for the master z's plus the
     # per-worker b-block sums (lam is shared across workers here, so the
     # stale per-worker contraction collapses to the same product).

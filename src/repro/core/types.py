@@ -8,11 +8,20 @@ Notation follows the paper:
   lambda_l - duals for the II-layer polytope cuts (Eq. 14).
   P_I/P_II - hyper-polyhedral cut sets (fixed capacity + active mask so
              every shape is jit-stable; Add/Drop write slots, Eq. 25).
+
+Cut storage is CANONICALLY FLAT: `FlatCuts` keeps the whole polytope as
+one dense `(P, D)` coefficient matrix (plus `c`/`active`/`age` rows and
+a static `FlatSpec` describing the column layout), which is what every
+hot-path consumer (`afto_step`, the Lagrangian cut terms, the
+stationarity gap, the `cut_eval` Pallas kernel, the sweep vmap)
+contracts against directly.  The tree-of-trees `CutSet` remains only as
+a *derived compatibility view* (`cuts.to_tree` / `cuts.from_tree`) for
+tests and external callers that want per-block coefficient trees.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,16 +79,65 @@ class Hyper:
                            1.0 / (self.eta_theta * (t + 1.0) ** 0.25))
 
 
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static column layout of the flattened cut coefficient space.
+
+    Per-leaf entries run over the concatenated leaves of the five blocks
+    (a1, a2, a3, b2, b3) in order; `shapes` are the *point* shapes (the
+    coefficient leaf shape without its leading (P,) cut axis, so b-block
+    shapes keep the worker axis).  Frozen and hashable, so it can be a
+    jit-static meta field of `FlatCuts` and ride scan carries unchanged.
+    """
+    tdefs: Tuple[Any, ...]          # one treedef per block
+    nleaves: Tuple[int, ...]        # leaves per block
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+    d_total: int
+
+
+@dataclasses.dataclass
+class FlatCuts:
+    """CANONICAL cut storage: the polytope as one dense (P, D) operator.
+
+    a      : (P, D) f32 coefficient matrix; row l is cut l's flattened
+             (a1, a2, a3, b2, b3) blocks in `spec` column order.
+    c      : (P,) offsets;  active: (P,) {0,1};  age: (P,) insertion time.
+    spec   : static `FlatSpec` column layout (meta field — not a leaf).
+
+    `add_cut` is a single row write, `drop_inactive`/eviction are row
+    masks, and every per-iteration contraction (`eval_cuts`, the
+    weighted-coefficient gradients, the per-worker b-block sums) reads
+    `a` directly — nothing re-flattens per step.  `cuts.to_tree` derives
+    the block-tree `CutSet` view when structured access is needed.
+    """
+    a: jnp.ndarray
+    c: jnp.ndarray
+    active: jnp.ndarray
+    age: jnp.ndarray
+    spec: Any = None
+
+
+_register(FlatCuts, ["a", "c", "active", "age"], meta_fields=["spec"])
+
+
 @dataclasses.dataclass
 class CutSet:
-    """Fixed-capacity polytope { <a1,z1>+<a2,z2>+<a3,z3>
-                                 + sum_j (<b2_j,x2_j> + <b3_j,x3_j>) <= c }.
+    """DERIVED block-tree view of a polytope (compatibility boundary):
+    { <a1,z1>+<a2,z2>+<a3,z3> + sum_j (<b2_j,x2_j> + <b3_j,x3_j>) <= c }.
 
     a_i : trees shaped like z_i with leading cut axis (P,)
     b_i : trees shaped like x_i with leading axes (P, N)
     c   : (P,) offsets;  active: (P,) {0,1} mask;  age: (P,) insertion time.
     Layer-I cuts simply carry zero b2/a2' blocks where a variable does not
     participate.
+
+    The engine carries `FlatCuts`; materialize this view with
+    `cuts.to_tree(fc)` (and go back with `cuts.from_tree(cs)`).  The
+    tree-op reference implementations (`cuts.eval_cuts_tree`,
+    `cuts.cut_weighted_coeff` on a CutSet) operate on this layout.
     """
     a1: Any
     a2: Any
@@ -144,8 +202,8 @@ class AFTOState:
     z3: Any
     theta: Any           # (N, ...) consensus duals (Eq. 14)
     lam: jnp.ndarray     # (P,) II-layer cut duals
-    cuts_i: CutSet
-    cuts_ii: CutSet
+    cuts_i: FlatCuts     # I-layer polytope, canonical (P, D) flat storage
+    cuts_ii: FlatCuts    # II-layer polytope, canonical (P, D) flat storage
     gamma_k: jnp.ndarray  # (P,) last inner gamma (drop rule, Eq. 25)
     inner3: InnerState3   # warm-started level-3 inner state
     inner2: InnerState2   # warm-started level-2 inner state

@@ -1,10 +1,12 @@
-"""mu-cut construction, polytope maintenance, Lagrangian algebra."""
+"""mu-cut construction, canonical flat polytope maintenance, Lagrangian
+algebra, and the to_tree/from_tree compatibility boundary."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import cuts as cuts_lib
+from repro.core.types import FlatCuts
 from repro.core.weakly_convex import estimate_mu, first_order_gap
 from repro.utils.tree import tree_dot
 
@@ -13,14 +15,16 @@ def _tpl(d=3):
     return jnp.zeros((d,))
 
 
-def test_empty_cutset_inactive():
-    cs = cuts_lib.empty_cutset(4, 2, _tpl(), _tpl(), _tpl())
+def test_empty_cuts_inactive():
+    cs = cuts_lib.empty_cuts(4, 2, _tpl(), _tpl(), _tpl())
+    assert isinstance(cs, FlatCuts)
+    assert cs.a.shape == (4, cs.spec.d_total)
     val = cuts_lib.eval_cuts(cs, jnp.ones(3), jnp.ones(3), jnp.ones(3))
     np.testing.assert_array_equal(np.asarray(val), np.zeros(4))
 
 
 def test_add_eval_drop_roundtrip():
-    cs = cuts_lib.empty_cutset(3, 2, _tpl(), _tpl(), _tpl())
+    cs = cuts_lib.empty_cuts(3, 2, _tpl(), _tpl(), _tpl())
     coeffs = {"a1": jnp.array([1.0, 0, 0]), "a2": jnp.zeros(3),
               "a3": jnp.zeros(3)}
     cs = cuts_lib.add_cut(cs, coeffs, 0.5, t=0)
@@ -35,12 +39,26 @@ def test_add_eval_drop_roundtrip():
 
 
 def test_add_evicts_oldest_when_full():
-    cs = cuts_lib.empty_cutset(2, 1, _tpl(1), _tpl(1), _tpl(1))
+    cs = cuts_lib.empty_cuts(2, 1, _tpl(1), _tpl(1), _tpl(1))
     for t in range(3):
         coeffs = {"a1": jnp.array([float(t + 1)])}
         cs = cuts_lib.add_cut(cs, coeffs, 0.0, t=t)
     ages = np.asarray(cs.age)
     assert set(ages.tolist()) == {1, 2}       # slot with age 0 evicted
+
+
+def test_add_cut_is_jit_row_write():
+    """add_cut on the canonical layout stays shape-stable under jit."""
+    cs = cuts_lib.empty_cuts(3, 2, _tpl(), _tpl(), _tpl())
+
+    @jax.jit
+    def add(cs, a1, c, t):
+        return cuts_lib.add_cut(cs, {"a1": a1}, c, t)
+
+    for t in range(5):
+        cs = add(cs, jnp.full((3,), float(t)), 0.1 * t, t)
+    assert cs.a.shape == (3, cs.spec.d_total)
+    assert float(cuts_lib.n_active(cs)) == 3
 
 
 def test_mu_cut_validity_on_weakly_convex_fn():
@@ -93,7 +111,7 @@ def test_estimate_mu_detects_concavity():
 
 
 def test_cut_weighted_coeff_matches_manual():
-    cs = cuts_lib.empty_cutset(3, 2, _tpl(), _tpl(), _tpl())
+    cs = cuts_lib.empty_cuts(3, 2, _tpl(), _tpl(), _tpl())
     cs = cuts_lib.add_cut(cs, {"a1": jnp.array([1.0, 2, 3])}, 0.0, 0)
     cs = cuts_lib.add_cut(cs, {"a1": jnp.array([0.0, 1, 0])}, 0.0, 1)
     w = jnp.array([0.5, 2.0, 7.0])
@@ -101,64 +119,74 @@ def test_cut_weighted_coeff_matches_manual():
     want = 0.5 * jnp.array([1.0, 2, 3]) + 2.0 * jnp.array([0.0, 1, 0])
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-6)
+    # the tree-view path agrees
+    got_tree = cuts_lib.cut_weighted_coeff(cuts_lib.to_tree(cs), w, "a1")
+    np.testing.assert_allclose(np.asarray(got_tree), np.asarray(want),
+                               rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------
-# flattened (P, D) layout: round-trips + flat-vs-tree-vs-kernel regression
+# canonical (P, D) layout: round-trips + flat-vs-tree-vs-kernel regression
 # ---------------------------------------------------------------------------
 
-def _nested_cutset(p_max=4, n_workers=2, key=None):
-    """A cutset over nested/mixed-shape templates with two random cuts."""
+def _rand_tree(tpl, k, lead=()):
+    leaves, tdef = jax.tree.flatten(tpl)
+    outs = [jax.random.normal(jax.random.fold_in(k, i), lead + l.shape)
+            for i, l in enumerate(leaves)]
+    return jax.tree.unflatten(tdef, outs)
+
+
+def _nested_cuts(p_max=4, n_workers=2, key=None):
+    """A FlatCuts over nested/mixed-shape templates with two random cuts."""
     key = jax.random.PRNGKey(0) if key is None else key
     z1_tpl = {"phi": jnp.zeros((2,))}
     z2_tpl = {"w": jnp.zeros((2, 3)), "b": jnp.zeros((3,))}
     z3_tpl = jnp.zeros((4,))
-    cs = cuts_lib.empty_cutset(p_max, n_workers, z1_tpl, z2_tpl, z3_tpl)
-
-    def rand_like(tpl, k):
-        leaves, tdef = jax.tree.flatten(tpl)
-        outs = [jax.random.normal(jax.random.fold_in(k, i), l.shape)
-                for i, l in enumerate(leaves)]
-        return jax.tree.unflatten(tdef, outs)
-
-    def stack_n(tpl, k):
-        return jax.tree.map(
-            lambda x: jax.random.normal(k, (n_workers,) + x.shape), tpl)
+    cs = cuts_lib.empty_cuts(p_max, n_workers, z1_tpl, z2_tpl, z3_tpl)
 
     for t in range(2):
         k = jax.random.fold_in(key, t)
-        coeffs = {"a1": rand_like(z1_tpl, k),
-                  "a2": rand_like(z2_tpl, jax.random.fold_in(k, 10)),
-                  "a3": rand_like(z3_tpl, jax.random.fold_in(k, 20)),
-                  "b2": stack_n(z2_tpl, jax.random.fold_in(k, 30)),
-                  "b3": stack_n(z3_tpl, jax.random.fold_in(k, 40))}
+        coeffs = {"a1": _rand_tree(z1_tpl, k),
+                  "a2": _rand_tree(z2_tpl, jax.random.fold_in(k, 10)),
+                  "a3": _rand_tree(z3_tpl, jax.random.fold_in(k, 20)),
+                  "b2": _rand_tree(z2_tpl, jax.random.fold_in(k, 30),
+                                   (n_workers,)),
+                  "b3": _rand_tree(z3_tpl, jax.random.fold_in(k, 40),
+                                   (n_workers,))}
         cs = cuts_lib.add_cut(cs, coeffs, 0.1 * t, t)
     return cs, (z1_tpl, z2_tpl, z3_tpl)
 
 
-def test_flatten_unflatten_roundtrip_nested():
-    cs, _ = _nested_cutset()
-    spec = cuts_lib.flat_spec(cs)
-    a_flat = cuts_lib.flatten_cuts(cs, spec)
-    assert a_flat.shape == (4, spec.d_total)
+def test_to_tree_from_tree_roundtrip_nested():
+    """to_tree materializes the block view; from_tree reproduces the
+    canonical matrix bit-identically (f32 templates)."""
+    fc, _ = _nested_cuts()
+    tree = cuts_lib.to_tree(fc)
+    back = cuts_lib.from_tree(tree)
+    np.testing.assert_array_equal(np.asarray(back.a), np.asarray(fc.a))
+    np.testing.assert_array_equal(np.asarray(back.c), np.asarray(fc.c))
+    np.testing.assert_array_equal(np.asarray(back.active),
+                                  np.asarray(fc.active))
+    assert back.spec == fc.spec
+    # per-slot rows unflatten to the block-view slots
     for slot in range(2):
-        a1, a2, a3, b2, b3 = cuts_lib.unflatten_coeff(spec, a_flat[slot])
+        blocks = cuts_lib.unflatten_coeff(fc.spec, fc.a[slot])
         for got, want in zip(
-                jax.tree.leaves((a1, a2, a3, b2, b3)),
+                jax.tree.leaves(blocks),
                 jax.tree.leaves(tuple(
-                    jax.tree.map(lambda x: x[slot], getattr(cs, n))
+                    jax.tree.map(lambda x: x[slot], getattr(tree, n))
                     for n in ("a1", "a2", "a3", "b2", "b3")))):
             np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                        rtol=1e-6)
 
 
 def test_flatten_point_matches_kernel_ref():
-    """flat eval == kernels/ref.py:cut_eval_ref on the flattened
+    """canonical eval == kernels/ref.py:cut_eval_ref on the stored
     operands == the tree-op eval_cuts_tree reference."""
     from repro.kernels import ref as kref
 
-    cs, (z1_tpl, z2_tpl, z3_tpl) = _nested_cutset()
-    spec = cuts_lib.flat_spec(cs)
+    fc, (z1_tpl, z2_tpl, z3_tpl) = _nested_cuts()
+    spec = fc.spec
     key = jax.random.PRNGKey(7)
     z1 = jax.tree.map(lambda x: jax.random.normal(key, x.shape), z1_tpl)
     z2 = jax.tree.map(
@@ -170,50 +198,80 @@ def test_flatten_point_matches_kernel_ref():
                                     (2,) + x.shape), z2_tpl)
     X3 = jax.random.normal(jax.random.fold_in(key, 4), (2, 4))
 
-    a_flat = cuts_lib.flatten_cuts(cs, spec)
     v = cuts_lib.flatten_point(spec, z1, z2, z3, X2, X3)
-    want_tree = cuts_lib.eval_cuts_tree(cs, z1, z2, z3, X2=X2, X3=X3)
-    want_ref = kref.cut_eval_ref(a_flat, v, cs.c, cs.active)
+    want_tree = cuts_lib.eval_cuts_tree(fc, z1, z2, z3, X2=X2, X3=X3)
+    want_ref = kref.cut_eval_ref(fc.a, v, fc.c, fc.active)
     np.testing.assert_allclose(np.asarray(want_ref), np.asarray(want_tree),
                                rtol=1e-5, atol=1e-6)
-    got = cuts_lib.eval_cuts(cs, z1, z2, z3, X2=X2, X3=X3)
+    got = cuts_lib.eval_cuts(fc, z1, z2, z3, X2=X2, X3=X3)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want_ref),
                                rtol=1e-5, atol=1e-6)
+    # the block-tree compatibility view evaluates identically
+    got_view = cuts_lib.eval_cuts(cuts_lib.to_tree(fc), z1, z2, z3,
+                                  X2=X2, X3=X3)
+    np.testing.assert_allclose(np.asarray(got_view), np.asarray(want_ref),
+                               rtol=1e-5, atol=1e-6)
     # the Pallas kernel route agrees too (interpret off-TPU)
-    got_k = cuts_lib.eval_cuts_flat(a_flat, v, cs.c, cs.active,
+    got_k = cuts_lib.eval_cuts_flat(fc.a, v, fc.c, fc.active,
                                     impl="pallas")
     np.testing.assert_allclose(np.asarray(got_k), np.asarray(want_ref),
                                rtol=1e-5, atol=1e-6)
     # X2=None zeroes the b2 columns
     np.testing.assert_allclose(
-        np.asarray(cuts_lib.eval_cuts(cs, z1, z2, z3, X3=X3)),
-        np.asarray(cuts_lib.eval_cuts_tree(cs, z1, z2, z3, X3=X3)),
+        np.asarray(cuts_lib.eval_cuts(fc, z1, z2, z3, X3=X3)),
+        np.asarray(cuts_lib.eval_cuts_tree(fc, z1, z2, z3, X3=X3)),
         rtol=1e-5, atol=1e-6)
 
 
 def test_cut_weighted_coeff_flat_matches_tree_ops():
-    cs, _ = _nested_cutset()
-    spec = cuts_lib.flat_spec(cs)
-    a_flat = cuts_lib.flatten_cuts(cs, spec)
-    w = jnp.array([0.5, -2.0, 7.0, 0.25]) * cs.active
-    flat = cuts_lib.cut_weighted_coeff_flat(spec, a_flat, w)
+    fc, _ = _nested_cuts()
+    tree = cuts_lib.to_tree(fc)
+    w = jnp.array([0.5, -2.0, 7.0, 0.25]) * fc.active
+    flat = cuts_lib.cut_weighted_coeff_flat(fc.spec, fc.a, w)
     for b_idx, name in enumerate(("a1", "a2", "a3", "b2", "b3")):
-        want = cuts_lib.cut_weighted_coeff(cs, w, name)
-        for g, t in zip(jax.tree.leaves(flat[b_idx]),
-                        jax.tree.leaves(want)):
+        want = cuts_lib.cut_weighted_coeff(tree, w, name)
+        got_blk = cuts_lib.cut_weighted_coeff(fc, w, name)
+        for g, gb, t in zip(jax.tree.leaves(flat[b_idx]),
+                            jax.tree.leaves(got_blk),
+                            jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(t),
+                                       rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(gb), np.asarray(t),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_cut_coeff_per_worker_matches_tree_einsum():
+    """The Eq. 16 per-worker stale-weight contraction off the canonical
+    matrix equals the block-tree einsum."""
+    fc, _ = _nested_cuts()
+    tree = cuts_lib.to_tree(fc)
+    n_workers = 2
+    lam_np = jax.random.normal(jax.random.PRNGKey(3), (n_workers, 4))
+    for block in ("b2", "b3"):
+        got = cuts_lib.cut_coeff_per_worker(fc, lam_np, block)
+        w = lam_np * fc.active[None, :]
+        want = jax.tree.map(
+            lambda b: jnp.einsum("np,pn...->n...", w,
+                                 b.astype(jnp.float32)).astype(b.dtype),
+            getattr(tree, block))
+        for g, t in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
             np.testing.assert_allclose(np.asarray(g), np.asarray(t),
                                        rtol=1e-5, atol=1e-6)
 
 
-def test_flat_spec_is_cached_per_layout():
-    cs, _ = _nested_cutset()
-    assert cuts_lib.flat_spec(cs) is cuts_lib.flat_spec(cs)
-    other = cuts_lib.empty_cutset(2, 1, _tpl(1), _tpl(1), _tpl(1))
-    assert cuts_lib.flat_spec(other) is not cuts_lib.flat_spec(cs)
+def test_spec_is_cached_per_layout():
+    fc, _ = _nested_cuts()
+    fc2, _ = _nested_cuts()
+    assert fc.spec is fc2.spec               # template cache
+    assert cuts_lib.flat_spec(fc) is fc.spec
+    other = cuts_lib.empty_cuts(2, 1, _tpl(1), _tpl(1), _tpl(1))
+    assert other.spec is not fc.spec
+    # the tree-view spec is value-equal (jit-static keys match)
+    assert cuts_lib.flat_spec(cuts_lib.to_tree(fc)) == fc.spec
 
 
 # ---------------------------------------------------------------------------
-# hypothesis: flatten/unflatten round-trip over arbitrary templates
+# hypothesis: round-trips + incremental-maintenance drift guard
 # ---------------------------------------------------------------------------
 
 try:
@@ -243,41 +301,47 @@ if HAVE_HYPOTHESIS:
                                max_size=p_max))
         return p_max, n_workers, tpls, np.asarray(active, np.float32)
 
+    @st.composite
+    def _op_sequences(draw):
+        """Interleaved add/drop op streams (adds > p_max force evictions)."""
+        p_max = draw(st.integers(1, 4))
+        ops = draw(st.lists(
+            st.one_of(
+                st.tuples(st.just("add"), st.integers(0, 2 ** 16)),
+                st.tuples(st.just("drop"), st.integers(0, 2 ** 16))),
+            min_size=1, max_size=3 * p_max + 4))
+        return p_max, draw(st.integers(1, 3)), ops
+
 
 def _roundtrip_property_body(layout, seed):
-    """flatten_cuts rows unflatten back to the stored coefficient blocks
+    """Canonical rows unflatten back to the to_tree coefficient blocks
     and flatten_point inverts unflatten_coeff, for arbitrary pytree
     templates, slot counts, worker counts and active masks."""
     p_max, n_workers, (z1_tpl, z2_tpl, z3_tpl), active = layout
-    cs = cuts_lib.empty_cutset(p_max, n_workers, z1_tpl, z2_tpl, z3_tpl)
+    fc = cuts_lib.empty_cuts(p_max, n_workers, z1_tpl, z2_tpl, z3_tpl)
     key = jax.random.PRNGKey(seed)
-
-    def rand(tpl, k, lead=()):
-        leaves, tdef = jax.tree.flatten(tpl)
-        outs = [jax.random.normal(jax.random.fold_in(k, i),
-                                  lead + l.shape)
-                for i, l in enumerate(leaves)]
-        return jax.tree.unflatten(tdef, outs)
 
     for t in range(p_max):
         k = jax.random.fold_in(key, t)
-        cs = cuts_lib.add_cut(cs, {
-            "a1": rand(z1_tpl, k), "a2": rand(z2_tpl, k),
-            "a3": rand(z3_tpl, k),
-            "b2": rand(z2_tpl, jax.random.fold_in(k, 1), (n_workers,)),
-            "b3": rand(z3_tpl, jax.random.fold_in(k, 2), (n_workers,)),
+        fc = cuts_lib.add_cut(fc, {
+            "a1": _rand_tree(z1_tpl, k), "a2": _rand_tree(z2_tpl, k),
+            "a3": _rand_tree(z3_tpl, k),
+            "b2": _rand_tree(z2_tpl, jax.random.fold_in(k, 1),
+                             (n_workers,)),
+            "b3": _rand_tree(z3_tpl, jax.random.fold_in(k, 2),
+                             (n_workers,)),
         }, float(t), t)
-    cs = cuts_lib.drop_inactive(cs, jnp.asarray(active))
+    fc = cuts_lib.drop_inactive(fc, jnp.asarray(active))
 
-    spec = cuts_lib.flat_spec(cs)
-    a_flat = cuts_lib.flatten_cuts(cs, spec)
-    assert a_flat.shape == (p_max, spec.d_total)
+    spec = fc.spec
+    assert fc.a.shape == (p_max, spec.d_total)
+    tree = cuts_lib.to_tree(fc)
     slot = p_max - 1
-    blocks = cuts_lib.unflatten_coeff(spec, a_flat[slot])
+    blocks = cuts_lib.unflatten_coeff(spec, fc.a[slot])
     for got, want in zip(
             jax.tree.leaves(blocks),
             jax.tree.leaves(tuple(
-                jax.tree.map(lambda x: x[slot], getattr(cs, n))
+                jax.tree.map(lambda x: x[slot], getattr(tree, n))
                 for n in ("a1", "a2", "a3", "b2", "b3")))):
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-6, atol=0)
@@ -287,11 +351,55 @@ def _roundtrip_property_body(layout, seed):
     v_back = cuts_lib.flatten_point(spec, a1, a2, a3, b2, b3)
     np.testing.assert_allclose(np.asarray(v_back), np.asarray(v),
                                rtol=1e-6, atol=0)
-    # eval through the flat path == tree-op reference at a random point
-    val_flat = cuts_lib.eval_cuts(cs, a1, a2, a3, X2=b2, X3=b3)
-    val_tree = cuts_lib.eval_cuts_tree(cs, a1, a2, a3, X2=b2, X3=b3)
+    # eval through the canonical path == tree-op reference at a random point
+    val_flat = cuts_lib.eval_cuts(fc, a1, a2, a3, X2=b2, X3=b3)
+    val_tree = cuts_lib.eval_cuts_tree(fc, a1, a2, a3, X2=b2, X3=b3)
     np.testing.assert_allclose(np.asarray(val_flat), np.asarray(val_tree),
                                rtol=1e-4, atol=1e-5)
+
+
+def _maintenance_drift_body(ops_case, seed):
+    """Incremental-maintenance drift guard: ANY interleaved sequence of
+    add_cut / drop_inactive / evictions keeps the canonical matrix
+    bit-identical to (a) re-flattening the to_tree view and (b) the same
+    sequence applied to a legacy block-tree CutSet."""
+    p_max, n_workers, ops = ops_case
+    tpl = jnp.zeros((2, 2))
+    fc = cuts_lib.empty_cuts(p_max, n_workers, tpl, tpl, tpl)
+    cs = cuts_lib.empty_cutset(p_max, n_workers, tpl, tpl, tpl)
+    key = jax.random.PRNGKey(seed)
+
+    for t, (op, salt) in enumerate(ops):
+        k = jax.random.fold_in(key, salt + 7919 * t)
+        if op == "add":
+            coeffs = {"a1": _rand_tree(tpl, k),
+                      "a2": _rand_tree(tpl, jax.random.fold_in(k, 1)),
+                      "a3": _rand_tree(tpl, jax.random.fold_in(k, 2)),
+                      "b2": _rand_tree(tpl, jax.random.fold_in(k, 3),
+                                       (n_workers,)),
+                      "b3": _rand_tree(tpl, jax.random.fold_in(k, 4),
+                                       (n_workers,))}
+            c = float(jax.random.normal(jax.random.fold_in(k, 5), ()))
+            fc = cuts_lib.add_cut(fc, coeffs, c, t)
+            cs = cuts_lib.add_cut(cs, coeffs, c, t)
+        else:
+            mult = jax.random.bernoulli(k, 0.5, (p_max,)).astype(
+                jnp.float32)
+            fc = cuts_lib.drop_inactive(fc, mult)
+            cs = cuts_lib.drop_inactive(cs, mult)
+
+    # (a) re-flattening the to_tree view reproduces the matrix bitwise
+    view = cuts_lib.to_tree(fc)
+    np.testing.assert_array_equal(
+        np.asarray(fc.a), np.asarray(cuts_lib.flatten_cuts(view)))
+    # (b) the legacy tree path, maintained independently, agrees bitwise
+    np.testing.assert_array_equal(np.asarray(fc.a),
+                                  np.asarray(cuts_lib.flatten_cuts(cs)))
+    for name in ("c", "active", "age"):
+        np.testing.assert_array_equal(np.asarray(getattr(fc, name)),
+                                      np.asarray(getattr(cs, name)))
+    for g, w in zip(jax.tree.leaves(view), jax.tree.leaves(cs)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
 if HAVE_HYPOTHESIS:
@@ -299,7 +407,16 @@ if HAVE_HYPOTHESIS:
     @given(_cut_layouts(), st.integers(0, 2 ** 31 - 1))
     def test_flatten_roundtrip_property(layout, seed):
         _roundtrip_property_body(layout, seed)
+
+    @settings(max_examples=25, deadline=None)
+    @given(_op_sequences(), st.integers(0, 2 ** 31 - 1))
+    def test_incremental_maintenance_no_drift(ops_case, seed):
+        _maintenance_drift_body(ops_case, seed)
 else:                                      # pragma: no cover
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_flatten_roundtrip_property():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_incremental_maintenance_no_drift():
         pass

@@ -178,6 +178,48 @@ def test_run_rejects_unknown_mode():
         run(prob, _hyper(), n_iterations=2, mode="wat")
 
 
+def test_no_reflatten_on_scanned_path(monkeypatch):
+    """Acceptance guard: `flat_spec`/`flatten_cuts` never execute while
+    tracing afto_step_aux / cut_refresh / stationarity_gap_sq — the
+    canonical `FlatCuts` matrix is consumed as stored, and flattening
+    happens only at cut construction (`flatten_coeffs`) and at the
+    `to_tree`/`from_tree` compatibility boundary."""
+    from repro.core import afto as afto_lib
+    from repro.core import cuts as cuts_lib
+    from repro.core import stationarity as stat_lib
+
+    calls = []
+    orig_spec, orig_flat = cuts_lib.flat_spec, cuts_lib.flatten_cuts
+    monkeypatch.setattr(
+        cuts_lib, "flat_spec",
+        lambda *a, **k: (calls.append("flat_spec"), orig_spec(*a, **k))[1])
+    monkeypatch.setattr(
+        cuts_lib, "flatten_cuts",
+        lambda *a, **k: (calls.append("flatten_cuts"),
+                         orig_flat(*a, **k))[1])
+
+    prob = make_quadratic_problem()
+    hyper = _hyper()
+    state = afto_lib.init_state(prob, hyper)
+    jax.eval_shape(
+        lambda s: afto_lib.afto_step_aux(prob, hyper, s, jnp.ones(4)),
+        state)
+    jax.eval_shape(lambda s: afto_lib.cut_refresh(prob, hyper, s), state)
+    jax.eval_shape(
+        lambda s: stat_lib.stationarity_gap_sq(prob, hyper, s), state)
+    assert calls == []
+
+
+def test_scan_cache_hit_does_not_retrace():
+    prob = make_quadratic_problem()
+    hyper, cfg = _hyper(), _cfg()
+    schedule = StragglerScheduler(cfg).precompute(12)
+    run_scanned(prob, hyper, schedule, metrics_every=6)
+    builds = engine_lib.BUILD_COUNTS["scan"]
+    run_scanned(prob, hyper, schedule, metrics_every=6)
+    assert engine_lib.BUILD_COUNTS["scan"] == builds
+
+
 # ---------------------------------------------------------------------------
 # batched sweep: swept rows must reproduce individual scanned runs
 # ---------------------------------------------------------------------------

@@ -66,7 +66,7 @@ def test_mu_zero_reduces_to_convex_cut(seed):
 
 
 # ---------------------------------------------------------------------------
-# polytope bookkeeping invariants
+# polytope bookkeeping invariants (canonical FlatCuts + tree view agree)
 # ---------------------------------------------------------------------------
 
 @given(n_adds=st.integers(1, 10), p_max=st.integers(1, 5),
@@ -75,14 +75,14 @@ def test_mu_zero_reduces_to_convex_cut(seed):
 def test_cutset_capacity_invariant(n_adds, p_max, seed):
     key = jax.random.PRNGKey(seed)
     tpl = jnp.zeros((2,))
-    cs = cuts_lib.empty_cutset(p_max, 2, tpl, tpl, tpl)
+    fc = cuts_lib.empty_cuts(p_max, 2, tpl, tpl, tpl)
     for t in range(n_adds):
         a = jax.random.normal(jax.random.fold_in(key, t), (2,))
-        cs = cuts_lib.add_cut(cs, {"a1": a}, 0.0, t)
-    n_act = float(cuts_lib.n_active(cs))
+        fc = cuts_lib.add_cut(fc, {"a1": a}, 0.0, t)
+    n_act = float(cuts_lib.n_active(fc))
     assert n_act == min(n_adds, p_max)
     # ages of active slots are the most recent adds
-    ages = np.asarray(cs.age)[np.asarray(cs.active) > 0]
+    ages = np.asarray(fc.age)[np.asarray(fc.active) > 0]
     assert set(ages.tolist()) == set(range(max(0, n_adds - p_max), n_adds))
 
 
@@ -91,15 +91,18 @@ def test_cutset_capacity_invariant(n_adds, p_max, seed):
 def test_drop_inactive_only_drops_zero_multipliers(seed):
     key = jax.random.PRNGKey(seed)
     tpl = jnp.zeros((2,))
-    cs = cuts_lib.empty_cutset(4, 2, tpl, tpl, tpl)
+    fc = cuts_lib.empty_cuts(4, 2, tpl, tpl, tpl)
     for t in range(4):
-        cs = cuts_lib.add_cut(
-            cs, {"a1": jax.random.normal(jax.random.fold_in(key, t),
+        fc = cuts_lib.add_cut(
+            fc, {"a1": jax.random.normal(jax.random.fold_in(key, t),
                                          (2,))}, 0.0, t)
-    mult = jnp.array([0.0, 1.0, 0.0, 2.0])
-    cs2 = cuts_lib.drop_inactive(cs, mult)
-    np.testing.assert_array_equal(np.asarray(cs2.active),
+    fc2 = cuts_lib.drop_inactive(fc, jnp.array([0.0, 1.0, 0.0, 2.0]))
+    np.testing.assert_array_equal(np.asarray(fc2.active),
                                   np.array([0.0, 1.0, 0.0, 1.0]))
+    # the derived tree view carries the same mask
+    np.testing.assert_array_equal(
+        np.asarray(cuts_lib.to_tree(fc2).active),
+        np.array([0.0, 1.0, 0.0, 1.0]))
 
 
 # ---------------------------------------------------------------------------
