@@ -1,6 +1,9 @@
 """CI smoke: lower + compile a compiled-trajectory slice of the fed LLM
 engine (`launch/dryrun.py --step afto_scan`) with sketch-mode cuts on a
-small fake-device mesh.
+small fake-device mesh, AND lower + run the worker-mesh SHARDED core
+afto_scan (`repro.core.engine.run_scanned(mesh=...)`, 2-worker mesh) —
+asserting the sharded trajectory's gap matches the replicated scan and
+emitting the sharded perf-record fields for the CI artifact.
 
 Uses the classic `jax.sharding.Mesh` API so the check runs on every jax
 the repo supports (the `jax.make_mesh(axis_types=...)` path used by the
@@ -52,10 +55,46 @@ def main(arch: str = "llama3-8b", scan_chunk: int = 2) -> dict:
            "cut_mode": hyper.cut_mode,
            "flops": float(ca.get("flops", 0.0)),
            "status": "ok"}
+    out.update(sharded_core_smoke())
     return out
+
+
+def sharded_core_smoke(n_iterations: int = 20, n_shards: int = 2) -> dict:
+    """Lower + run the sharded core afto_scan on an `n_shards`-worker
+    fake-device mesh and cross-check it against the replicated scan.
+    Returns the sharded perf-record fields uploaded with the CI
+    artifact (`iters_per_sec_sharded` at smoke scale plus the analytic
+    per-step exchange bytes)."""
+    import time
+
+    from benchmarks.engine_speed import quickstart_setup
+    from repro.core import sharded as sharded_lib
+    from repro.core.engine import run_scanned
+    from repro.launch.mesh import make_worker_mesh
+
+    problem, hyper, _, schedule = quickstart_setup(n_iterations)
+    mesh = make_worker_mesh(n_shards)
+    ref = run_scanned(problem, hyper, schedule, metrics_every=5)
+    sh = run_scanned(problem, hyper, schedule, metrics_every=5, mesh=mesh)
+    gap_ok = bool(np.allclose(ref.history["gap_sq"],
+                              sh.history["gap_sq"], rtol=5e-4, atol=1e-6))
+    t0 = time.perf_counter()
+    run_scanned(problem, hyper, schedule, metrics_every=5, mesh=mesh)
+    warm = time.perf_counter() - t0
+    traffic = sharded_lib.traffic_record(sh.state.cuts_ii.spec, hyper)
+    return {"sharded_scan": {
+        "n_shards": n_shards,
+        "n_iterations": n_iterations,
+        "iters_per_sec_sharded": n_iterations / warm,
+        "gap_matches_replicated": gap_ok,
+        **traffic,
+    }}
 
 
 if __name__ == "__main__":
     res = main()
     print(json.dumps(res))
-    sys.exit(0 if res["status"] == "ok" and res["flops"] > 0 else 1)
+    ok = (res["status"] == "ok" and res["flops"] > 0
+          and res["sharded_scan"]["gap_matches_replicated"]
+          and res["sharded_scan"]["iters_per_sec_sharded"] > 0)
+    sys.exit(0 if ok else 1)

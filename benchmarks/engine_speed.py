@@ -3,10 +3,12 @@ trilevel problem): eager host loop vs compiled-scan trajectory, the
 batched sweep engine vs an equivalent Python loop of scanned runs, the
 Pallas `cut_eval` kernel at paper-scale D, and incremental polytope
 maintenance (`add_cut` row writes / `drop_inactive` masks / evictions on
-the canonical `FlatCuts`) at paper-scale (P, D).  Emits the
-machine-readable perf record consumed by ``benchmarks/run.py --json`` so
-future PRs can diff ``{iters_per_sec, runs_per_sec_swept,
-cut_updates_per_sec, ...}`` across engines."""
+the canonical `FlatCuts`) at paper-scale (P, D), and the worker-mesh sharded
+engine vs the replicated scan (with the analytic per-step bytes the mesh
+exchanges).  Emits the machine-readable perf record consumed by
+``benchmarks/run.py --json`` so future PRs can diff ``{iters_per_sec,
+runs_per_sec_swept, iters_per_sec_sharded, cut_updates_per_sec, ...}``
+across engines."""
 from __future__ import annotations
 
 import dataclasses
@@ -95,11 +97,61 @@ def record(n_iterations: int = 200) -> dict:
         for a, b in zip(jax.tree.leaves(res_eager.state),
                         jax.tree.leaves(res_warm.state))))
     out.update(sweep_record(n_iterations))
+    out.update(sharded_record(n_iterations))
     out["cut_eval_kernel"] = kernel_record()
     out["cut_maintenance"] = cut_update_record()
     # top-level series for easy cross-PR diffing
     out["cut_updates_per_sec"] = out["cut_maintenance"]["updates_per_sec"]
     return out
+
+
+def sharded_record(n_iterations: int = 200, reps: int = 3) -> dict:
+    """Sharded-vs-replicated warm scan over the same schedule, plus the
+    analytic per-step / per-refresh all-reduce payloads of the worker
+    mesh (`repro.core.sharded.traffic_record` — the cut scalars and
+    z-reductions that actually cross the mesh; everything else is
+    shard-local).  Runs a 2-shard mesh when >= 2 (fake) devices are
+    visible (CI forces fake devices via XLA_FLAGS) and degrades to a
+    1-shard mesh otherwise — the shard_map machinery is identical, only
+    the collectives become trivial, and `n_shards` records which one
+    this was."""
+    from repro.core import sharded as sharded_lib
+    from repro.launch.mesh import make_worker_mesh
+
+    n_shards = 2 if jax.device_count() >= 2 else 1
+    mesh = make_worker_mesh(n_shards)
+    problem, hyper, cfg, schedule = quickstart_setup(n_iterations)
+    me = max(1, n_iterations // 10)
+
+    res_rep = run_scanned(problem, hyper, schedule, metrics_every=me)
+    res_sh = run_scanned(problem, hyper, schedule, metrics_every=me,
+                         mesh=mesh)
+    rep_wall = sh_wall = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run_scanned(problem, hyper, schedule, metrics_every=me)
+        rep_wall = min(rep_wall, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_scanned(problem, hyper, schedule, metrics_every=me, mesh=mesh)
+        sh_wall = min(sh_wall, time.perf_counter() - t0)
+
+    match = bool(all(
+        jnp.allclose(a, b, rtol=1e-4, atol=1e-6)
+        for a, b in zip(jax.tree.leaves(res_rep.state),
+                        jax.tree.leaves(res_sh.state))))
+    traffic = sharded_lib.traffic_record(res_sh.state.cuts_ii.spec, hyper)
+    return {
+        "sharded": {
+            "n_shards": n_shards,
+            "wall_s": sh_wall,
+            "replicated_wall_s": rep_wall,
+            "iters_per_sec": n_iterations / sh_wall,
+            "states_allclose": match,
+            **traffic,
+        },
+        # top-level series for easy cross-PR diffing
+        "iters_per_sec_sharded": n_iterations / sh_wall,
+    }
 
 
 def sweep_record(n_iterations: int = 200, n_runs: int = SWEEP_RUNS,
@@ -271,6 +323,13 @@ def main(n_iterations: int = 200, record_out: dict = None):
                  f"runs_per_sec_looped={sw['runs_per_sec_looped']:.1f};"
                  f"speedup={sw['swept_speedup']:.1f}x;"
                  f"allclose={sw['states_allclose']}"))
+    sh = rec["sharded"]
+    rows.append(("engine_sharded", sh["wall_s"] * 1e6 / n_iterations,
+                 f"n_shards={sh['n_shards']};"
+                 f"iters_per_sec_sharded={sh['iters_per_sec']:.1f};"
+                 f"step_bytes={sh['step_bytes']};"
+                 f"refresh_bytes={sh['refresh_bytes']};"
+                 f"allclose={sh['states_allclose']}"))
     ker = rec["cut_eval_kernel"]
     rows.append(("cut_eval_kernel", ker["kernel_us"],
                  f"d={ker['d']};kernel_gbps={ker['kernel_gbps']:.2f};"

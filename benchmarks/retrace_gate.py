@@ -5,9 +5,13 @@ builders actually traced a new compiled trajectory.  In a fresh process,
 two scanned runs over the same schedule plus two identical sweeps must
 leave both counters at 1 — an accidental per-step `flat_spec`/re-flatten
 of the canonical cut matrix (or any cache-key regression) shows up as a
-retrace or a re-materialized build and fails this gate fast.
+retrace or a re-materialized build and fails this gate fast.  When >= 2
+devices are visible (CI forces fake CPU devices via XLA_FLAGS) the gate
+also covers the shard_map'd worker-mesh paths: warm sharded scan + sweep
+BUILD_COUNTS must likewise stay at 1.
 
-  PYTHONPATH=src python -m benchmarks.retrace_gate
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+      PYTHONPATH=src python -m benchmarks.retrace_gate
 """
 from __future__ import annotations
 
@@ -17,11 +21,14 @@ import sys
 
 
 def main(n_iterations: int = 40, n_runs: int = 2) -> dict:
+    import jax
+
     from benchmarks.engine_speed import quickstart_setup
     from repro.core import engine
     from repro.core.scheduler import StragglerScheduler
 
-    assert engine.BUILD_COUNTS == {"scan": 0, "sweep": 0}, (
+    fresh = {"scan": 0, "sweep": 0, "scan_sharded": 0, "sweep_sharded": 0}
+    assert engine.BUILD_COUNTS == fresh, (
         "retrace gate must run in a fresh process", engine.BUILD_COUNTS)
 
     problem, hyper, cfg, schedule = quickstart_setup(n_iterations)
@@ -34,13 +41,29 @@ def main(n_iterations: int = 40, n_runs: int = 2) -> dict:
     for _ in range(2):
         engine.run_swept(problem, hyper, schedules, metrics_every=10)
 
-    ok = engine.BUILD_COUNTS == {"scan": 1, "sweep": 1}
+    want = {"scan": 1, "sweep": 1, "scan_sharded": 0, "sweep_sharded": 0}
+    sharded_gated = jax.device_count() >= 2
+    if sharded_gated:
+        from repro.launch.mesh import make_worker_mesh
+
+        mesh = make_worker_mesh(2)
+        for _ in range(2):
+            engine.run_scanned(problem, hyper, schedule, metrics_every=10,
+                               mesh=mesh)
+        for _ in range(2):
+            engine.run_swept(problem, hyper, schedules, metrics_every=10,
+                             mesh=mesh)
+        want = {"scan": 1, "sweep": 1, "scan_sharded": 1,
+                "sweep_sharded": 1}
+
+    ok = engine.BUILD_COUNTS == want
     out = {"build_counts": dict(engine.BUILD_COUNTS),
+           "sharded_gated": sharded_gated,
            "status": "ok" if ok else "RETRACE"}
     if not ok:
         raise AssertionError(
             f"scan/sweep retraced across warm runs: {engine.BUILD_COUNTS} "
-            "(expected {'scan': 1, 'sweep': 1})")
+            f"(expected {want})")
     return out
 
 

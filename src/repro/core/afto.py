@@ -80,16 +80,16 @@ def init_state(problem: TrilevelProblem, hyper: Hyper) -> AFTOState:
 # ---------------------------------------------------------------------------
 
 def afto_step(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
-              active) -> AFTOState:
+              active, axis: str = None) -> AFTOState:
     """Eq. 16 (masked worker updates at stale views) + Eqs. 17-21 (master).
 
     active: (N,) {0,1} float mask of workers whose update arrives now.
     """
-    return afto_step_aux(problem, hyper, state, active)[0]
+    return afto_step_aux(problem, hyper, state, active, axis=axis)[0]
 
 
 def afto_step_aux(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
-                  active) -> Tuple[AFTOState, dict]:
+                  active, axis: str = None) -> Tuple[AFTOState, dict]:
     """`afto_step` plus the step's cut-algebra intermediates.
 
     The returned aux dict carries the flattened II-polytope operator and
@@ -98,6 +98,13 @@ def afto_step_aux(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
     can fuse the gap into its record branch without recomputing them
     (`repro.core.stationarity.stationarity_gap_sq(aux=...)`).  Valid only
     while the polytope is unchanged (i.e. before any `cut_refresh`).
+
+    axis, when set, is the worker mesh axis of a `shard_map`'d trajectory
+    (`repro.core.sharded`): `state`/`problem.data`/`active` then carry
+    only this shard's workers, the polytopes hold the local b-columns,
+    and the ONLY cross-shard traffic is the cut-scalar psum and the
+    theta-sum feeding the master z1 update — every Eq. 16 worker
+    contraction stays shard-local.
     """
     t = state.t
 
@@ -141,15 +148,21 @@ def afto_step_aux(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
         spec, a_flat, lam_a)
 
     theta_sum = jax.tree.map(lambda th: jnp.sum(th, axis=0), state.theta)
+    if axis is not None:
+        theta_sum = jax.lax.psum(theta_sum, axis)
     gz1 = tree_axpy(-1.0, theta_sum, ga1)
     z1 = tree_axpy(-hyper.eta_z, gz1, state.z1)
     z2 = tree_axpy(-hyper.eta_z, ga2, state.z2)
     z3 = tree_axpy(-hyper.eta_z, ga3, state.z3)
 
     # ---- dual updates with projection (Eqs. 20/21)
-    cutval = cuts_lib.eval_cuts_flat(
-        a_flat, cuts_lib.flatten_point(spec, z1, z2, z3, X2, X3),
-        state.cuts_ii.c, state.cuts_ii.active)
+    if axis is None:
+        cutval = cuts_lib.eval_cuts_flat(
+            a_flat, cuts_lib.flatten_point(spec, z1, z2, z3, X2, X3),
+            state.cuts_ii.c, state.cuts_ii.active)
+    else:
+        cutval = cuts_lib.eval_cuts_worker_split(
+            state.cuts_ii, z1, z2, z3, X2, X3, axis)
     lam = proj_lambda(
         state.lam + hyper.eta_lambda * (cutval - hyper.c1(t) * state.lam),
         hyper) * state.cuts_ii.active

@@ -321,6 +321,123 @@ def unflatten_coeff(spec: FlatSpec, vec):
 
 
 # ---------------------------------------------------------------------------
+# worker-axis column sharding (the b-block columns partition by worker)
+# ---------------------------------------------------------------------------
+#
+# Column order within the canonical (P, D) matrix is (a1, a2, a3, b2, b3):
+# every a-block column depends only on master variables (replicated on a
+# worker mesh), while each b-block leaf flattens its (N, ...) point shape
+# worker-major — so worker j's coefficients are contiguous within every
+# b-leaf and the b-columns split cleanly into per-worker groups.  A shard
+# therefore carries [all a-columns | its own workers' b-columns], which is
+# a valid local FlatCuts over a `shard_spec` with n_loc = N / n_shards.
+
+def n_a_leaves(spec: FlatSpec) -> int:
+    """Number of leaves in the master (a1, a2, a3) blocks."""
+    return sum(spec.nleaves[:3])
+
+
+def b_col_start(spec: FlatSpec) -> int:
+    """First column of the worker (b2, b3) blocks."""
+    na = n_a_leaves(spec)
+    return spec.offsets[na] if na < len(spec.offsets) else spec.d_total
+
+
+def shard_spec(spec: FlatSpec, n_shards: int) -> FlatSpec:
+    """The per-shard column layout: a-leaves unchanged, b-leaves carry
+    n_loc = N / n_shards workers."""
+    na = n_a_leaves(spec)
+    shapes = []
+    for i, shp in enumerate(spec.shapes):
+        if i < na:
+            shapes.append(shp)
+        else:
+            n = shp[0]
+            if n % n_shards != 0:
+                raise ValueError(
+                    f"worker axis {n} not divisible by {n_shards} shards")
+            shapes.append((n // n_shards,) + shp[1:])
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    offsets = tuple(np.concatenate([[0], np.cumsum(sizes)[:-1]])
+                    .astype(int)) if sizes else ()
+    return FlatSpec(tdefs=spec.tdefs, nleaves=spec.nleaves,
+                    shapes=tuple(shapes), dtypes=spec.dtypes,
+                    sizes=sizes, offsets=offsets, d_total=sum(sizes))
+
+
+def shard_cuts(fc: FlatCuts, n_shards: int) -> FlatCuts:
+    """Partition the canonical matrix by worker columns: returns a
+    FlatCuts whose `a` is (n_shards, P, D_loc) — shard w holds the
+    a-columns (replicated) plus worker-group w's b-columns — with the
+    `shard_spec` local layout.  `c`/`active`/`age` stay replicated.
+    The column partition is exact: `unshard_cuts` inverts bit-identically.
+    """
+    spec = fc.spec
+    lspec = shard_spec(spec, n_shards)
+    p = fc.a.shape[0]
+    na = n_a_leaves(spec)
+    parts = []
+    for i in range(len(spec.sizes)):
+        col = fc.a[:, spec.offsets[i]:spec.offsets[i] + spec.sizes[i]]
+        if i < na:
+            parts.append(jnp.broadcast_to(col[None],
+                                          (n_shards, p, spec.sizes[i])))
+        else:
+            parts.append(col.reshape(p, n_shards, lspec.sizes[i])
+                         .transpose(1, 0, 2))
+    return FlatCuts(a=jnp.concatenate(parts, axis=-1), c=fc.c,
+                    active=fc.active, age=fc.age, spec=lspec)
+
+
+def unshard_cuts(fc: FlatCuts, spec: FlatSpec) -> FlatCuts:
+    """Inverse of `shard_cuts`: reassemble the canonical (P, D) matrix
+    from the (n_shards, P, D_loc) per-shard column groups (`spec` is the
+    global layout)."""
+    lspec = fc.spec
+    p = fc.a.shape[1]
+    na = n_a_leaves(spec)
+    cols = []
+    for i in range(len(spec.sizes)):
+        col = fc.a[:, :, lspec.offsets[i]:lspec.offsets[i] + lspec.sizes[i]]
+        if i < na:
+            cols.append(col[0])
+        else:
+            cols.append(col.transpose(1, 0, 2).reshape(p, spec.sizes[i]))
+    return FlatCuts(a=jnp.concatenate(cols, axis=-1), c=fc.c,
+                    active=fc.active, age=fc.age, spec=spec)
+
+
+def a_cols_matvec(fc: FlatCuts, z1, z2, z3):
+    """Raw (unmasked, un-offset) master contraction A_a @ [z1; z2; z3]
+    over the a-columns only.  THE single definition of the a/b column
+    split — the sharded step, refresh and rollouts all route through
+    this + `b_cols_matvec` so the boundary cannot drift between them."""
+    da = b_col_start(fc.spec)
+    va = flatten_point(fc.spec, z1, z2, z3, None, None)[:da]
+    return fc.a[:, :da].astype(jnp.float32) @ va
+
+
+def b_cols_matvec(fc: FlatCuts, X2, X3):
+    """Raw per-slot worker contraction sum_j <b_j, x_j> over this view's
+    b-columns (shard-partial when `fc` is a `shard_cuts` local view)."""
+    da = b_col_start(fc.spec)
+    vb = flatten_point(fc.spec, None, None, None, X2, X3)[da:]
+    return fc.a[:, da:].astype(jnp.float32) @ vb
+
+
+def eval_cuts_worker_split(fc: FlatCuts, z1, z2, z3, X2, X3, axis: str):
+    """Global cut values from a worker-sharded polytope: the replicated
+    a-column contraction runs shard-locally while the local b-column
+    contribution — the per-worker cut scalars, the only quantity Alg. 1
+    federates every iteration — is `psum`'d over the worker mesh axis.
+    Forward-only (raw psum has no usable transpose on this jax;
+    differentiated sharded paths hand-assemble their VJPs in
+    `repro.core.sharded`)."""
+    cut_b = jax.lax.psum(b_cols_matvec(fc, X2, X3), axis)
+    return (a_cols_matvec(fc, z1, z2, z3) + cut_b - fc.c) * fc.active
+
+
+# ---------------------------------------------------------------------------
 # evaluation / contraction (all consume the flat matrix directly)
 # ---------------------------------------------------------------------------
 

@@ -19,14 +19,22 @@ T-iteration trajectory of Alg. 1 driven inside a single donated-buffer
 The scan carry holds each polytope as canonical `FlatCuts` — two dense
 (P, D)/(P,) array groups instead of ~10 stacked block trees — so the
 carry is small, `cut_refresh` writes rows in place, and the dense
-matrix is directly shardable over a future worker-mesh `shard_map`
-(a tree of stacked blocks is not).
+matrix shards by worker columns (a tree of stacked blocks does not).
 
 `run_scanned` drives one trajectory; `run_swept` vmaps the same scan
 body over a leading run axis R (stacked initial states, stacked schedule
 masks, per-run data and sweepable hyper scalars) so a whole benchmark
 sweep — every (seed, method) cell — is ONE donated XLA dispatch
 returning (R,)-leading states and histories.
+
+Both accept `mesh=` (a `jax.sharding.Mesh` with a "worker" axis) and
+then run shard_map-distributed: worker-stacked state, per-worker data,
+schedule-mask columns and the polytope b-columns partition over the
+axis while master state replicates, and the only cross-shard traffic is
+the cut-scalar / z-sized psums of the paper's cut exchange (the refresh
+math lives in `repro.core.sharded`; partitioning rules in
+`repro.fed.sharding.afto_state_specs`).  Sharded trajectories match the
+replicated engines to f32 tolerance (`tests/test_sharded_engine.py`).
 
 `metrics_fn` must be JAX-traceable here (it is traced into the scan
 body); host-callback metrics still work through the eager path of
@@ -47,6 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import afto as afto_lib
+from repro.core import cuts as cuts_lib
+from repro.core import sharded as sharded_lib
 from repro.core import stationarity as stat_lib
 from repro.core.scheduler import Schedule
 from repro.core.types import AFTOState, Hyper, TrilevelProblem
@@ -125,8 +135,10 @@ def _cached_build(cache: Dict[tuple, tuple], key: tuple, build,
     return hit[0]
 
 # How many times each builder actually traced a new scan/sweep — the
-# retrace regression tests assert this stays flat across warm calls.
-BUILD_COUNTS = {"scan": 0, "sweep": 0}
+# retrace regression tests assert this stays flat across warm calls
+# (the *_sharded counters cover the worker-mesh shard_map paths).
+BUILD_COUNTS = {"scan": 0, "sweep": 0, "scan_sharded": 0,
+                "sweep_sharded": 0}
 
 # Hyper fields that determine array shapes or unrolled loop lengths;
 # they must be Python constants at trace time and cannot be swept.
@@ -134,28 +146,37 @@ _STATIC_HYPER_FIELDS = frozenset({"n_workers", "p_max", "k_inner", "d1"})
 
 
 def _make_step_body(problem: TrilevelProblem, hyper: Hyper,
-                    metrics_fn: Optional[Callable], keys):
-    """The per-iteration scan body shared by run_scanned and run_swept."""
+                    metrics_fn: Optional[Callable], keys,
+                    axis: Optional[str] = None):
+    """The per-iteration scan body shared by run_scanned and run_swept.
+
+    axis: worker mesh axis when tracing inside the shard_map'd engines —
+    `problem`/state/mask then carry this shard's workers only and the
+    refresh dispatches to the sharded cut generation."""
     def step_body(carry, xs):
         st, hist = carry
         mask, it, slot = xs
-        st, step_aux = afto_lib.afto_step_aux(problem, hyper, st, mask)
+        st, step_aux = afto_lib.afto_step_aux(problem, hyper, st, mask,
+                                              axis=axis)
         do_refresh = ((it + 1) % hyper.t_pre == 0) & (it < hyper.t1)
-        st = jax.lax.cond(
-            do_refresh,
-            lambda s: afto_lib.cut_refresh(problem, hyper, s),
-            lambda s: s, st)
+        refresh = (
+            (lambda s: afto_lib.cut_refresh(problem, hyper, s))
+            if axis is None else
+            (lambda s: sharded_lib.cut_refresh_sharded(problem, hyper, s,
+                                                       axis)))
+        st = jax.lax.cond(do_refresh, refresh, lambda s: s, st)
 
         def write(h):
             # the gap reuses the step's flat cut operator + cut values;
             # a refresh rewrote the polytope, so recompute them there.
             aux = jax.lax.cond(
                 do_refresh,
-                lambda s, _a: stat_lib.make_gap_aux(problem, hyper, s),
+                lambda s, _a: stat_lib.make_gap_aux(problem, hyper, s,
+                                                    axis=axis),
                 lambda _s, a: a, st, step_aux)
             vals = {
                 "gap_sq": stat_lib.stationarity_gap_sq(
-                    problem, hyper, st, aux=aux),
+                    problem, hyper, st, aux=aux, axis=axis),
                 "n_cuts_i": jnp.sum(st.cuts_i.active),
                 "n_cuts_ii": jnp.sum(st.cuts_ii.active),
             }
@@ -192,10 +213,95 @@ def _metric_keys(problem, hyper, metrics_fn, state):
     return tuple(keys)
 
 
+# ---------------------------------------------------------------------------
+# worker-mesh sharded dispatch (shard_map over the cut-exchange axis)
+# ---------------------------------------------------------------------------
+
+def _worker_axis_size(mesh) -> int:
+    shape = dict(mesh.shape)
+    if sharded_lib.WORKER_AXIS not in shape:
+        raise ValueError(
+            f"mesh must carry a {sharded_lib.WORKER_AXIS!r} axis; got "
+            f"axes {tuple(shape)} (see repro.launch.mesh.make_worker_mesh)")
+    return shape[sharded_lib.WORKER_AXIS]
+
+
+def _check_mesh(mesh, hyper: Hyper) -> int:
+    w = _worker_axis_size(mesh)
+    if hyper.n_workers % w != 0:
+        raise ValueError(
+            f"n_workers={hyper.n_workers} must divide over the "
+            f"{w}-shard worker mesh")
+    return w
+
+
+def _shard_state(state: AFTOState, n_shards: int) -> AFTOState:
+    """Host-side sharded view: polytopes become the stacked-local column
+    groups of `cuts.shard_cuts`; every other leaf keeps its global shape
+    (the shard_map in_specs split the worker-stacked axes)."""
+    return dataclasses.replace(
+        state,
+        cuts_i=cuts_lib.shard_cuts(state.cuts_i, n_shards),
+        cuts_ii=cuts_lib.shard_cuts(state.cuts_ii, n_shards))
+
+
+def _unshard_state(state: AFTOState, spec_i, spec_ii) -> AFTOState:
+    return dataclasses.replace(
+        state,
+        cuts_i=cuts_lib.unshard_cuts(state.cuts_i, spec_i),
+        cuts_ii=cuts_lib.unshard_cuts(state.cuts_ii, spec_ii))
+
+
+def _map_cuts(state: AFTOState, fn) -> AFTOState:
+    return dataclasses.replace(
+        state,
+        cuts_i=dataclasses.replace(state.cuts_i, a=fn(state.cuts_i.a)),
+        cuts_ii=dataclasses.replace(state.cuts_ii, a=fn(state.cuts_ii.a)))
+
+
+def _state_specs(state_sharded, lead=()):
+    from repro.fed import sharding as shd
+    return shd.afto_state_specs(state_sharded,
+                                axis=sharded_lib.WORKER_AXIS, lead=lead)
+
+
+def _build_scan_sharded(problem: TrilevelProblem, hyper: Hyper,
+                        metrics_fn: Optional[Callable], keys,
+                        donate: bool, mesh, state_specs):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    BUILD_COUNTS["scan_sharded"] += 1
+    axis = sharded_lib.WORKER_AXIS
+
+    def scan_all(st, hist, data, masks, its, slots):
+        # drop the shard_map-local leading worker axis of the cut blocks
+        st = _map_cuts(st, lambda a: a[0])
+        prob = dataclasses.replace(problem, data=data)
+        step_body = _make_step_body(prob, hyper, metrics_fn, keys,
+                                    axis=axis)
+        (st, hist), _ = jax.lax.scan(step_body, (st, hist),
+                                     (masks, its, slots))
+        return _map_cuts(st, lambda a: a[None]), hist
+
+    hist_specs = {k: P() for k in keys}
+    from repro.fed import sharding as shd
+    data_specs = shd.worker_data_specs(problem.data, axis=axis)
+    fn = shard_map(
+        scan_all, mesh=mesh,
+        in_specs=(state_specs, hist_specs, data_specs,
+                  P(None, axis), P(), P()),
+        out_specs=(state_specs, hist_specs),
+        check_rep=False)
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(fn, donate_argnums=donate_argnums)
+
+
 def run_scanned(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
                 metrics_fn: Optional[Callable] = None,
                 metrics_every: int = 10,
-                state: Optional[AFTOState] = None) -> RunResult:
+                state: Optional[AFTOState] = None,
+                mesh=None) -> RunResult:
     """Run the full AFTO trajectory over `schedule` in one compiled scan.
 
     Produces the same history layout as the eager runner: arrays
@@ -204,8 +310,25 @@ def run_scanned(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
     keys.  `host_time` is prorated from the single dispatch's total —
     per-iteration host timestamps do not exist inside a compiled
     trajectory.
+
+    mesh: a `jax.sharding.Mesh` with a "worker" axis distributes the
+    federation via shard_map — worker-stacked state, schedule-mask
+    columns, per-worker data and the polytope b-columns partition over
+    the axis; only cut scalars / z-sized reductions cross it (see
+    `repro.core.sharded`).  `hyper.n_workers` must be divisible by the
+    axis size; results match the single-device scan to f32 tolerance
+    (the returned state is reassembled to the canonical global layout).
+    `metrics_fn` is traced on the shard-local state view — metrics over
+    master variables (z's, lam, cut masks) are exact and replicated;
+    a metric that reads the worker stacks computes a PER-SHARD partial
+    value, and the history records whichever shard's buffer backs the
+    replicated-out layout (shard 0 in practice — the engine cannot
+    know how to reduce an arbitrary user metric).  psum inside your
+    metrics_fn over `repro.core.sharded.WORKER_AXIS` if you need the
+    global value.
     """
     n_iterations = schedule.n_iterations
+    n_shards = None if mesh is None else _check_mesh(mesh, hyper)
     donate = state is None
     if state is None:
         # init_state aliases some buffers across fields (e.g. z3 and
@@ -216,18 +339,34 @@ def run_scanned(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
 
     keys = _metric_keys(problem, hyper, metrics_fn, state)
     cache_key = (id(problem), id(metrics_fn), _hyper_key(hyper),
-                 n_iterations, metrics_every, donate)
-    fn = _cached_build(
-        _CACHE, cache_key,
-        lambda: _build_scan(problem, hyper, metrics_fn, keys, donate),
-        (problem, metrics_fn))
+                 n_iterations, metrics_every, donate, mesh)
+    if mesh is None:
+        fn = _cached_build(
+            _CACHE, cache_key,
+            lambda: _build_scan(problem, hyper, metrics_fn, keys, donate),
+            (problem, metrics_fn))
+    else:
+        spec_i, spec_ii = state.cuts_i.spec, state.cuts_ii.spec
+        state = _shard_state(state, n_shards)
+        fn = _cached_build(
+            _CACHE, cache_key,
+            lambda: _build_scan_sharded(problem, hyper, metrics_fn, keys,
+                                        donate, mesh,
+                                        _state_specs(state)),
+            (problem, metrics_fn, mesh))
 
     hist0 = {k: jnp.zeros((n_records,), jnp.float32) for k in keys}
     masks = jnp.asarray(schedule.active, jnp.float32)
     its = jnp.arange(n_iterations, dtype=jnp.int32)
 
     t_start = time.perf_counter()
-    state, hist = fn(state, hist0, masks, its, jnp.asarray(slots))
+    if mesh is None:
+        state, hist = fn(state, hist0, masks, its, jnp.asarray(slots))
+    else:
+        data = jax.tree.map(jnp.asarray, problem.data)
+        state, hist = fn(state, hist0, data, masks, its,
+                         jnp.asarray(slots))
+        state = _unshard_state(state, spec_i, spec_ii)
     jax.block_until_ready(state)
     elapsed = time.perf_counter() - t_start
 
@@ -283,13 +422,58 @@ def _build_sweep(problem: TrilevelProblem, hyper: Hyper,
     return jax.jit(sweep_all, donate_argnums=(0,))
 
 
+def _build_sweep_sharded(problem: TrilevelProblem, hyper: Hyper,
+                         metrics_fn: Optional[Callable], keys,
+                         sweep_names: tuple, has_data: bool, mesh,
+                         state_specs):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    BUILD_COUNTS["sweep_sharded"] += 1
+    axis = sharded_lib.WORKER_AXIS
+
+    def one_run(st, hist, masks, sweep_vals, data, its, slots):
+        prob = dataclasses.replace(problem, data=data)
+        hyp = dataclasses.replace(
+            hyper, **dict(zip(sweep_names, sweep_vals))) \
+            if sweep_names else hyper
+        step_body = _make_step_body(prob, hyp, metrics_fn, keys, axis=axis)
+        (st, hist), _ = jax.lax.scan(step_body, (st, hist),
+                                     (masks, its, slots))
+        return st, hist
+
+    def sweep_all(st, hist, data, masks, sweep_vals, its, slots):
+        # (R, 1, P, D_loc) cut blocks -> (R, P, D_loc) inside the shard
+        st = _map_cuts(st, lambda a: a[:, 0])
+        st, hist = jax.vmap(
+            one_run,
+            in_axes=(0, 0, 0, 0, 0 if has_data else None, None, None))(
+                st, hist, masks, sweep_vals, data, its, slots)
+        return _map_cuts(st, lambda a: a[:, None]), hist
+
+    hist_specs = {k: P() for k in keys}
+    from repro.fed import sharding as shd
+    data_lead = (None,) if has_data else ()
+    data_specs = shd.worker_data_specs(problem.data, axis=axis,
+                                       lead=data_lead)
+    sweep_specs = tuple(P() for _ in sweep_names)
+    fn = shard_map(
+        sweep_all, mesh=mesh,
+        in_specs=(state_specs, hist_specs, data_specs,
+                  P(None, None, axis), sweep_specs, P(), P()),
+        out_specs=(state_specs, hist_specs),
+        check_rep=False)
+    return jax.jit(fn, donate_argnums=(0, 1))
+
+
 def run_swept(problem: TrilevelProblem, hyper: Hyper,
               schedules: Sequence[Schedule],
               metrics_fn: Optional[Callable] = None,
               metrics_every: int = 10,
               states: Optional[AFTOState] = None,
               data=None,
-              sweep_hypers: Optional[Dict] = None) -> SweepResult:
+              sweep_hypers: Optional[Dict] = None,
+              mesh=None) -> SweepResult:
     """Run R = len(schedules) whole trajectories in ONE vmapped dispatch.
 
     The scan body of `run_scanned` is `jax.vmap`'d over a leading run
@@ -320,6 +504,13 @@ def run_swept(problem: TrilevelProblem, hyper: Hyper,
     trajectories, so per-run host seconds do not exist — each run is
     charged an equal 1/R share of the dispatch wall-clock, prorated
     over iterations exactly like the single-run engine.
+
+    mesh: worker mesh as in `run_scanned` — the run axis is vmapped
+    INSIDE the shard_map body, so the R trajectories still dispatch
+    once while the federation partitions over the "worker" axis.  The
+    sharded sweep always materializes the stacked initial states on the
+    host (the fused in-dispatch default-init is a replicated-engine
+    optimization).
     """
     schedules = list(schedules)
     if not schedules:
@@ -349,6 +540,12 @@ def run_swept(problem: TrilevelProblem, hyper: Hyper,
                 f"sweep_hypers[{name!r}] must have shape ({n_runs},), "
                 f"got {v.shape}")
 
+    n_shards = None if mesh is None else _check_mesh(mesh, hyper)
+    if mesh is not None and states is None:
+        st0 = afto_lib.init_state(problem, hyper)
+        states = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x[None], (n_runs,) + x.shape).astype(x.dtype), st0)
     init_inside = states is None
     if not init_inside:
         # private copy: the swept dispatch donates its inputs
@@ -373,12 +570,29 @@ def run_swept(problem: TrilevelProblem, hyper: Hyper,
 
     cache_key = (id(problem), id(metrics_fn), _hyper_key(hyper),
                  sweep_names, data is not None, init_inside, n_runs,
-                 n_iterations, metrics_every)
-    fn = _cached_build(
-        _SWEEP_CACHE, cache_key,
-        lambda: _build_sweep(problem, hyper, metrics_fn, keys, sweep_names,
-                             data is not None, init_inside),
-        (problem, metrics_fn))
+                 n_iterations, metrics_every, mesh)
+    if mesh is not None:
+        spec_i = states.cuts_i.spec
+        spec_ii = states.cuts_ii.spec
+        states = dataclasses.replace(
+            states,
+            cuts_i=jax.vmap(lambda fc: cuts_lib.shard_cuts(fc, n_shards))(
+                states.cuts_i),
+            cuts_ii=jax.vmap(lambda fc: cuts_lib.shard_cuts(fc, n_shards))(
+                states.cuts_ii))
+        fn = _cached_build(
+            _SWEEP_CACHE, cache_key,
+            lambda: _build_sweep_sharded(
+                problem, hyper, metrics_fn, keys, sweep_names,
+                data is not None, mesh, _state_specs(states, lead=(None,))),
+            (problem, metrics_fn, mesh))
+    else:
+        fn = _cached_build(
+            _SWEEP_CACHE, cache_key,
+            lambda: _build_sweep(problem, hyper, metrics_fn, keys,
+                                 sweep_names, data is not None,
+                                 init_inside),
+            (problem, metrics_fn))
 
     hist0 = {k: jnp.zeros((n_runs, n_records), jnp.float32) for k in keys}
     masks = jnp.asarray(
@@ -386,7 +600,19 @@ def run_swept(problem: TrilevelProblem, hyper: Hyper,
     its = jnp.arange(n_iterations, dtype=jnp.int32)
 
     t_start = time.perf_counter()
-    if init_inside:
+    if mesh is not None:
+        run_data = data if data is not None \
+            else jax.tree.map(jnp.asarray, problem.data)
+        state, hist = fn(states, hist0, run_data, masks, sweep_vals, its,
+                         jnp.asarray(slots))
+        state = dataclasses.replace(
+            state,
+            cuts_i=jax.vmap(
+                lambda fc: cuts_lib.unshard_cuts(fc, spec_i))(state.cuts_i),
+            cuts_ii=jax.vmap(
+                lambda fc: cuts_lib.unshard_cuts(fc, spec_ii))(
+                    state.cuts_ii))
+    elif init_inside:
         state, hist = fn(hist0, masks, sweep_vals, data, its,
                          jnp.asarray(slots))
     else:

@@ -41,12 +41,12 @@ def rollout3(problem: TrilevelProblem, hyper: Hyper, z1, z2,
             problem, hyper, z1, z2,
             InnerState3(x3=st.x3, z3=z3, phi=st.phi)))(st.z3)
         z3_new = tree_axpy(-hyper.eta_z, g_z, st.z3)
-        # Eq. 7: dual ascent at the new primal point
+        # Eq. 7: dual ascent at the new primal point (the worker count
+        # comes from the stacked x3, so a shard-local stack works too)
         phi_new = jax.tree.map(
-            lambda p, x, z: p + hyper.eta_dual_inner * (x - z),
-            st.phi, x3_new,
-            jax.tree.map(lambda z: jnp.broadcast_to(
-                z[None], (hyper.n_workers,) + z.shape), z3_new))
+            lambda p, x, z: p + hyper.eta_dual_inner * (
+                x - jnp.broadcast_to(z[None], x.shape)),
+            st.phi, x3_new, z3_new)
         return InnerState3(x3=x3_new, z3=z3_new, phi=phi_new), None
 
     final, _ = jax.lax.scan(round_fn, init, None, length=hyper.k_inner)
@@ -89,13 +89,11 @@ def rollout2(problem: TrilevelProblem, hyper: Hyper, z1, z3, X3,
         g_s = (st.gamma + hyper.rho2 * (cutval + st.s)) * cuts_i.active
         s_new = jnp.maximum(0.0, st.s - hyper.eta_s * g_s) * cuts_i.active
 
-        # duals at the new primal point
+        # duals at the new primal point (worker count from the stack)
         phi_new = jax.tree.map(
-            lambda p, x, z: p + hyper.eta_dual_inner * (x - z),
-            st.phi, x2_new,
-            jax.tree.map(lambda z: jnp.broadcast_to(z[None],
-                                                    (hyper.n_workers,) + z.shape),
-                         z2_new))
+            lambda p, x, z: p + hyper.eta_dual_inner * (
+                x - jnp.broadcast_to(z[None], x.shape)),
+            st.phi, x2_new, z2_new)
         cutval_new = cuts_lib.eval_cuts(cuts_i, z1, z2_new, z3, X3=X3)
         gamma_new = jnp.maximum(
             0.0, st.gamma + hyper.eta_dual_inner * (cutval_new + s_new)) \

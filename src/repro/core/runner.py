@@ -41,7 +41,8 @@ def run(problem: TrilevelProblem, hyper: Hyper,
         seeds: Optional[Sequence[int]] = None,
         sweep_states: Optional[AFTOState] = None,
         sweep_data=None,
-        sweep_hypers: Optional[Dict] = None):
+        sweep_hypers: Optional[Dict] = None,
+        mesh=None):
     """Run AFTO for `n_iterations` master iterations.
 
     mode="scan": one compiled `lax.scan` over a precomputed arrival
@@ -49,6 +50,12 @@ def run(problem: TrilevelProblem, hyper: Hyper,
     from `scheduler_cfg`).  metrics_fn(state) -> dict of scalars must be
     jit-traceable and is evaluated inside the scan every `metrics_every`
     iterations.
+
+    mesh (scan/sweep modes): a `jax.sharding.Mesh` with a "worker" axis
+    runs the trajectory shard_map-distributed — per-worker state, data,
+    schedule-mask columns and polytope b-columns partition over the
+    axis; only the cut scalars and master z-reductions are psum'd (see
+    `repro.core.engine.run_scanned` / `repro.core.sharded`).
 
     mode="sweep": R whole trajectories in one vmapped dispatch
     (returns a `SweepResult`).  Pass `schedules` (one per run), or
@@ -93,7 +100,7 @@ def run(problem: TrilevelProblem, hyper: Hyper,
         return engine_lib.run_swept(
             problem, hyper, schedules, metrics_fn=metrics_fn,
             metrics_every=metrics_every, states=sweep_states,
-            data=sweep_data, sweep_hypers=sweep_hypers)
+            data=sweep_data, sweep_hypers=sweep_hypers, mesh=mesh)
 
     if mode == "scan":
         if schedule is None:
@@ -101,10 +108,12 @@ def run(problem: TrilevelProblem, hyper: Hyper,
                 n_iterations)
         return engine_lib.run_scanned(
             problem, hyper, schedule, metrics_fn=metrics_fn,
-            metrics_every=metrics_every, state=state)
+            metrics_every=metrics_every, state=state, mesh=mesh)
     if mode != "eager":
         raise ValueError(
             f"unknown mode {mode!r}; expected 'scan'|'sweep'|'eager'")
+    if mesh is not None:
+        raise ValueError("mesh= requires mode='scan' or 'sweep'")
 
     sched = StragglerScheduler(scheduler_cfg)
 

@@ -37,6 +37,22 @@ class Schedule:
     def n_workers(self) -> int:
         return int(self.active.shape[1])
 
+    def worker_shards(self, n_shards: int) -> np.ndarray:
+        """Host-side inspection helper: the arrival masks grouped by
+        worker-mesh shard, (n_shards, T, N / n_shards).  Row w holds the
+        same contiguous column block the sharded engine's in_spec
+        assigns shard w (the engine itself slices via shard_map and does
+        not call this; `sim_time`/`max_staleness` are master-side and
+        stay global).  Raises if the worker axis doesn't partition."""
+        n = self.n_workers
+        if n % n_shards != 0:
+            raise ValueError(
+                f"{n} workers do not partition over {n_shards} shards")
+        t = self.n_iterations
+        return np.ascontiguousarray(
+            self.active.reshape(t, n_shards, n // n_shards)
+            .transpose(1, 0, 2))
+
 
 @dataclasses.dataclass
 class StragglerConfig:

@@ -20,30 +20,40 @@ from repro.core.types import AFTOState, Hyper, TrilevelProblem
 from repro.utils.tree import tree_norm_sq, tree_sub, tree_axpy
 
 
-def make_gap_aux(problem: TrilevelProblem, hyper: Hyper, state: AFTOState):
+def make_gap_aux(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
+                 axis: str = None):
     """The cut products the gap needs: the flattened II-polytope operator
     and the cut values at `state`'s point.  Structure-identical to the
     aux returned by `afto_step_aux`, so the engine can select between
     them under `lax.cond` (it must recompute when a `cut_refresh`
     rewrote the polytope after the step).  The operator is the stored
-    canonical matrix — only the point vector is assembled here."""
+    canonical matrix — only the point vector is assembled here.  With a
+    worker mesh `axis` the b-column contribution to the cut values is
+    psum'd (see `cuts.eval_cuts_worker_split`)."""
     a_flat = state.cuts_ii.a
-    cutval = cuts_lib.eval_cuts_flat(
-        a_flat,
-        cuts_lib.flatten_point(state.cuts_ii.spec, state.z1, state.z2,
-                               state.z3, state.X2, state.X3),
-        state.cuts_ii.c, state.cuts_ii.active)
+    if axis is None:
+        cutval = cuts_lib.eval_cuts_flat(
+            a_flat,
+            cuts_lib.flatten_point(state.cuts_ii.spec, state.z1, state.z2,
+                                   state.z3, state.X2, state.X3),
+            state.cuts_ii.c, state.cuts_ii.active)
+    else:
+        cutval = cuts_lib.eval_cuts_worker_split(
+            state.cuts_ii, state.z1, state.z2, state.z3,
+            state.X2, state.X3, axis)
     return {"flat_ii": a_flat, "cutval": cutval}
 
 
 def stationarity_gap_sq(problem: TrilevelProblem, hyper: Hyper,
-                        state: AFTOState, aux=None):
+                        state: AFTOState, aux=None, axis: str = None):
     """|| grad G^t ||^2 of the *unregularized* L_p (Eq. 26).
 
     aux, when given, must be `make_gap_aux`-shaped products valid at
-    `state` (the engine passes the step's own)."""
+    `state` (the engine passes the step's own).  With a worker mesh
+    `axis`, the per-worker gradient-block norms are computed shard-
+    locally and only their scalar sums cross the mesh (one psum)."""
     if aux is None:
-        aux = make_gap_aux(problem, hyper, state)
+        aux = make_gap_aux(problem, hyper, state, axis=axis)
     lam_a = state.lam * state.cuts_ii.active
     spec = state.cuts_ii.spec
     # one mat-vec: a-block gradients for the master z's plus the
@@ -62,18 +72,7 @@ def stationarity_gap_sq(problem: TrilevelProblem, hyper: Hyper,
     g1 = jax.tree.map(jnp.add, g1_f, state.theta)
     g2 = jax.tree.map(jnp.add, g2_f, gb2)
     g3 = jax.tree.map(jnp.add, g3_f, gb3)
-    gap = tree_norm_sq(g1) + tree_norm_sq(g2) + tree_norm_sq(g3)
-
-    # master z blocks
-    theta_sum = jax.tree.map(lambda th: jnp.sum(th, axis=0), state.theta)
-    gz1 = tree_axpy(-1.0, theta_sum, ga1)
-    gap = gap + tree_norm_sq(gz1) + tree_norm_sq(ga2) + tree_norm_sq(ga3)
-
-    # projected dual residuals (Eq. 27)
-    cutval = aux["cutval"]
-    lam_res = (state.lam - afto_lib.proj_lambda(
-        state.lam + hyper.eta_lambda * cutval, hyper)) / hyper.eta_lambda
-    gap = gap + jnp.sum((lam_res * state.cuts_ii.active) ** 2)
+    gap_workers = tree_norm_sq(g1) + tree_norm_sq(g2) + tree_norm_sq(g3)
 
     def theta_res(th_j, x1_j):
         stepped = jax.tree.map(
@@ -83,5 +82,22 @@ def stationarity_gap_sq(problem: TrilevelProblem, hyper: Hyper,
         return tree_norm_sq(jax.tree.map(
             lambda a, b: (a - b) / hyper.eta_theta, th_j, proj))
 
-    gap = gap + jnp.sum(jax.vmap(theta_res)(state.theta, state.X1))
+    gap_workers = gap_workers + jnp.sum(
+        jax.vmap(theta_res)(state.theta, state.X1))
+
+    # master z blocks (replicated on a worker mesh; only the theta sum
+    # and the per-worker scalar norms above cross the mesh)
+    theta_sum = jax.tree.map(lambda th: jnp.sum(th, axis=0), state.theta)
+    if axis is not None:
+        gap_workers = jax.lax.psum(gap_workers, axis)
+        theta_sum = jax.lax.psum(theta_sum, axis)
+    gz1 = tree_axpy(-1.0, theta_sum, ga1)
+    gap = gap_workers + tree_norm_sq(gz1) + tree_norm_sq(ga2) \
+        + tree_norm_sq(ga3)
+
+    # projected dual residuals (Eq. 27)
+    cutval = aux["cutval"]
+    lam_res = (state.lam - afto_lib.proj_lambda(
+        state.lam + hyper.eta_lambda * cutval, hyper)) / hyper.eta_lambda
+    gap = gap + jnp.sum((lam_res * state.cuts_ii.active) ** 2)
     return gap

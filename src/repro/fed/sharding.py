@@ -155,6 +155,59 @@ def batch_spec(mesh: Mesh, stacked: bool = False) -> P:
     return P(ax, None, None) if stacked else P(ax, None)
 
 
+# ---------------------------------------------------------------------------
+# AFTO core worker mesh: the trajectory engine's shard_map partitioning
+# ---------------------------------------------------------------------------
+
+# AFTOState fields whose leaves lead with the worker axis (N, ...)
+_WORKER_STACKED = {"X1", "X2", "X3", "theta"}
+# nested containers: which of their fields are worker-stacked
+_WORKER_STACKED_NESTED = {
+    "stale": {"z1", "z2", "z3", "lam", "theta", "t_hat"},
+    "inner3": {"x3", "phi"},
+    "inner2": {"x2", "phi"},
+}
+# FlatCuts: only the stacked-local coefficient matrix is per-shard
+_CUT_FIELDS = {"cuts_i", "cuts_ii"}
+
+
+def _attr_names(path):
+    return [str(e.name) for e in path
+            if isinstance(e, jax.tree_util.GetAttrKey)]
+
+
+def afto_state_specs(state, axis: str = "worker", lead: Tuple = ()) -> Any:
+    """PartitionSpec tree for an `AFTOState` on a worker mesh.
+
+    Worker-stacked leaves (X1/X2/X3, theta, stale views, inner duals)
+    shard their leading N axis over `axis`; master leaves (z1/z2/z3,
+    lam, gamma_k, t, cut c/active/age) replicate; the cut coefficient
+    matrices must already be in the `cuts.shard_cuts` stacked-local
+    layout (n_shards, P, D_loc), whose leading axis shards over `axis`.
+
+    lead: extra leading spec entries OUTSIDE the worker axis — (None,)
+    for the sweep engine's run axis.
+    """
+    def spec_for(path, leaf):
+        names = _attr_names(path)
+        head = names[0] if names else ""
+        if head in _WORKER_STACKED:
+            return P(*lead, axis)
+        if head in _CUT_FIELDS:
+            return P(*lead, axis) if names[-1] == "a" else P(*lead)
+        if head in _WORKER_STACKED_NESTED:
+            if names[-1] in _WORKER_STACKED_NESTED[head]:
+                return P(*lead, axis)
+            return P(*lead)
+        return P(*lead)            # z1, z2, z3, lam, gamma_k, t
+    return jax.tree_util.tree_map_with_path(spec_for, state)
+
+
+def worker_data_specs(data, axis: str = "worker", lead: Tuple = ()) -> Any:
+    """Every `problem.data` leaf leads with the worker axis."""
+    return jax.tree.map(lambda _: P(*lead, axis), data)
+
+
 def cache_specs(cache, mesh: Mesh, batch_sharded: bool = True,
                 kv_seq_sharded: bool = False) -> Any:
     """Decode caches: (R, B, ...) leaves — shard batch over data (when it

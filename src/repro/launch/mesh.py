@@ -26,6 +26,28 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 4):
         axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
 
+def make_worker_mesh(n_shards: int, axis_name: str = "worker"):
+    """1-D federation mesh for the sharded trajectory engine
+    (`repro.core.engine.run_scanned(mesh=...)`): `n_shards` devices, one
+    axis.  Uses the classic Mesh API so fake-device CPU runs (set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+    initializes) work on every jax the repo supports.  `axis_name`
+    defaults to the engine's "worker"; `launch.train --mesh-workers`
+    passes "data" to reuse the LLM zoo's worker-axis partitioning rules.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    if len(devices) < n_shards:
+        raise ValueError(
+            f"worker mesh needs {n_shards} devices but only "
+            f"{len(devices)} are visible; launch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards} (before "
+            "jax initializes) for a fake-device CPU mesh")
+    return Mesh(np.asarray(devices[:n_shards]), (axis_name,))
+
+
 # TPU v5e hardware constants used by the roofline analysis
 PEAK_FLOPS_BF16 = 197e12       # per chip
 HBM_BW = 819e9                 # bytes/s per chip

@@ -44,6 +44,49 @@ def _chunk_tokens(cfg, args, start: int, stop: int) -> np.ndarray:
         for it in range(start, stop)])
 
 
+def _worker_mesh_put(state, n_shards):
+    """Place the fed state on an `n_shards`-device worker mesh: stacked
+    per-worker leaves (X-stacks, duals, stale views) shard their leading
+    N axis over the mesh's "data" axis and the cut b-blocks shard their
+    worker axis; master leaves replicate.  Returns (mesh, state,
+    batch_sharding_fn) — GSPMD then partitions the chunked scan over
+    workers, riding the same fake-device XLA_FLAGS machinery as the
+    dry-run (launch with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import make_worker_mesh
+
+    mesh = make_worker_mesh(n_shards, axis_name="data")
+    stacked = {"X1", "X2", "X3", "theta", "stale_lam", "stale_theta",
+               "z2"}
+    cut_fields = {"cuts", "cuts_i"}
+
+    def rule(path, leaf):
+        names = [str(e.name) for e in path
+                 if isinstance(e, jax.tree_util.GetAttrKey)]
+        head = names[0] if names else ""
+        if head in stacked and leaf.ndim >= 1 \
+                and leaf.shape[0] % n_shards == 0:
+            return P("data")
+        if head in cut_fields and ("b2" in names or "b3" in names) \
+                and leaf.ndim >= 2 and leaf.shape[1] % n_shards == 0:
+            return P(None, "data")
+        return P()
+
+    specs = jax.tree_util.tree_map_with_path(rule, state)
+    named = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    state = jax.device_put(state, named)
+
+    def put_batch(toks, masks):
+        """tokens (chunk, N, b, s) / masks (chunk, N): worker axis 1."""
+        tok_s = NamedSharding(mesh, P(None, "data"))
+        return (jax.device_put(toks, tok_s), jax.device_put(masks, tok_s))
+
+    return mesh, state, put_batch
+
+
 def run_afto_scan(cfg, args, hyper, state, sched, val_loss) -> dict:
     """Chunked compiled trajectory: `--scan-chunk` master iterations per
     donated-buffer lax.scan dispatch (defaulting to `--log-every`, the
@@ -53,12 +96,19 @@ def run_afto_scan(cfg, args, hyper, state, sched, val_loss) -> dict:
     chunk grow to amortize dispatch overhead at real model scale while
     keeping the log cadence; losses are still evaluated at chunk
     boundaries, so a chunk larger than `log_every` logs once per chunk
-    (at the first crossed `log_every` boundary)."""
+    (at the first crossed `log_every` boundary).  `--mesh-workers N`
+    additionally distributes the federation over an N-device worker
+    mesh (`_worker_mesh_put`)."""
     schedule = sched.precompute(args.steps)
     chunk = max(1, args.scan_chunk or args.log_every)
     # init_fed_state may alias buffers across fields; donation needs
     # each buffer to appear once.
     state = jax.tree.map(jnp.array, state)
+    put_batch = None
+    if args.mesh_workers:
+        mesh, state, put_batch = _worker_mesh_put(state, args.mesh_workers)
+        print(f"worker mesh: {dict(mesh.shape)} over "
+              f"{args.workers} federated workers")
 
     def body(st, xs):
         toks, mask, it = xs
@@ -80,8 +130,11 @@ def run_afto_scan(cfg, args, hyper, state, sched, val_loss) -> dict:
     for start in range(0, args.steps, chunk):
         stop = min(start + chunk, args.steps)
         toks = _chunk_tokens(cfg, args, start, stop)
-        state = run_chunk(state, jnp.asarray(toks),
-                          jnp.asarray(schedule.active[start:stop]),
+        toks = jnp.asarray(toks)
+        masks = jnp.asarray(schedule.active[start:stop])
+        if put_batch is not None:
+            toks, masks = put_batch(toks, masks)
+        state = run_chunk(state, toks, masks,
                           jnp.arange(start, stop, dtype=jnp.int32))
         # log whenever a log_every boundary was crossed inside the chunk
         # (every chunk when chunk == log_every, the default) or at the end
@@ -114,6 +167,8 @@ def run_afto(cfg, args) -> dict:
 
     if args.engine == "scan":
         return run_afto_scan(cfg, args, hyper, state, sched, val_loss)
+    if args.mesh_workers:
+        raise ValueError("--mesh-workers requires --engine scan")
 
     step = jax.jit(lambda st, bt, m: afto_llm_step(cfg, hyper, st, bt, m))
     refresh = jax.jit(lambda st, bt: cut_refresh_llm(cfg, hyper, st, bt))
@@ -191,6 +246,13 @@ def main():
                          "Larger chunks amortize dispatch overhead at "
                          "real model scale independently of the log "
                          "cadence")
+    ap.add_argument("--mesh-workers", type=int, default=None,
+                    help="distribute the federation over this many "
+                         "devices (--engine scan): worker-stacked state "
+                         "and cut b-blocks shard over a 1-axis mesh. "
+                         "Needs >= N visible devices — set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N for "
+                         "a fake-device CPU mesh (the dry-run machinery)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)

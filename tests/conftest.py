@@ -1,9 +1,20 @@
 import os
 import sys
 
-# tests see the real single CPU device (the 512-device override lives
-# ONLY in repro.launch.dryrun); keep math in f32 for tight tolerances.
+# tests see CPU devices; the worker-mesh suite (test_sharded_engine.py)
+# needs a small fake-device mesh, and the count must be fixed before jax
+# initializes a backend — so the whole suite runs on 8 fake CPU devices
+# (single-device code paths are unaffected: unsharded jits execute on
+# device 0).  The 512-device production override lives ONLY in
+# repro.launch.dryrun.  Keep math in f32 for tight tolerances.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    # append rather than setdefault: an unrelated pre-set XLA_FLAGS must
+    # not silently drop the fake devices (and with them every sharded
+    # conformance test via the device_count skipif)
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -45,3 +56,36 @@ def make_quadratic_problem(n_workers: int = 4, dim: int = 3, seed: int = 0):
         f1=f1, f2=f2, f3=f3, data=data, n_workers=n_workers,
         x1_init=jnp.zeros(dim), x2_init=jnp.zeros(dim),
         x3_init=jnp.zeros(dim))
+
+
+# ---------------------------------------------------------------------------
+# shared small-problem builders (hoisted from the engine test files so
+# test_engine / test_system / test_sharded_engine use ONE definition)
+# ---------------------------------------------------------------------------
+
+def make_hyper(**kw):
+    """The quickstart-scale Hyper used across engine/system tests."""
+    from repro.core.types import Hyper
+
+    base = dict(n_workers=4, s_active=3, tau=5, k_inner=3, p_max=6,
+                t_pre=5, t1=100, eta_x=0.05, eta_z=0.05, d1=3)
+    base.update(kw)
+    return Hyper(**base)
+
+
+def make_straggler_cfg(**kw):
+    """The matching 1-straggler arrival-process config."""
+    from repro.core.scheduler import StragglerConfig
+
+    base = dict(n_workers=4, s_active=3, tau=5, n_stragglers=1,
+                straggler_slowdown=5.0, seed=0)
+    base.update(kw)
+    return StragglerConfig(**base)
+
+
+def make_schedules(n_iterations, seeds, **cfg_kw):
+    """One precomputed schedule per seed (shared cfg overrides)."""
+    from repro.core.scheduler import StragglerScheduler
+
+    return [StragglerScheduler(make_straggler_cfg(seed=s, **cfg_kw))
+            .precompute(n_iterations) for s in seeds]

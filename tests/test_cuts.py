@@ -271,6 +271,93 @@ def test_spec_is_cached_per_layout():
 
 
 # ---------------------------------------------------------------------------
+# worker-column sharding of the canonical operator
+# ---------------------------------------------------------------------------
+
+def test_shard_unshard_roundtrip_bit_identical():
+    """The worker-column partition is exact: shard -> unshard reproduces
+    the canonical matrix (and metadata) bitwise, and each shard's local
+    spec carries n_loc workers on the b-block point shapes."""
+    fc, _ = _nested_cuts(p_max=4, n_workers=4)
+    for w in (1, 2, 4):
+        sh = cuts_lib.shard_cuts(fc, w)
+        assert sh.a.shape == (w, 4, sh.spec.d_total)
+        na = cuts_lib.n_a_leaves(fc.spec)
+        for i, shp in enumerate(sh.spec.shapes):
+            if i >= na:
+                assert shp[0] == 4 // w
+        back = cuts_lib.unshard_cuts(sh, fc.spec)
+        np.testing.assert_array_equal(np.asarray(back.a), np.asarray(fc.a))
+        np.testing.assert_array_equal(np.asarray(back.c), np.asarray(fc.c))
+        assert back.spec == fc.spec
+    with pytest.raises(ValueError):
+        cuts_lib.shard_cuts(fc, 3)
+
+
+def _worker_split_eval_body(p_max, n_workers, n_shards, active_mask, seed):
+    """Partitioning the (P, D) operator by worker columns and summing the
+    per-shard `cut_eval` contributions reproduces the full-width
+    contraction for arbitrary active-row masks.
+
+    Each shard contributes its b-column mat-vec; shard 0 also carries the
+    replicated a-columns and the -c offset.  The partition covers every
+    column exactly once (bit-identical shard->unshard round trip above),
+    so the summed contraction differs from the full-width one only by
+    f32 re-association — asserted at tight tolerance.
+    """
+    key = jax.random.PRNGKey(seed)
+    tpl = jnp.zeros((2,))
+    fc = cuts_lib.empty_cuts(p_max, n_workers, tpl, tpl, tpl)
+    for t in range(p_max):
+        k = jax.random.fold_in(key, t)
+        fc = cuts_lib.add_cut(fc, {
+            "a1": jax.random.normal(k, (2,)),
+            "a2": jax.random.normal(jax.random.fold_in(k, 1), (2,)),
+            "a3": jax.random.normal(jax.random.fold_in(k, 2), (2,)),
+            "b2": jax.random.normal(jax.random.fold_in(k, 3),
+                                    (n_workers, 2)),
+            "b3": jax.random.normal(jax.random.fold_in(k, 4),
+                                    (n_workers, 2)),
+        }, float(t) * 0.1, t)
+    fc = cuts_lib.drop_inactive(fc, jnp.asarray(active_mask))
+
+    kp = jax.random.fold_in(key, 999)
+    z1 = jax.random.normal(kp, (2,))
+    z2 = jax.random.normal(jax.random.fold_in(kp, 1), (2,))
+    z3 = jax.random.normal(jax.random.fold_in(kp, 2), (2,))
+    X2 = jax.random.normal(jax.random.fold_in(kp, 3), (n_workers, 2))
+    X3 = jax.random.normal(jax.random.fold_in(kp, 4), (n_workers, 2))
+
+    v = cuts_lib.flatten_point(fc.spec, z1, z2, z3, X2, X3)
+    want = cuts_lib.eval_cuts_flat(fc.a, v, fc.c, fc.active, impl="ref")
+
+    sh = cuts_lib.shard_cuts(fc, n_shards)
+    da = cuts_lib.b_col_start(sh.spec)
+    n_loc = n_workers // n_shards
+    total = jnp.zeros((p_max,))
+    for w in range(n_shards):
+        X2w = X2[w * n_loc:(w + 1) * n_loc]
+        X3w = X3[w * n_loc:(w + 1) * n_loc]
+        vb = cuts_lib.flatten_point(sh.spec, None, None, None,
+                                    X2w, X3w)[da:]
+        total = total + (sh.a[w, :, da:] @ vb) * fc.active
+        if w == 0:      # replicated a-columns + offset counted once
+            va = cuts_lib.flatten_point(sh.spec, z1, z2, z3,
+                                        None, None)[:da]
+            total = total + cuts_lib.eval_cuts_flat(
+                sh.a[w, :, :da], va, fc.c, fc.active, impl="ref")
+    np.testing.assert_allclose(np.asarray(total), np.asarray(want),
+                               rtol=2e-6, atol=1e-6)
+
+
+def test_worker_split_eval_matches_full_width():
+    _worker_split_eval_body(4, 4, 2, np.array([1, 0, 1, 1], np.float32),
+                            seed=0)
+    _worker_split_eval_body(3, 6, 3, np.array([0, 1, 1], np.float32),
+                            seed=5)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis: round-trips + incremental-maintenance drift guard
 # ---------------------------------------------------------------------------
 
@@ -412,6 +499,20 @@ if HAVE_HYPOTHESIS:
     @given(_op_sequences(), st.integers(0, 2 ** 31 - 1))
     def test_incremental_maintenance_no_drift(ops_case, seed):
         _maintenance_drift_body(ops_case, seed)
+
+    @settings(max_examples=25, deadline=None)
+    @given(p_max=st.integers(1, 5), n_loc=st.integers(1, 3),
+           n_shards=st.sampled_from((1, 2, 3)),
+           active_bits=st.lists(st.booleans(), min_size=5, max_size=5),
+           seed=st.integers(0, 2 ** 31 - 1))
+    def test_worker_column_partition_property(p_max, n_loc, n_shards,
+                                              active_bits, seed):
+        """Arbitrary (P, workers, shards, active masks): per-shard
+        `cut_eval` contributions over the worker-column partition sum to
+        the full-width contraction (and shard->unshard is exact)."""
+        _worker_split_eval_body(
+            p_max, n_loc * n_shards, n_shards,
+            np.asarray(active_bits[:p_max], np.float32), seed)
 else:                                      # pragma: no cover
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_flatten_roundtrip_property():
@@ -419,4 +520,8 @@ else:                                      # pragma: no cover
 
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_incremental_maintenance_no_drift():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_worker_column_partition_property():
         pass

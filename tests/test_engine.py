@@ -7,25 +7,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import make_quadratic_problem
-from repro.core import (Hyper, StragglerConfig, StragglerScheduler, run,
-                        run_scanned, run_swept)
+from conftest import (make_hyper, make_quadratic_problem, make_schedules,
+                      make_straggler_cfg)
+from repro.core import StragglerScheduler, run, run_scanned, run_swept
 from repro.core import engine as engine_lib
 from repro.core.engine import SweepResult, record_slots
 
-
-def _hyper(**kw):
-    base = dict(n_workers=4, s_active=3, tau=5, k_inner=3, p_max=6,
-                t_pre=5, t1=100, eta_x=0.05, eta_z=0.05, d1=3)
-    base.update(kw)
-    return Hyper(**base)
-
-
-def _cfg(**kw):
-    base = dict(n_workers=4, s_active=3, tau=5, n_stragglers=1,
-                straggler_slowdown=5.0, seed=0)
-    base.update(kw)
-    return StragglerConfig(**base)
+# shared small-problem builders live in conftest (one definition for
+# test_engine / test_system / test_sharded_engine)
+_hyper = make_hyper
+_cfg = make_straggler_cfg
 
 
 # ---------------------------------------------------------------------------
@@ -224,9 +215,7 @@ def test_scan_cache_hit_does_not_retrace():
 # batched sweep: swept rows must reproduce individual scanned runs
 # ---------------------------------------------------------------------------
 
-def _schedules(n_iterations, seeds, **cfg_kw):
-    return [StragglerScheduler(_cfg(seed=s, **cfg_kw))
-            .precompute(n_iterations) for s in seeds]
+_schedules = make_schedules
 
 
 def test_swept_matches_looped_scanned():

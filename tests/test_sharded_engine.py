@@ -1,0 +1,328 @@
+"""Worker-mesh sharded trajectory engine: fake-device conformance suite.
+
+Every test runs the shard_map-distributed engine on a CPU fake-device
+mesh (2 and 4 workers; `tests/conftest.py` forces 8 fake devices before
+jax initializes) and asserts the sharded trajectories match the
+single-device compiled scan to f32 tolerance STEP-BY-STEP — through cut
+refresh, slot eviction and straggler-masked iterations — plus the
+retrace gate (warm sharded BUILD_COUNTS stay at 1) and the no-reflatten
+guard on the sharded step.  The hypothesis property randomizes arrival
+schedules and cut-maintenance interleavings (t_pre / p_max / t1 / S /
+tau) over both mesh widths.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import (make_hyper, make_quadratic_problem, make_schedules,
+                      make_straggler_cfg)
+from repro.core import run, run_scanned, run_swept
+from repro.core import engine as engine_lib
+from repro.core import sharded as sharded_lib
+from repro.core.scheduler import StragglerScheduler
+from repro.launch.mesh import make_worker_mesh
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 (fake) devices; tests/conftest.py forces 8 "
+           "unless XLA_FLAGS was already set")
+
+MESH_WIDTHS = (2, 4)
+
+
+def _mesh(w):
+    return make_worker_mesh(w)
+
+
+def _assert_states_close(a, b, rtol=5e-5, atol=1e-6):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+def _assert_histories_close(h_ref, h_sh, rtol=5e-4, atol=1e-6):
+    """Step-by-step: every recorded iteration, every metric."""
+    assert list(h_ref["t"]) == list(h_sh["t"])
+    np.testing.assert_allclose(h_ref["gap_sq"], h_sh["gap_sq"],
+                               rtol=rtol, atol=atol)
+    np.testing.assert_array_equal(h_ref["n_cuts_i"], h_sh["n_cuts_i"])
+    np.testing.assert_array_equal(h_ref["n_cuts_ii"], h_sh["n_cuts_ii"])
+    np.testing.assert_allclose(h_ref["sim_time"], h_sh["sim_time"])
+    np.testing.assert_allclose(h_ref["max_staleness"],
+                               h_sh["max_staleness"])
+
+
+# ---------------------------------------------------------------------------
+# scan conformance: step-by-step across refresh / eviction / stragglers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w", MESH_WIDTHS)
+def test_sharded_scan_matches_single_device(w):
+    """metrics_every=1 records EVERY iteration, so gap/cut-count parity
+    is a per-step check through refresh and straggler-masked steps."""
+    prob = make_quadratic_problem()
+    hyper = make_hyper()
+    schedule = StragglerScheduler(make_straggler_cfg()).precompute(40)
+
+    def metrics(state):
+        return {"z1_norm_sq": jnp.sum(state.z1 ** 2)}
+
+    ref = run_scanned(prob, hyper, schedule, metrics_fn=metrics,
+                      metrics_every=1)
+    sh = run_scanned(prob, hyper, schedule, metrics_fn=metrics,
+                     metrics_every=1, mesh=_mesh(w))
+    _assert_states_close(ref.state, sh.state)
+    _assert_histories_close(ref.history, sh.history)
+    np.testing.assert_allclose(ref.history["z1_norm_sq"],
+                               sh.history["z1_norm_sq"],
+                               rtol=5e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("w", MESH_WIDTHS)
+def test_sharded_scan_through_eviction(w):
+    """p_max=2 with a refresh every 2 iterations forces slot evictions
+    AND Eq. 25 drops while heavy stragglers mask most workers."""
+    prob = make_quadratic_problem()
+    hyper = make_hyper(s_active=2, tau=4, k_inner=2, p_max=2, t_pre=2)
+    schedule = StragglerScheduler(make_straggler_cfg(
+        s_active=2, tau=4, n_stragglers=2, straggler_slowdown=10.0,
+        seed=3)).precompute(30)
+
+    ref = run_scanned(prob, hyper, schedule, metrics_every=1)
+    sh = run_scanned(prob, hyper, schedule, metrics_every=1, mesh=_mesh(w))
+    _assert_states_close(ref.state, sh.state)
+    _assert_histories_close(ref.history, sh.history)
+    # evictions actually happened (ages beyond the first p_max adds)
+    assert int(np.asarray(sh.state.cuts_ii.age).max()) >= 2 * hyper.p_max
+
+
+def test_sharded_runner_dispatch():
+    """runner.run(mode='scan'|'sweep', mesh=...) routes to the sharded
+    engines; mesh with eager mode is rejected."""
+    prob = make_quadratic_problem()
+    hyper = make_hyper()
+    cfg = make_straggler_cfg()
+    mesh = _mesh(2)
+    ref = run(prob, hyper, scheduler_cfg=cfg, n_iterations=20,
+              metrics_every=5)
+    sh = run(prob, hyper, scheduler_cfg=cfg, n_iterations=20,
+             metrics_every=5, mesh=mesh)
+    np.testing.assert_allclose(ref.history["gap_sq"],
+                               sh.history["gap_sq"], rtol=5e-4, atol=1e-6)
+    sw = run(prob, hyper, scheduler_cfg=cfg, n_iterations=20,
+             metrics_every=5, mode="sweep", seeds=(0, 1), mesh=mesh)
+    np.testing.assert_allclose(ref.history["gap_sq"],
+                               sw.run(0).history["gap_sq"],
+                               rtol=5e-4, atol=1e-6)
+    with pytest.raises(ValueError):
+        run(prob, hyper, n_iterations=4, mode="eager", mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# sweep conformance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w", MESH_WIDTHS)
+def test_sharded_sweep_matches_single_device(w):
+    prob = make_quadratic_problem()
+    hyper = make_hyper()
+    scheds = make_schedules(25, (0, 1, 2))
+    ref = run_swept(prob, hyper, scheds, metrics_every=5)
+    sh = run_swept(prob, hyper, scheds, metrics_every=5, mesh=_mesh(w))
+    _assert_states_close(ref.state, sh.state)
+    np.testing.assert_allclose(ref.history["gap_sq"],
+                               sh.history["gap_sq"], rtol=5e-4, atol=1e-6)
+    np.testing.assert_array_equal(ref.history["n_cuts_ii"],
+                                  sh.history["n_cuts_ii"])
+
+
+def test_sharded_sweep_hypers_and_states():
+    """Per-run hyper scalars and caller-stacked states ride the sharded
+    sweep; each row matches the corresponding single-device scan."""
+    from repro.core import afto as afto_lib
+    from repro.utils.tree import tree_stack
+
+    hyper = make_hyper()
+    prob = make_quadratic_problem()
+    scheds = make_schedules(15, (0, 0))
+    mesh = _mesh(2)
+    sw = run_swept(prob, hyper, scheds, metrics_every=5, mesh=mesh,
+                   sweep_hypers={"eta_z": [0.05, 0.01]})
+    for r, eta_z in enumerate((0.05, 0.01)):
+        single = run_scanned(prob, dataclasses.replace(hyper, eta_z=eta_z),
+                             scheds[r], metrics_every=5)
+        np.testing.assert_allclose(single.history["gap_sq"],
+                                   sw.run(r).history["gap_sq"],
+                                   rtol=5e-4, atol=1e-6)
+
+    states = tree_stack([afto_lib.init_state(prob, hyper)] * 2)
+    sw2 = run_swept(prob, hyper, scheds, metrics_every=5, states=states,
+                    mesh=mesh)
+    assert all(np.all(np.isfinite(np.asarray(x)))
+               for x in jax.tree.leaves(states))
+    np.testing.assert_allclose(sw.run(0).history["gap_sq"],
+                               sw2.run(0).history["gap_sq"],
+                               rtol=5e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# guards: mesh validation, donation, retrace, no-reflatten
+# ---------------------------------------------------------------------------
+
+def test_sharded_rejects_bad_mesh():
+    from jax.sharding import Mesh
+
+    prob = make_quadratic_problem()
+    schedule = StragglerScheduler(make_straggler_cfg()).precompute(4)
+    with pytest.raises(ValueError):       # 4 workers over 3 shards
+        run_scanned(prob, make_hyper(), schedule, mesh=_mesh(3))
+    wrong = Mesh(np.asarray(jax.devices()[:2]), ("data",))
+    with pytest.raises(ValueError):       # no "worker" axis
+        run_scanned(prob, make_hyper(), schedule, mesh=wrong)
+    with pytest.raises(ValueError):       # more shards than devices
+        make_worker_mesh(jax.device_count() + 1)
+
+
+def test_sharded_caller_state_not_donated():
+    from repro.core import afto as afto_lib
+
+    prob = make_quadratic_problem()
+    hyper = make_hyper()
+    schedule = StragglerScheduler(make_straggler_cfg()).precompute(10)
+    state = afto_lib.init_state(prob, hyper)
+    res = run_scanned(prob, hyper, schedule, metrics_every=5, state=state,
+                      mesh=_mesh(2))
+    assert np.all(np.isfinite(np.asarray(state.z1)))
+    assert np.all(np.isfinite(res.history["gap_sq"]))
+    # the returned polytope is reassembled to the canonical global layout
+    assert res.state.cuts_ii.spec == state.cuts_ii.spec
+    assert res.state.cuts_ii.a.shape == state.cuts_ii.a.shape
+
+
+@pytest.mark.parametrize("w", MESH_WIDTHS)
+def test_sharded_warm_build_counts_stay_at_one(w):
+    """Retrace gate extension: a warm sharded scan/sweep must reuse the
+    compiled trajectory — the *_sharded BUILD_COUNTS rise exactly once
+    per (problem, mesh) and stay flat across repeat + fresh-schedule
+    calls (same contract as benchmarks/retrace_gate.py)."""
+    prob = make_quadratic_problem(seed=17)       # fresh cache keys
+    hyper = make_hyper()
+    mesh = _mesh(w)
+    schedule = StragglerScheduler(make_straggler_cfg()).precompute(12)
+
+    before = engine_lib.BUILD_COUNTS["scan_sharded"]
+    run_scanned(prob, hyper, schedule, metrics_every=6, mesh=mesh)
+    assert engine_lib.BUILD_COUNTS["scan_sharded"] == before + 1
+    run_scanned(prob, hyper, schedule, metrics_every=6, mesh=mesh)
+    run_scanned(prob, hyper,
+                StragglerScheduler(make_straggler_cfg(seed=9))
+                .precompute(12), metrics_every=6, mesh=mesh)
+    assert engine_lib.BUILD_COUNTS["scan_sharded"] == before + 1
+
+    before = engine_lib.BUILD_COUNTS["sweep_sharded"]
+    scheds = make_schedules(12, (0, 1))
+    run_swept(prob, hyper, scheds, metrics_every=6, mesh=mesh)
+    assert engine_lib.BUILD_COUNTS["sweep_sharded"] == before + 1
+    run_swept(prob, hyper, make_schedules(12, (5, 6)), metrics_every=6,
+              mesh=mesh)
+    assert engine_lib.BUILD_COUNTS["sweep_sharded"] == before + 1
+
+
+def test_no_reflatten_on_sharded_path(monkeypatch):
+    """`flat_spec` / `flatten_cuts` never execute while building or
+    running the sharded trajectory: the shard-local column views are
+    consumed as stored (host-side shard/unshard included), and the only
+    flatten is the new cut row's `flatten_coeffs`."""
+    from repro.core import cuts as cuts_lib
+
+    calls = []
+    orig_spec, orig_flat = cuts_lib.flat_spec, cuts_lib.flatten_cuts
+    monkeypatch.setattr(
+        cuts_lib, "flat_spec",
+        lambda *a, **k: (calls.append("flat_spec"), orig_spec(*a, **k))[1])
+    monkeypatch.setattr(
+        cuts_lib, "flatten_cuts",
+        lambda *a, **k: (calls.append("flatten_cuts"),
+                         orig_flat(*a, **k))[1])
+
+    prob = make_quadratic_problem(seed=23)       # fresh cache key: builds
+    hyper = make_hyper()
+    schedule = StragglerScheduler(make_straggler_cfg()).precompute(10)
+    run_scanned(prob, hyper, schedule, metrics_every=5, mesh=_mesh(2))
+    assert calls == []
+
+
+# ---------------------------------------------------------------------------
+# scheduler / traffic helpers
+# ---------------------------------------------------------------------------
+
+def test_schedule_worker_shards_partition():
+    schedule = StragglerScheduler(make_straggler_cfg()).precompute(16)
+    shards = schedule.worker_shards(2)
+    assert shards.shape == (2, 16, 2)
+    np.testing.assert_array_equal(
+        np.concatenate([shards[0], shards[1]], axis=1), schedule.active)
+    with pytest.raises(ValueError):
+        schedule.worker_shards(3)
+
+
+def test_traffic_record_positive():
+    prob = make_quadratic_problem()
+    hyper = make_hyper()
+    from repro.core import afto as afto_lib
+    state = jax.eval_shape(lambda: afto_lib.init_state(prob, hyper))
+    rec = sharded_lib.traffic_record(state.cuts_ii.spec, hyper)
+    assert rec["step_bytes"] > 0
+    assert rec["refresh_bytes"] > rec["step_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random schedules x maintenance interleavings x mesh width
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _interleaving_body(w, seed, s_active, tau, t_pre, p_max, t1):
+    """Sharded == single-device for an arbitrary (schedule, maintenance)
+    interleaving: the arrival process seed randomizes WHICH workers are
+    masked when, and (t_pre, t1, p_max) randomize when cuts are added,
+    evicted and dropped relative to those masks."""
+    prob = make_quadratic_problem()
+    hyper = make_hyper(s_active=s_active, tau=tau, k_inner=2,
+                       p_max=p_max, t_pre=t_pre, t1=t1)
+    schedule = StragglerScheduler(make_straggler_cfg(
+        s_active=s_active, tau=tau, n_stragglers=2,
+        straggler_slowdown=10.0, seed=seed)).precompute(14)
+    ref = run_scanned(prob, hyper, schedule, metrics_every=1)
+    sh = run_scanned(prob, hyper, schedule, metrics_every=1,
+                     mesh=_mesh(w))
+    _assert_states_close(ref.state, sh.state, rtol=1e-4, atol=1e-6)
+    _assert_histories_close(ref.history, sh.history, rtol=1e-3,
+                            atol=1e-6)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(w=st.sampled_from(MESH_WIDTHS),
+           seed=st.integers(0, 2 ** 16),
+           s_active=st.sampled_from((2, 4)),
+           tau=st.sampled_from((3, 6)),
+           t_pre=st.sampled_from((2, 4)),
+           p_max=st.sampled_from((2, 4)),
+           t1=st.sampled_from((6, 100)))
+    def test_sharded_interleaving_property(w, seed, s_active, tau, t_pre,
+                                           p_max, t1):
+        _interleaving_body(w, seed, s_active, tau, t_pre, p_max, t1)
+else:                                       # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_sharded_interleaving_property():
+        pass

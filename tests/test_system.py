@@ -4,15 +4,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import make_quadratic_problem
+from conftest import make_hyper, make_quadratic_problem
 from repro.core import (Hyper, StragglerConfig, run, stationarity_gap_sq)
 
 
 def _hyper(n=4, **kw):
-    base = dict(n_workers=n, s_active=3, tau=5, k_inner=3, p_max=6,
-                t_pre=5, t1=100, eta_x=0.05, eta_z=0.05, d1=3)
-    base.update(kw)
-    return Hyper(**base)
+    # conftest's shared builder, with this file's historical n= alias
+    return make_hyper(n_workers=n, **kw)
 
 
 def test_afto_reduces_stationarity_gap():
