@@ -3,12 +3,14 @@ trilevel problem): eager host loop vs compiled-scan trajectory, the
 batched sweep engine vs an equivalent Python loop of scanned runs, the
 Pallas `cut_eval` kernel at paper-scale D, and incremental polytope
 maintenance (`add_cut` row writes / `drop_inactive` masks / evictions on
-the canonical `FlatCuts`) at paper-scale (P, D), and the worker-mesh sharded
+the canonical `FlatCuts`) at paper-scale (P, D), the worker-mesh sharded
 engine vs the replicated scan (with the analytic per-step bytes the mesh
-exchanges).  Emits the machine-readable perf record consumed by
+exchanges), and the streamed engine (in-scan per-iteration batch
+synthesis, incl. a chunk-partition bit-identity check) vs the host-fed
+scan.  Emits the machine-readable perf record consumed by
 ``benchmarks/run.py --json`` so future PRs can diff ``{iters_per_sec,
-runs_per_sec_swept, iters_per_sec_sharded, cut_updates_per_sec, ...}``
-across engines."""
+runs_per_sec_swept, iters_per_sec_sharded, iters_per_sec_streamed,
+cut_updates_per_sec, ...}`` across engines."""
 from __future__ import annotations
 
 import dataclasses
@@ -61,6 +63,19 @@ def quickstart_setup(n_iterations: int):
     return problem, hyper, cfg, schedule
 
 
+def quickstart_stream(seed: int = 0):
+    """Device-resident stream shaped like the quickstart problem's data
+    (per-iteration fresh worker batches, synthesized in-scan)."""
+    from repro.data import stream as stream_lib
+
+    def sample(key):
+        ka, kb = jax.random.split(key)
+        return {"A": jax.random.normal(ka, (DIM, DIM)) * 0.3,
+                "b": jax.random.normal(kb, (DIM,))}
+
+    return stream_lib.make_stream(sample, N_WORKERS, seed)
+
+
 def _timed_run(problem, hyper, cfg, schedule, mode: str):
     n_iterations = schedule.n_iterations
     t0 = time.perf_counter()
@@ -98,6 +113,7 @@ def record(n_iterations: int = 200) -> dict:
                         jax.tree.leaves(res_warm.state))))
     out.update(sweep_record(n_iterations))
     out.update(sharded_record(n_iterations))
+    out.update(streamed_record(n_iterations))
     out["cut_eval_kernel"] = kernel_record()
     out["cut_maintenance"] = cut_update_record()
     # top-level series for easy cross-PR diffing
@@ -151,6 +167,71 @@ def sharded_record(n_iterations: int = 200, reps: int = 3) -> dict:
         },
         # top-level series for easy cross-PR diffing
         "iters_per_sec_sharded": n_iterations / sh_wall,
+    }
+
+
+def streamed_record(n_iterations: int = 200, reps: int = 3) -> dict:
+    """Warm streamed scan (per-iteration in-scan batch synthesis via
+    fold-in keys) vs the host-fed warm scan on the same schedule, plus a
+    2-chunk streamed pass (state-continued dispatches, the
+    `launch/train.py --scan-chunk` shape) checked against the unchunked
+    run — the fold-in keys on `state.t` make any chunk partition
+    bit-identical, so `chunked_states_allclose` failing means the
+    streaming contract broke.  Trajectories legitimately differ from
+    host-fed (the data differs by construction): the host-fed column is
+    the cost baseline of a constant resident dataset, the streamed one
+    buys fresh per-iteration worker samples."""
+    import numpy as np
+
+    problem, hyper, cfg, schedule = quickstart_setup(n_iterations)
+    stream = quickstart_stream()
+    me = max(1, n_iterations // 10)
+    half = n_iterations // 2
+
+    def run_chunked():
+        res = run_scanned(problem, hyper, schedule.slice(0, half),
+                          metrics_every=me, data=stream)
+        return run_scanned(problem, hyper,
+                           schedule.slice(half, n_iterations),
+                           metrics_every=me, data=stream, state=res.state)
+
+    # warm all three compiled trajectories
+    res_host = run_scanned(problem, hyper, schedule, metrics_every=me)
+    res_str = run_scanned(problem, hyper, schedule, metrics_every=me,
+                          data=stream)
+    res_chunk = run_chunked()
+
+    host_wall = str_wall = chunk_wall = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run_scanned(problem, hyper, schedule, metrics_every=me)
+        host_wall = min(host_wall, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_scanned(problem, hyper, schedule, metrics_every=me,
+                    data=stream)
+        str_wall = min(str_wall, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_chunked()
+        chunk_wall = min(chunk_wall, time.perf_counter() - t0)
+
+    match = bool(all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(res_str.state),
+                        jax.tree.leaves(res_chunk.state))))
+    gap = float(res_str.history["gap_sq"][-1])
+    return {
+        "streamed": {
+            "wall_s": str_wall,
+            "host_fed_wall_s": host_wall,
+            "chunked_wall_s": chunk_wall,
+            "n_chunks": 2,
+            "iters_per_sec": n_iterations / str_wall,
+            "gap_sq": gap,
+            "gap_finite": bool(np.isfinite(gap)),
+            "chunked_states_allclose": match,
+        },
+        # top-level series for easy cross-PR diffing
+        "iters_per_sec_streamed": n_iterations / str_wall,
     }
 
 
@@ -323,6 +404,11 @@ def main(n_iterations: int = 200, record_out: dict = None):
                  f"runs_per_sec_looped={sw['runs_per_sec_looped']:.1f};"
                  f"speedup={sw['swept_speedup']:.1f}x;"
                  f"allclose={sw['states_allclose']}"))
+    stm = rec["streamed"]
+    rows.append(("engine_streamed", stm["wall_s"] * 1e6 / n_iterations,
+                 f"iters_per_sec_streamed={stm['iters_per_sec']:.1f};"
+                 f"host_fed_wall_s={stm['host_fed_wall_s']:.3f};"
+                 f"chunk_allclose={stm['chunked_states_allclose']}"))
     sh = rec["sharded"]
     rows.append(("engine_sharded", sh["wall_s"] * 1e6 / n_iterations,
                  f"n_shards={sh['n_shards']};"

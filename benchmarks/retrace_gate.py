@@ -10,6 +10,12 @@ devices are visible (CI forces fake CPU devices via XLA_FLAGS) the gate
 also covers the shard_map'd worker-mesh paths: warm sharded scan + sweep
 BUILD_COUNTS must likewise stay at 1.
 
+The *_streamed counters gate the data-stream engines: two streamed runs
+with DIFFERENT base keys share one compiled trajectory — the stream key
+rides the donated carry as a traced value, so re-seeding must never
+retrigger tracing (a key leaking into the cache key or the jaxpr as a
+constant would double the counter here).
+
   XLA_FLAGS=--xla_force_host_platform_device_count=2 \
       PYTHONPATH=src python -m benchmarks.retrace_gate
 """
@@ -23,11 +29,11 @@ import sys
 def main(n_iterations: int = 40, n_runs: int = 2) -> dict:
     import jax
 
-    from benchmarks.engine_speed import quickstart_setup
+    from benchmarks.engine_speed import quickstart_setup, quickstart_stream
     from repro.core import engine
     from repro.core.scheduler import StragglerScheduler
 
-    fresh = {"scan": 0, "sweep": 0, "scan_sharded": 0, "sweep_sharded": 0}
+    fresh = {k: 0 for k in engine.BUILD_COUNTS}
     assert engine.BUILD_COUNTS == fresh, (
         "retrace gate must run in a fresh process", engine.BUILD_COUNTS)
 
@@ -35,13 +41,22 @@ def main(n_iterations: int = 40, n_runs: int = 2) -> dict:
     schedules = [
         StragglerScheduler(dataclasses.replace(cfg, seed=s))
         .precompute(n_iterations) for s in range(n_runs)]
+    stream = quickstart_stream()
+
+    def reseed(seed):
+        return dataclasses.replace(stream, key=jax.random.PRNGKey(seed))
 
     for _ in range(2):
         engine.run_scanned(problem, hyper, schedule, metrics_every=10)
     for _ in range(2):
         engine.run_swept(problem, hyper, schedules, metrics_every=10)
+    for seed in (0, 1):          # re-seeding must hit the same build
+        engine.run_scanned(problem, hyper, schedule, metrics_every=10,
+                           data=reseed(seed))
+        engine.run_swept(problem, hyper, schedules, metrics_every=10,
+                         data=reseed(seed))
 
-    want = {"scan": 1, "sweep": 1, "scan_sharded": 0, "sweep_sharded": 0}
+    want = dict(fresh, scan=1, sweep=1, scan_streamed=1, sweep_streamed=1)
     sharded_gated = jax.device_count() >= 2
     if sharded_gated:
         from repro.launch.mesh import make_worker_mesh
@@ -53,8 +68,13 @@ def main(n_iterations: int = 40, n_runs: int = 2) -> dict:
         for _ in range(2):
             engine.run_swept(problem, hyper, schedules, metrics_every=10,
                              mesh=mesh)
-        want = {"scan": 1, "sweep": 1, "scan_sharded": 1,
-                "sweep_sharded": 1}
+        for seed in (0, 1):
+            engine.run_scanned(problem, hyper, schedule, metrics_every=10,
+                               mesh=mesh, data=reseed(seed))
+            engine.run_swept(problem, hyper, schedules, metrics_every=10,
+                             mesh=mesh, data=reseed(seed))
+        want.update(scan_sharded=1, sweep_sharded=1,
+                    scan_sharded_streamed=1, sweep_sharded_streamed=1)
 
     ok = engine.BUILD_COUNTS == want
     out = {"build_counts": dict(engine.BUILD_COUNTS),

@@ -3,11 +3,12 @@ plus the framework-level benchmarks.  Prints ``name,us_per_call,derived``
 CSV.  ``--fast`` trims iteration counts for CI-speed runs.  ``--json
 out.json`` additionally writes the machine-readable engine perf record
 (eager vs scan ``{iters_per_sec, sim_time, gap_sq}``, the swept-engine
-series ``runs_per_sec_swept`` vs ``runs_per_sec_looped``, the
-``cut_eval`` kernel microbenchmark, and the incremental cut-maintenance
-series ``cut_updates_per_sec`` — interleaved add/drop/evict on the
-canonical ``FlatCuts`` at paper-scale (P, D)) for trajectory tracking
-across PRs.
+series ``runs_per_sec_swept`` vs ``runs_per_sec_looped``, the streamed
+series ``iters_per_sec_streamed`` — in-scan per-iteration batch
+synthesis with a chunk-partition bit-identity check — the ``cut_eval``
+kernel microbenchmark, and the incremental cut-maintenance series
+``cut_updates_per_sec`` — interleaved add/drop/evict on the canonical
+``FlatCuts`` at paper-scale (P, D)) for trajectory tracking across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig1,...]
 """

@@ -36,6 +36,18 @@ math lives in `repro.core.sharded`; partitioning rules in
 `repro.fed.sharding.afto_state_specs`).  Sharded trajectories match the
 replicated engines to f32 tolerance (`tests/test_sharded_engine.py`).
 
+Both engines also accept `data=`: replacement `problem.data` arrays
+(traced, not closed over — the compiled trajectory is reused across
+datasets of one layout), or a `repro.data.stream.Stream`, in which case
+every iteration's worker batches are SYNTHESIZED INSIDE the scan body
+from fold-in PRNG keys (`stream.batch_at(spec, key, state.t, ...)`).
+The stream's base key rides the donated carry untouched and batches
+fold on the absolute `state.t`, so any chunk partition of a trajectory
+(state-continued `run_scanned` calls) sees the bit-identical batch
+sequence, and the worker-mesh engines draw each shard's own global
+worker rows locally — streaming adds NO data collectives
+(`tests/test_stream.py` is the conformance harness).
+
 `metrics_fn` must be JAX-traceable here (it is traced into the scan
 body); host-callback metrics still work through the eager path of
 `repro.core.runner.run(mode="eager")`.
@@ -60,6 +72,8 @@ from repro.core import sharded as sharded_lib
 from repro.core import stationarity as stat_lib
 from repro.core.scheduler import Schedule
 from repro.core.types import AFTOState, Hyper, TrilevelProblem
+from repro.data import stream as stream_lib
+from repro.data.stream import Stream
 
 
 @dataclasses.dataclass
@@ -136,9 +150,37 @@ def _cached_build(cache: Dict[tuple, tuple], key: tuple, build,
 
 # How many times each builder actually traced a new scan/sweep — the
 # retrace regression tests assert this stays flat across warm calls
-# (the *_sharded counters cover the worker-mesh shard_map paths).
+# (the *_sharded counters cover the worker-mesh shard_map paths, the
+# *_streamed ones the in-scan data-stream paths: a stream's key is
+# traced, so re-seeding must never rebuild).
 BUILD_COUNTS = {"scan": 0, "sweep": 0, "scan_sharded": 0,
-                "sweep_sharded": 0}
+                "sweep_sharded": 0, "scan_streamed": 0,
+                "sweep_streamed": 0, "scan_sharded_streamed": 0,
+                "sweep_sharded_streamed": 0}
+
+
+def _data_key(data):
+    """Structural cache-key component for the `data=` argument: streams
+    key on their static spec (the traced key never retraces), host
+    arrays on their layout."""
+    if data is None:
+        return None
+    if isinstance(data, Stream):
+        return ("stream", data.spec)
+    leaves, tdef = jax.tree_util.tree_flatten(data)
+    return ("host", tdef,
+            tuple((tuple(map(int, l.shape)), str(l.dtype))
+                  for l in leaves))
+
+
+def _check_stream(stream: Stream, hyper: Hyper) -> None:
+    if stream.spec is None:
+        raise ValueError("Stream has no spec; build with "
+                         "repro.data.stream.make_stream")
+    if stream.spec.n_workers != hyper.n_workers:
+        raise ValueError(
+            f"stream spans {stream.spec.n_workers} workers but "
+            f"hyper.n_workers={hyper.n_workers}")
 
 # Hyper fields that determine array shapes or unrolled loop lengths;
 # they must be Python constants at trace time and cannot be swept.
@@ -147,22 +189,47 @@ _STATIC_HYPER_FIELDS = frozenset({"n_workers", "p_max", "k_inner", "d1"})
 
 def _make_step_body(problem: TrilevelProblem, hyper: Hyper,
                     metrics_fn: Optional[Callable], keys,
-                    axis: Optional[str] = None):
+                    axis: Optional[str] = None,
+                    stream_spec=None, n_shards: Optional[int] = None):
     """The per-iteration scan body shared by run_scanned and run_swept.
 
     axis: worker mesh axis when tracing inside the shard_map'd engines —
     `problem`/state/mask then carry this shard's workers only and the
-    refresh dispatches to the sharded cut generation."""
+    refresh dispatches to the sharded cut generation.
+
+    stream_spec: when set, the carry grows a (constant) stream key and
+    each iteration's `problem.data` is synthesized in-scan from fold-in
+    keys on the absolute `state.t` — chunk-partition invariant, and on a
+    mesh each shard draws only its own global worker rows
+    (`axis_index * n_local` offset), so streaming adds no collectives.
+
+    The refresh predicate also runs on `state.t` (identical to the old
+    xs-iteration form for fresh starts), so state-continued chunked
+    dispatches refresh exactly where the unchunked trajectory does."""
+    if stream_spec is not None:
+        n_local = (stream_spec.n_workers if axis is None
+                   else stream_spec.n_workers // n_shards)
+
     def step_body(carry, xs):
-        st, hist = carry
-        mask, it, slot = xs
-        st, step_aux = afto_lib.afto_step_aux(problem, hyper, st, mask,
+        mask, slot = xs
+        if stream_spec is None:
+            st, hist = carry
+            prob = problem
+        else:
+            st, hist, key = carry
+            off = 0 if axis is None else jax.lax.axis_index(axis) * n_local
+            prob = dataclasses.replace(
+                problem,
+                data=stream_lib.batch_at(stream_spec, key, st.t, off,
+                                         n_local))
+        st, step_aux = afto_lib.afto_step_aux(prob, hyper, st, mask,
                                               axis=axis)
-        do_refresh = ((it + 1) % hyper.t_pre == 0) & (it < hyper.t1)
+        # post-step st.t is the 1-based master iteration count
+        do_refresh = (st.t % hyper.t_pre == 0) & (st.t - 1 < hyper.t1)
         refresh = (
-            (lambda s: afto_lib.cut_refresh(problem, hyper, s))
+            (lambda s: afto_lib.cut_refresh(prob, hyper, s))
             if axis is None else
-            (lambda s: sharded_lib.cut_refresh_sharded(problem, hyper, s,
+            (lambda s: sharded_lib.cut_refresh_sharded(prob, hyper, s,
                                                        axis)))
         st = jax.lax.cond(do_refresh, refresh, lambda s: s, st)
 
@@ -171,12 +238,12 @@ def _make_step_body(problem: TrilevelProblem, hyper: Hyper,
             # a refresh rewrote the polytope, so recompute them there.
             aux = jax.lax.cond(
                 do_refresh,
-                lambda s, _a: stat_lib.make_gap_aux(problem, hyper, s,
+                lambda s, _a: stat_lib.make_gap_aux(prob, hyper, s,
                                                     axis=axis),
                 lambda _s, a: a, st, step_aux)
             vals = {
                 "gap_sq": stat_lib.stationarity_gap_sq(
-                    problem, hyper, st, aux=aux, axis=axis),
+                    prob, hyper, st, aux=aux, axis=axis),
                 "n_cuts_i": jnp.sum(st.cuts_i.active),
                 "n_cuts_ii": jnp.sum(st.cuts_ii.active),
             }
@@ -186,20 +253,25 @@ def _make_step_body(problem: TrilevelProblem, hyper: Hyper,
                 jnp.asarray(vals[k], jnp.float32)) for k in keys}
 
         hist = jax.lax.cond(slot >= 0, write, lambda h: h, hist)
-        return (st, hist), None
+        return ((st, hist) if stream_spec is None
+                else (st, hist, key)), None
 
     return step_body
 
 
 def _build_scan(problem: TrilevelProblem, hyper: Hyper,
-                metrics_fn: Optional[Callable], keys, donate: bool):
-    BUILD_COUNTS["scan"] += 1
-    step_body = _make_step_body(problem, hyper, metrics_fn, keys)
+                metrics_fn: Optional[Callable], keys, donate: bool,
+                stream_spec=None):
+    BUILD_COUNTS["scan_streamed" if stream_spec else "scan"] += 1
 
-    def scan_all(st, hist, masks, its, slots):
-        (st, hist), _ = jax.lax.scan(step_body, (st, hist),
-                                     (masks, its, slots))
-        return st, hist
+    def scan_all(st, hist, data, key, masks, slots):
+        prob = problem if data is None else \
+            dataclasses.replace(problem, data=data)
+        step_body = _make_step_body(prob, hyper, metrics_fn, keys,
+                                    stream_spec=stream_spec)
+        carry = (st, hist) if stream_spec is None else (st, hist, key)
+        carry, _ = jax.lax.scan(step_body, carry, (masks, slots))
+        return carry[0], carry[1]
 
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(scan_all, donate_argnums=donate_argnums)
@@ -267,30 +339,39 @@ def _state_specs(state_sharded, lead=()):
 
 def _build_scan_sharded(problem: TrilevelProblem, hyper: Hyper,
                         metrics_fn: Optional[Callable], keys,
-                        donate: bool, mesh, state_specs):
+                        donate: bool, mesh, state_specs,
+                        stream_spec=None, n_shards: Optional[int] = None):
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    BUILD_COUNTS["scan_sharded"] += 1
+    BUILD_COUNTS["scan_sharded_streamed" if stream_spec
+                 else "scan_sharded"] += 1
     axis = sharded_lib.WORKER_AXIS
 
-    def scan_all(st, hist, data, masks, its, slots):
+    def scan_all(st, hist, data, key, masks, slots):
         # drop the shard_map-local leading worker axis of the cut blocks
         st = _map_cuts(st, lambda a: a[0])
-        prob = dataclasses.replace(problem, data=data)
+        prob = problem if data is None else \
+            dataclasses.replace(problem, data=data)
         step_body = _make_step_body(prob, hyper, metrics_fn, keys,
-                                    axis=axis)
-        (st, hist), _ = jax.lax.scan(step_body, (st, hist),
-                                     (masks, its, slots))
+                                    axis=axis, stream_spec=stream_spec,
+                                    n_shards=n_shards)
+        carry = (st, hist) if stream_spec is None else (st, hist, key)
+        carry, _ = jax.lax.scan(step_body, carry, (masks, slots))
+        st, hist = carry[0], carry[1]
         return _map_cuts(st, lambda a: a[None]), hist
 
     hist_specs = {k: P() for k in keys}
     from repro.fed import sharding as shd
-    data_specs = shd.worker_data_specs(problem.data, axis=axis)
+    # streamed shards draw their own rows in-scan: no data input at all,
+    # and the (replicated) base key is the only stream state.
+    data_specs = None if stream_spec is not None else \
+        shd.worker_data_specs(problem.data, axis=axis)
+    key_spec = None if stream_spec is None else P()
     fn = shard_map(
         scan_all, mesh=mesh,
-        in_specs=(state_specs, hist_specs, data_specs,
-                  P(None, axis), P(), P()),
+        in_specs=(state_specs, hist_specs, data_specs, key_spec,
+                  P(None, axis), P()),
         out_specs=(state_specs, hist_specs),
         check_rep=False)
     donate_argnums = (0, 1) if donate else ()
@@ -301,7 +382,7 @@ def run_scanned(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
                 metrics_fn: Optional[Callable] = None,
                 metrics_every: int = 10,
                 state: Optional[AFTOState] = None,
-                mesh=None) -> RunResult:
+                mesh=None, data=None) -> RunResult:
     """Run the full AFTO trajectory over `schedule` in one compiled scan.
 
     Produces the same history layout as the eager runner: arrays
@@ -326,9 +407,23 @@ def run_scanned(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
     know how to reduce an arbitrary user metric).  psum inside your
     metrics_fn over `repro.core.sharded.WORKER_AXIS` if you need the
     global value.
+
+    data: replacement `problem.data` arrays (traced — the compiled
+    trajectory is shared across datasets of one layout), or a
+    `repro.data.stream.Stream` whose per-iteration worker batches are
+    synthesized INSIDE the scan from fold-in keys on the absolute
+    `state.t` (chunk-partition invariant; on a mesh each shard draws
+    its own global worker rows with no data collectives).  Re-seeding a
+    stream (`dataclasses.replace(stream, key=...)`) never retraces.
     """
     n_iterations = schedule.n_iterations
     n_shards = None if mesh is None else _check_mesh(mesh, hyper)
+    stream = data if isinstance(data, Stream) else None
+    if stream is not None:
+        _check_stream(stream, hyper)
+    host_data = None if (data is None or stream is not None) else \
+        jax.tree.map(jnp.asarray, data)
+    stream_spec = None if stream is None else stream.spec
     donate = state is None
     if state is None:
         # init_state aliases some buffers across fields (e.g. z3 and
@@ -339,12 +434,14 @@ def run_scanned(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
 
     keys = _metric_keys(problem, hyper, metrics_fn, state)
     cache_key = (id(problem), id(metrics_fn), _hyper_key(hyper),
-                 n_iterations, metrics_every, donate, mesh)
+                 n_iterations, metrics_every, donate, mesh,
+                 _data_key(data))
     if mesh is None:
         fn = _cached_build(
             _CACHE, cache_key,
-            lambda: _build_scan(problem, hyper, metrics_fn, keys, donate),
-            (problem, metrics_fn))
+            lambda: _build_scan(problem, hyper, metrics_fn, keys, donate,
+                                stream_spec=stream_spec),
+            (problem, metrics_fn, stream_spec))
     else:
         spec_i, spec_ii = state.cuts_i.spec, state.cuts_ii.spec
         state = _shard_state(state, n_shards)
@@ -352,19 +449,24 @@ def run_scanned(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
             _CACHE, cache_key,
             lambda: _build_scan_sharded(problem, hyper, metrics_fn, keys,
                                         donate, mesh,
-                                        _state_specs(state)),
-            (problem, metrics_fn, mesh))
+                                        _state_specs(state),
+                                        stream_spec=stream_spec,
+                                        n_shards=n_shards),
+            (problem, metrics_fn, mesh, stream_spec))
 
     hist0 = {k: jnp.zeros((n_records,), jnp.float32) for k in keys}
     masks = jnp.asarray(schedule.active, jnp.float32)
-    its = jnp.arange(n_iterations, dtype=jnp.int32)
+    key = None if stream is None else jnp.asarray(stream.key)
 
     t_start = time.perf_counter()
     if mesh is None:
-        state, hist = fn(state, hist0, masks, its, jnp.asarray(slots))
+        state, hist = fn(state, hist0, host_data, key, masks,
+                         jnp.asarray(slots))
     else:
-        data = jax.tree.map(jnp.asarray, problem.data)
-        state, hist = fn(state, hist0, data, masks, its,
+        data_arg = None if stream is not None else (
+            host_data if host_data is not None
+            else jax.tree.map(jnp.asarray, problem.data))
+        state, hist = fn(state, hist0, data_arg, key, masks,
                          jnp.asarray(slots))
         state = _unshard_state(state, spec_i, spec_ii)
     jax.block_until_ready(state)
@@ -385,25 +487,29 @@ def run_scanned(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
 
 def _build_sweep(problem: TrilevelProblem, hyper: Hyper,
                  metrics_fn: Optional[Callable], keys,
-                 sweep_names: tuple, has_data: bool, init_inside: bool):
-    BUILD_COUNTS["sweep"] += 1
+                 sweep_names: tuple, has_data: bool, init_inside: bool,
+                 stream_spec=None):
+    BUILD_COUNTS["sweep_streamed" if stream_spec else "sweep"] += 1
 
-    def one_run(st, hist, masks, sweep_vals, data, its, slots):
+    def one_run(st, hist, masks, sweep_vals, data, key, slots):
         prob = problem if data is None else \
             dataclasses.replace(problem, data=data)
         hyp = dataclasses.replace(
             hyper, **dict(zip(sweep_names, sweep_vals))) \
             if sweep_names else hyper
-        step_body = _make_step_body(prob, hyp, metrics_fn, keys)
-        (st, hist), _ = jax.lax.scan(step_body, (st, hist),
-                                     (masks, its, slots))
-        return st, hist
+        step_body = _make_step_body(prob, hyp, metrics_fn, keys,
+                                    stream_spec=stream_spec)
+        carry = (st, hist) if stream_spec is None else (st, hist, key)
+        carry, _ = jax.lax.scan(step_body, carry, (masks, slots))
+        return carry[0], carry[1]
 
-    def vmapped(st, hist, masks, sweep_vals, data, its, slots):
+    def vmapped(st, hist, masks, sweep_vals, data, key, slots):
+        # one stream is SHARED by all runs (same data per row, parity
+        # with run_scanned); per-run variation comes from the schedules
         return jax.vmap(
             one_run,
             in_axes=(0, 0, 0, 0, 0 if has_data else None, None, None))(
-                st, hist, masks, sweep_vals, data, its, slots)
+                st, hist, masks, sweep_vals, data, key, slots)
 
     if not init_inside:
         return jax.jit(vmapped, donate_argnums=(0, 1))
@@ -412,12 +518,12 @@ def _build_sweep(problem: TrilevelProblem, hyper: Hyper,
     # compiled dispatch (masks carries R statically) — the ~60 tiny
     # init_state + tile host dispatches otherwise dominate the whole
     # warm sweep at quickstart scale.
-    def sweep_all(hist, masks, sweep_vals, data, its, slots):
+    def sweep_all(hist, masks, sweep_vals, data, key, slots):
         st0 = afto_lib.init_state(problem, hyper)
         st = jax.tree.map(
             lambda x: jnp.broadcast_to(
                 x[None], masks.shape[:1] + x.shape).astype(x.dtype), st0)
-        return vmapped(st, hist, masks, sweep_vals, data, its, slots)
+        return vmapped(st, hist, masks, sweep_vals, data, key, slots)
 
     return jax.jit(sweep_all, donate_argnums=(0,))
 
@@ -425,42 +531,48 @@ def _build_sweep(problem: TrilevelProblem, hyper: Hyper,
 def _build_sweep_sharded(problem: TrilevelProblem, hyper: Hyper,
                          metrics_fn: Optional[Callable], keys,
                          sweep_names: tuple, has_data: bool, mesh,
-                         state_specs):
+                         state_specs, stream_spec=None,
+                         n_shards: Optional[int] = None):
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    BUILD_COUNTS["sweep_sharded"] += 1
+    BUILD_COUNTS["sweep_sharded_streamed" if stream_spec
+                 else "sweep_sharded"] += 1
     axis = sharded_lib.WORKER_AXIS
 
-    def one_run(st, hist, masks, sweep_vals, data, its, slots):
-        prob = dataclasses.replace(problem, data=data)
+    def one_run(st, hist, masks, sweep_vals, data, key, slots):
+        prob = problem if data is None else \
+            dataclasses.replace(problem, data=data)
         hyp = dataclasses.replace(
             hyper, **dict(zip(sweep_names, sweep_vals))) \
             if sweep_names else hyper
-        step_body = _make_step_body(prob, hyp, metrics_fn, keys, axis=axis)
-        (st, hist), _ = jax.lax.scan(step_body, (st, hist),
-                                     (masks, its, slots))
-        return st, hist
+        step_body = _make_step_body(prob, hyp, metrics_fn, keys,
+                                    axis=axis, stream_spec=stream_spec,
+                                    n_shards=n_shards)
+        carry = (st, hist) if stream_spec is None else (st, hist, key)
+        carry, _ = jax.lax.scan(step_body, carry, (masks, slots))
+        return carry[0], carry[1]
 
-    def sweep_all(st, hist, data, masks, sweep_vals, its, slots):
+    def sweep_all(st, hist, data, key, masks, sweep_vals, slots):
         # (R, 1, P, D_loc) cut blocks -> (R, P, D_loc) inside the shard
         st = _map_cuts(st, lambda a: a[:, 0])
         st, hist = jax.vmap(
             one_run,
             in_axes=(0, 0, 0, 0, 0 if has_data else None, None, None))(
-                st, hist, masks, sweep_vals, data, its, slots)
+                st, hist, masks, sweep_vals, data, key, slots)
         return _map_cuts(st, lambda a: a[:, None]), hist
 
     hist_specs = {k: P() for k in keys}
     from repro.fed import sharding as shd
     data_lead = (None,) if has_data else ()
-    data_specs = shd.worker_data_specs(problem.data, axis=axis,
-                                       lead=data_lead)
+    data_specs = None if stream_spec is not None else \
+        shd.worker_data_specs(problem.data, axis=axis, lead=data_lead)
+    key_spec = None if stream_spec is None else P()
     sweep_specs = tuple(P() for _ in sweep_names)
     fn = shard_map(
         sweep_all, mesh=mesh,
-        in_specs=(state_specs, hist_specs, data_specs,
-                  P(None, None, axis), sweep_specs, P(), P()),
+        in_specs=(state_specs, hist_specs, data_specs, key_spec,
+                  P(None, None, axis), sweep_specs, P()),
         out_specs=(state_specs, hist_specs),
         check_rep=False)
     return jax.jit(fn, donate_argnums=(0, 1))
@@ -486,7 +598,13 @@ def run_swept(problem: TrilevelProblem, hyper: Hyper,
                    R copies of `init_state`.  Copied internally — the
                    dispatch donates its own buffers, never the caller's.
       data         optional replacement for `problem.data` with a
-                   leading (R,) axis per leaf (per-seed datasets).
+                   leading (R,) axis per leaf (per-seed datasets), OR a
+                   `repro.data.stream.Stream` — then every run's batches
+                   are synthesized in-scan from the SHARED stream (each
+                   row sees the data a `run_scanned(data=stream)` of its
+                   schedule would; per-run variation comes from the
+                   schedules/hypers, and re-seeding the stream never
+                   retraces).
       sweep_hypers dict of Hyper field name -> (R,) values, threaded
                    into the traced step per run.  Shape-determining
                    fields (n_workers/p_max/k_inner/d1) stay static and
@@ -541,6 +659,13 @@ def run_swept(problem: TrilevelProblem, hyper: Hyper,
                 f"got {v.shape}")
 
     n_shards = None if mesh is None else _check_mesh(mesh, hyper)
+    dkey = _data_key(data)
+    stream = data if isinstance(data, Stream) else None
+    stream_spec = None
+    if stream is not None:
+        _check_stream(stream, hyper)
+        stream_spec = stream.spec
+        data = None
     if mesh is not None and states is None:
         st0 = afto_lib.init_state(problem, hyper)
         states = jax.tree.map(
@@ -569,7 +694,7 @@ def run_swept(problem: TrilevelProblem, hyper: Hyper,
     keys = _metric_keys(problem, hyper, metrics_fn, state_one)
 
     cache_key = (id(problem), id(metrics_fn), _hyper_key(hyper),
-                 sweep_names, data is not None, init_inside, n_runs,
+                 sweep_names, dkey, init_inside, n_runs,
                  n_iterations, metrics_every, mesh)
     if mesh is not None:
         spec_i = states.cuts_i.spec
@@ -584,26 +709,28 @@ def run_swept(problem: TrilevelProblem, hyper: Hyper,
             _SWEEP_CACHE, cache_key,
             lambda: _build_sweep_sharded(
                 problem, hyper, metrics_fn, keys, sweep_names,
-                data is not None, mesh, _state_specs(states, lead=(None,))),
-            (problem, metrics_fn, mesh))
+                data is not None, mesh, _state_specs(states, lead=(None,)),
+                stream_spec=stream_spec, n_shards=n_shards),
+            (problem, metrics_fn, mesh, stream_spec))
     else:
         fn = _cached_build(
             _SWEEP_CACHE, cache_key,
             lambda: _build_sweep(problem, hyper, metrics_fn, keys,
                                  sweep_names, data is not None,
-                                 init_inside),
-            (problem, metrics_fn))
+                                 init_inside, stream_spec=stream_spec),
+            (problem, metrics_fn, stream_spec))
 
     hist0 = {k: jnp.zeros((n_runs, n_records), jnp.float32) for k in keys}
     masks = jnp.asarray(
         np.stack([s.active for s in schedules]), jnp.float32)
-    its = jnp.arange(n_iterations, dtype=jnp.int32)
+    key = None if stream is None else jnp.asarray(stream.key)
 
     t_start = time.perf_counter()
     if mesh is not None:
-        run_data = data if data is not None \
-            else jax.tree.map(jnp.asarray, problem.data)
-        state, hist = fn(states, hist0, run_data, masks, sweep_vals, its,
+        run_data = None if stream is not None else (
+            data if data is not None
+            else jax.tree.map(jnp.asarray, problem.data))
+        state, hist = fn(states, hist0, run_data, key, masks, sweep_vals,
                          jnp.asarray(slots))
         state = dataclasses.replace(
             state,
@@ -613,10 +740,10 @@ def run_swept(problem: TrilevelProblem, hyper: Hyper,
                 lambda fc: cuts_lib.unshard_cuts(fc, spec_ii))(
                     state.cuts_ii))
     elif init_inside:
-        state, hist = fn(hist0, masks, sweep_vals, data, its,
+        state, hist = fn(hist0, masks, sweep_vals, data, key,
                          jnp.asarray(slots))
     else:
-        state, hist = fn(states, hist0, masks, sweep_vals, data, its,
+        state, hist = fn(states, hist0, masks, sweep_vals, data, key,
                          jnp.asarray(slots))
     jax.block_until_ready(state)
     elapsed = time.perf_counter() - t_start

@@ -26,6 +26,8 @@ from repro.core.engine import RunResult, SweepResult
 from repro.core.scheduler import (Schedule, StragglerConfig,
                                   StragglerScheduler)
 from repro.core.types import AFTOState, Hyper, TrilevelProblem
+from repro.data import stream as stream_lib
+from repro.data.stream import Stream
 
 
 def run(problem: TrilevelProblem, hyper: Hyper,
@@ -42,7 +44,8 @@ def run(problem: TrilevelProblem, hyper: Hyper,
         sweep_states: Optional[AFTOState] = None,
         sweep_data=None,
         sweep_hypers: Optional[Dict] = None,
-        mesh=None):
+        mesh=None,
+        data=None):
     """Run AFTO for `n_iterations` master iterations.
 
     mode="scan": one compiled `lax.scan` over a precomputed arrival
@@ -67,6 +70,14 @@ def run(problem: TrilevelProblem, hyper: Hyper,
     mode="eager": the per-iteration host loop; metrics_fn may be an
     arbitrary host callback.  Simulated wall-clock (scheduler) and host
     wall-clock are always recorded in every mode.
+
+    data (all modes): replacement `problem.data` arrays, or a
+    `repro.data.stream.Stream` — per-iteration worker batches drawn
+    from fold-in keys on the absolute `state.t` (inside the scan for
+    the compiled engines; materialized per iteration on the eager
+    loop, which is the host-fed reference the streamed engines are
+    parity-tested against).  In sweep mode `data` and `sweep_data` are
+    the same parameter (pass one of them).
     """
     if scheduler_cfg is None:
         scheduler_cfg = StragglerConfig(
@@ -97,10 +108,15 @@ def run(problem: TrilevelProblem, hyper: Hyper,
                     dataclasses.replace(scheduler_cfg, seed=s)
                 ).precompute(n_iterations)
                 for s in seed_list]
+        if data is not None and sweep_data is not None:
+            raise ValueError(
+                "pass per-run data via either `data` or `sweep_data`, "
+                "not both")
         return engine_lib.run_swept(
             problem, hyper, schedules, metrics_fn=metrics_fn,
             metrics_every=metrics_every, states=sweep_states,
-            data=sweep_data, sweep_hypers=sweep_hypers, mesh=mesh)
+            data=data if data is not None else sweep_data,
+            sweep_hypers=sweep_hypers, mesh=mesh)
 
     if mode == "scan":
         if schedule is None:
@@ -108,7 +124,8 @@ def run(problem: TrilevelProblem, hyper: Hyper,
                 n_iterations)
         return engine_lib.run_scanned(
             problem, hyper, schedule, metrics_fn=metrics_fn,
-            metrics_every=metrics_every, state=state, mesh=mesh)
+            metrics_every=metrics_every, state=state, mesh=mesh,
+            data=data)
     if mode != "eager":
         raise ValueError(
             f"unknown mode {mode!r}; expected 'scan'|'sweep'|'eager'")
@@ -117,15 +134,21 @@ def run(problem: TrilevelProblem, hyper: Hyper,
 
     sched = StragglerScheduler(scheduler_cfg)
 
+    stream = data if isinstance(data, Stream) else None
+    if data is not None and stream is None:
+        problem = dataclasses.replace(
+            problem, data=jax.tree.map(jnp.asarray, data))
+
+    def _with(d):
+        return problem if d is None else dataclasses.replace(
+            problem, data=d)
+
+    step = lambda s, m, d=None: afto_lib.afto_step(_with(d), hyper, s, m)
+    refresh = lambda s, d=None: afto_lib.cut_refresh(_with(d), hyper, s)
+    gap = lambda s, d=None: stat_lib.stationarity_gap_sq(
+        _with(d), hyper, s)
     if jit:
-        step = jax.jit(lambda s, m: afto_lib.afto_step(problem, hyper, s, m))
-        refresh = jax.jit(lambda s: afto_lib.cut_refresh(problem, hyper, s))
-        gap = jax.jit(lambda s: stat_lib.stationarity_gap_sq(
-            problem, hyper, s))
-    else:
-        step = lambda s, m: afto_lib.afto_step(problem, hyper, s, m)
-        refresh = lambda s: afto_lib.cut_refresh(problem, hyper, s)
-        gap = lambda s: stat_lib.stationarity_gap_sq(problem, hyper, s)
+        step, refresh, gap = jax.jit(step), jax.jit(refresh), jax.jit(gap)
 
     if state is None:
         state = afto_lib.init_state(problem, hyper)
@@ -133,6 +156,9 @@ def run(problem: TrilevelProblem, hyper: Hyper,
     hist: Dict[str, List[float]] = {
         "t": [], "sim_time": [], "host_time": [], "gap_sq": [],
         "n_cuts_i": [], "n_cuts_ii": [], "max_staleness": []}
+    # afto_step increments t by exactly 1, so the absolute count is host
+    # arithmetic — no per-iteration device sync for the refresh predicate
+    t0_abs = int(state.t)
     t_start = time.perf_counter()
 
     for it in range(n_iterations):
@@ -140,15 +166,23 @@ def run(problem: TrilevelProblem, hyper: Hyper,
             mask, sim_t = schedule.active[it], float(schedule.sim_time[it])
         else:
             mask, sim_t = sched.next_active()
-        state = step(state, jnp.asarray(mask))
-        if (it + 1) % hyper.t_pre == 0 and it < hyper.t1:
-            state = refresh(state)
+        # same iteration's batch for step / refresh / gap, keyed on the
+        # pre-step state.t — exactly what the streamed scan body does
+        batch = None if stream is None else \
+            stream_lib.next_batch(stream, state.t)
+        state = step(state, jnp.asarray(mask), batch)
+        # refresh on the absolute post-step count (== it + 1 for fresh
+        # runs), matching the engine — continued states refresh where
+        # the unchunked trajectory would
+        t_post = t0_abs + it + 1
+        if t_post % hyper.t_pre == 0 and t_post - 1 < hyper.t1:
+            state = refresh(state, batch)
 
         if (it + 1) % metrics_every == 0 or it == n_iterations - 1:
             hist["t"].append(it + 1)
             hist["sim_time"].append(float(sim_t))
             hist["host_time"].append(time.perf_counter() - t_start)
-            hist["gap_sq"].append(float(gap(state)))
+            hist["gap_sq"].append(float(gap(state, batch)))
             hist["n_cuts_i"].append(float(jnp.sum(state.cuts_i.active)))
             hist["n_cuts_ii"].append(float(jnp.sum(state.cuts_ii.active)))
             hist["max_staleness"].append(float(

@@ -37,6 +37,14 @@ class Schedule:
     def n_workers(self) -> int:
         return int(self.active.shape[1])
 
+    def slice(self, a: int, b: int) -> "Schedule":
+        """Iterations [a, b) as a standalone Schedule — the chunk view
+        used by state-continued chunked dispatches (all three
+        per-iteration arrays sliced together)."""
+        return dataclasses.replace(
+            self, active=self.active[a:b], sim_time=self.sim_time[a:b],
+            max_staleness=self.max_staleness[a:b])
+
     def worker_shards(self, n_shards: int) -> np.ndarray:
         """Host-side inspection helper: the arrival masks grouped by
         worker-mesh shard, (n_shards, T, N / n_shards).  Row w holds the

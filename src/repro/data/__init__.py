@@ -2,3 +2,5 @@ from repro.data.synthetic import (REGRESSION_SPECS, RegressionData,
                                   DigitsData, make_regression,
                                   make_digits, make_token_stream)
 from repro.data.loader import ShardedLoader, shard_batch
+from repro.data.stream import (Stream, StreamSpec, make_stream,
+                               next_batch, problem_stream, zipf_tokens)

@@ -19,6 +19,13 @@ class ShardedLoader:
 
     Yields dicts of (global_batch, ...) arrays; with a mesh/spec it places
     them so the leading batch axis is sharded over the data axis.
+
+    Epoch k's shuffle comes from its OWN `np.random.default_rng((seed,
+    k))`, so it is a pure function of (seed, epoch index): restarting at
+    epoch k reproduces epoch k's order, and concurrent iterators cannot
+    scramble each other (the previous shared stateful generator advanced
+    on every `__iter__`, so any interleaved or repeated iteration
+    silently changed which permutation each epoch saw).
     """
 
     def __init__(self, arrays: dict, batch_size: int, seed: int = 0,
@@ -29,12 +36,20 @@ class ShardedLoader:
         self.arrays = arrays
         self.n = next(iter(sizes.values()))
         self.batch_size = batch_size
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self._epoch = 0
         self.mesh, self.spec = mesh, spec
         self.drop_last = drop_last
 
     def __iter__(self) -> Iterator[dict]:
-        idx = self.rng.permutation(self.n)
+        # claim the epoch index at iter() time (not first next()), so
+        # the epoch an iterator shuffles with depends only on creation
+        # order, never on consumption interleaving
+        epoch, self._epoch = self._epoch, self._epoch + 1
+        idx = np.random.default_rng((self.seed, epoch)).permutation(self.n)
+        return self._iter_epoch(idx)
+
+    def _iter_epoch(self, idx) -> Iterator[dict]:
         stop = (self.n - self.batch_size + 1) if self.drop_last else self.n
         for s in range(0, max(stop, 0), self.batch_size):
             take = idx[s: s + self.batch_size]

@@ -1,0 +1,153 @@
+"""Device-resident data streams: per-iteration batches synthesized
+INSIDE the scan from a fold-in PRNG key.
+
+The host-fed design (precompute batches with numpy, `jnp.asarray` them
+per chunk) leaves the donated scanned dispatch idle behind host→device
+transfers at real model scale, and cannot express the paper's setting
+where every worker draws FRESH local samples each round.  A `Stream`
+replaces the resident `problem.data` arrays with a generator that runs
+inside the compiled trajectory: the engines
+(`repro.core.engine.run_scanned/run_swept(data=...)`, the eager runner,
+`repro.launch.train --stream`) synthesize each iteration's worker
+batches on device, so chunk boundaries transfer nothing.
+
+Key discipline (the streaming contract — everything the conformance
+suite `tests/test_stream.py` checks follows from these three rules):
+
+  * `Stream.key` is the BASE key and is never advanced.  It rides the
+    scan carry untouched (so chunked dispatches keep their buffers
+    donated end-to-end) but batches are derived by `fold_in`, not by
+    iterating/splitting the carried key forward.
+  * the iteration key is `fold_in(key, t)` with the ABSOLUTE master
+    iteration (`state.t`, which the engine carries), so ANY chunk
+    partition of a trajectory sees the bit-identical batch sequence
+    (chunking invariance), and a fixed seed reproduces it across
+    processes.
+  * worker j's key is `fold_in(iteration_key, j)` with the GLOBAL
+    worker index, so a worker-mesh shard generates exactly its own
+    workers' rows shard-locally (`worker_offset = axis_index * n_local`)
+    with NO data collectives — bit-identical to the replicated stream.
+
+`StreamSpec.sample(key) -> data_j` draws ONE worker's slice; batches
+stack it over workers with `jax.vmap`.  The spec is static (a jit-meta
+field): reuse one `Stream`/spec object across runs the way you reuse a
+`problem` — the engine caches compiled trajectories per spec identity,
+and only the key is traced (so re-seeding via
+`dataclasses.replace(stream, key=...)` never retraces).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """Static sample spec: how to draw ONE worker's per-iteration slice.
+
+    sample    : (key) -> data_j pytree; the key already encodes
+                (base seed, iteration, worker) via fold-ins.
+    n_workers : global worker count N — batches lead with (N, ...) like
+                `problem.data`.
+    """
+    sample: Callable
+    n_workers: int
+
+
+@dataclasses.dataclass
+class Stream:
+    """A device-resident data stream: fold-in base key + static spec.
+
+    Registered as a pytree with `key` the only leaf, so it rides scan
+    carries / donated dispatches; `spec` is jit-static meta.
+    """
+    key: Any
+    spec: StreamSpec = None
+
+
+jax.tree_util.register_dataclass(Stream, data_fields=["key"],
+                                 meta_fields=["spec"])
+
+
+def make_stream(sample: Callable, n_workers: int, seed=0) -> Stream:
+    """Build a Stream from a per-worker sample fn and an int seed (or an
+    existing PRNG key)."""
+    key = jax.random.PRNGKey(seed) if isinstance(seed, int) else seed
+    return Stream(key=key, spec=StreamSpec(sample=sample,
+                                           n_workers=n_workers))
+
+
+def worker_key(key, it, j):
+    """The per-(iteration, worker) key: fold-in, never iterated."""
+    return jax.random.fold_in(jax.random.fold_in(key, it), j)
+
+
+def batch_at(spec: StreamSpec, key, it, worker_offset=0,
+             n_local: int = None):
+    """The (n_local, ...)-stacked batch for master iteration `it`.
+
+    worker_offset / n_local select a contiguous global-worker block —
+    the sharded engines pass `axis_index * n_local` so each shard draws
+    only its own rows; the defaults give the full (N, ...) batch.  Rows
+    depend only on (key, it, global worker index), never on the layout.
+    """
+    n = spec.n_workers if n_local is None else n_local
+    js = worker_offset + jnp.arange(n, dtype=jnp.int32)
+    keys = jax.vmap(lambda j: worker_key(key, it, j))(js)
+    return jax.vmap(spec.sample)(keys)
+
+
+def next_batch(stream: Stream, it, worker_offset=0, n_local: int = None):
+    """`batch_at` on a Stream object (host-side convenience / eager)."""
+    return batch_at(stream.spec, stream.key, it, worker_offset, n_local)
+
+
+# ---------------------------------------------------------------------------
+# stock sample specs
+# ---------------------------------------------------------------------------
+
+def normal_like(template_j, scale: float = 1.0) -> Callable:
+    """Sample fn drawing iid-normal leaves shaped like ONE worker's data
+    slice (`template_j`: arrays or ShapeDtypeStructs without the leading
+    worker axis) — the streamed stand-in for the synthetic regression /
+    quadratic problem batches of `repro.data.synthetic`."""
+    leaves, tdef = jax.tree_util.tree_flatten(template_j)
+
+    def sample(key):
+        keys = jax.random.split(key, len(leaves))
+        return jax.tree_util.tree_unflatten(tdef, [
+            scale * jax.random.normal(k, l.shape, l.dtype)
+            for k, l in zip(keys, leaves)])
+
+    return sample
+
+
+def problem_stream(data, n_workers: int, seed=0,
+                   scale: float = 1.0) -> Stream:
+    """Stream whose batches are normal draws shaped like `data` minus
+    its leading (N,) worker axis (e.g. a `TrilevelProblem.data` tree)."""
+    tpl = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), data)
+    return make_stream(normal_like(tpl, scale), n_workers, seed)
+
+
+def zipf_tokens(key, shape, vocab_size: int, zipf_a: float = 1.2):
+    """Device-side Zipfian token ids (inverse-CDF sampling of the
+    rank-CCDF power tail), the streamed counterpart of
+    `data.synthetic.make_token_stream` — distribution-matched, not
+    bit-matched (that one is numpy/host).  Ranks are clipped to 2^24 so
+    the f32 arithmetic stays exact-integer, and overflow ranks WRAP
+    (mod) rather than clip onto vocab_size-1, mirroring the host
+    sampler's tail handling."""
+    if zipf_a <= 1.0:
+        raise ValueError(
+            f"zipf_a must be > 1 (rank-CCDF exponent a-1 must be "
+            f"positive); got {zipf_a}")
+    u = jax.random.uniform(key, shape, jnp.float32,
+                           minval=jnp.float32(1e-7))
+    ranks = jnp.floor(jnp.clip(u ** (-1.0 / (zipf_a - 1.0)),
+                               1.0, 2.0 ** 24))
+    return jnp.mod(ranks - 1.0, vocab_size).astype(jnp.int32)

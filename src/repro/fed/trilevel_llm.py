@@ -31,6 +31,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.data import stream as stream_lib
 from repro.fed.sketch import sketch as _sketch, unsketch as _unsketch
 from repro.models import config as mcfg
 from repro.models import transformer as tfm
@@ -189,6 +190,23 @@ def init_fed_state(cfg: mcfg.ModelConfig, hyper: FedHyper, key,
         stale_lam=jnp.zeros((n, p), jnp.float32),
         stale_theta=jnp.zeros((n, N_PHI), jnp.float32),
         t=jnp.zeros((), jnp.int32))
+
+
+def batch_stream(cfg: mcfg.ModelConfig, n_workers: int, b_local: int,
+                 seq: int, seed=0, zipf_a: float = 1.2) -> stream_lib.Stream:
+    """Device-resident token stream for the LLM AFTO step: each worker's
+    per-iteration {tokens, val_tokens} chunk is synthesized inside the
+    scan from fold-in keys (`repro.data.stream`), replacing the
+    host-side `data.synthetic.make_token_stream` round-trip.  Batches
+    stack to the `afto_llm_step` layout ((N, b_local, seq) int32);
+    tokens double as val_tokens exactly like the host driver's chunks.
+    """
+    def sample(key):
+        toks = stream_lib.zipf_tokens(key, (b_local, seq),
+                                      cfg.vocab_size, zipf_a)
+        return {"tokens": toks, "val_tokens": toks}
+
+    return stream_lib.make_stream(sample, n_workers, seed)
 
 
 # ---------------------------------------------------------------------------

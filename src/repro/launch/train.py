@@ -10,8 +10,15 @@ one donated-buffer `lax.scan` over a precomputed straggler schedule
 (one XLA dispatch per chunk instead of one per master iteration);
 `--engine eager` keeps the per-step host loop.
 
+`--stream` makes the scan DEVICE-RESIDENT end to end: worker token
+batches are synthesized inside the scan body from fold-in PRNG keys
+(`repro.fed.trilevel_llm.batch_stream`), the base key and the chunk
+cursor ride the donated carry across chunk dispatches, and the whole
+schedule's masks live on the device — chunk boundaries transfer NO
+token data to the device (only losses/checkpoints come back out).
+
   PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m \
-      --reduced --steps 200 --mode afto
+      --reduced --steps 200 --mode afto --stream
 """
 from __future__ import annotations
 
@@ -28,11 +35,19 @@ import numpy as np
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.core.scheduler import StragglerConfig, StragglerScheduler
+from repro.data import stream as stream_lib
 from repro.data.synthetic import make_token_stream
-from repro.fed.trilevel_llm import (FedHyper, afto_llm_step, cut_refresh_llm,
-                                    init_fed_state, plain_train_step)
+from repro.fed.trilevel_llm import (FedHyper, afto_llm_step, batch_stream,
+                                    cut_refresh_llm, init_fed_state,
+                                    plain_train_step)
 from repro.models import transformer as tfm
 from repro.optim import adamw
+
+# How many times each chunked-scan runner actually traced (python
+# side-effect at trace time): warm equal-size chunks must reuse the jit
+# cache — a retrace would silently break donation and recompile per
+# chunk.  tests/test_launchers.py asserts these stay flat.
+SCAN_TRACES = {"host": 0, "stream": 0}
 
 
 def _chunk_tokens(cfg, args, start: int, stop: int) -> np.ndarray:
@@ -49,10 +64,14 @@ def _worker_mesh_put(state, n_shards):
     per-worker leaves (X-stacks, duals, stale views) shard their leading
     N axis over the mesh's "data" axis and the cut b-blocks shard their
     worker axis; master leaves replicate.  Returns (mesh, state,
-    batch_sharding_fn) — GSPMD then partitions the chunked scan over
-    workers, riding the same fake-device XLA_FLAGS machinery as the
-    dry-run (launch with
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    batch_sharding_fn, state_shardings) — GSPMD then partitions the
+    chunked scan over workers, riding the same fake-device XLA_FLAGS
+    machinery as the dry-run (launch with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    `state_shardings` pins the chunk runners' state out_shardings to
+    these input shardings: without it GSPMD is free to hand the state
+    back in a different layout, and every warm chunk then misses the
+    executable cache and recompiles (same trace, new shardings)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.launch.mesh import make_worker_mesh
@@ -79,12 +98,13 @@ def _worker_mesh_put(state, n_shards):
                          is_leaf=lambda x: isinstance(x, P))
     state = jax.device_put(state, named)
 
-    def put_batch(toks, masks):
-        """tokens (chunk, N, b, s) / masks (chunk, N): worker axis 1."""
+    def put_batch(*arrays):
+        """Arrays with the worker axis second — tokens (chunk, N, b, s),
+        masks (chunk, N) or (T, N) — shard axis 1 over the mesh."""
         tok_s = NamedSharding(mesh, P(None, "data"))
-        return (jax.device_put(toks, tok_s), jax.device_put(masks, tok_s))
+        return tuple(jax.device_put(a, tok_s) for a in arrays)
 
-    return mesh, state, put_batch
+    return mesh, state, put_batch, named
 
 
 def run_afto_scan(cfg, args, hyper, state, sched, val_loss) -> dict:
@@ -98,62 +118,157 @@ def run_afto_scan(cfg, args, hyper, state, sched, val_loss) -> dict:
     boundaries, so a chunk larger than `log_every` logs once per chunk
     (at the first crossed `log_every` boundary).  `--mesh-workers N`
     additionally distributes the federation over an N-device worker
-    mesh (`_worker_mesh_put`)."""
+    mesh (`_worker_mesh_put`).
+
+    With `--stream` the per-chunk host token synthesis + transfer
+    (`_chunk_tokens` / `jnp.asarray`) disappears entirely: the scan body
+    draws each iteration's worker batches from fold-in keys on the
+    absolute iteration, and the chunk loop's whole device input is the
+    donated (state, key, cursor) carry — the schedule masks are put on
+    the device once and sliced in-dispatch, so warm equal-size chunks
+    do zero host→device transfers."""
     schedule = sched.precompute(args.steps)
     chunk = max(1, args.scan_chunk or args.log_every)
     # init_fed_state may alias buffers across fields; donation needs
     # each buffer to appear once.
     state = jax.tree.map(jnp.array, state)
-    put_batch = None
+    put_batch = state_shardings = None
     if args.mesh_workers:
-        mesh, state, put_batch = _worker_mesh_put(state, args.mesh_workers)
+        mesh, state, put_batch, state_shardings = _worker_mesh_put(
+            state, args.mesh_workers)
         print(f"worker mesh: {dict(mesh.shape)} over "
               f"{args.workers} federated workers")
 
-    def body(st, xs):
-        toks, mask, it = xs
-        batch = {"tokens": toks, "val_tokens": toks}
+    def step(st, batch, mask, it):
         st = afto_llm_step(cfg, hyper, st, batch, mask)
-        st = jax.lax.cond(
+        return jax.lax.cond(
             ((it + 1) % args.t_pre == 0) & (it < args.t1),
             lambda s2: cut_refresh_llm(cfg, hyper, s2, batch),
             lambda s2: s2, st)
-        return st, None
 
-    @partial(jax.jit, donate_argnums=(0,))
+    if getattr(args, "stream", False):
+        return _afto_scan_streamed(cfg, args, state, schedule, chunk,
+                                   step, put_batch, val_loss,
+                                   state_shardings)
+
+    def body(st, xs):
+        toks, mask, it = xs
+        return step(st, {"tokens": toks, "val_tokens": toks}, mask, it), \
+            None
+
+    @partial(jax.jit, donate_argnums=(0,), out_shardings=state_shardings)
     def run_chunk(st, toks, masks, its):
+        SCAN_TRACES["host"] += 1
         st, _ = jax.lax.scan(body, st, (toks, masks, its))
         return st
 
+    last_toks = None     # the live chunk's tokens, for the loss slice
+
+    def one_chunk(st, start, stop):
+        nonlocal last_toks
+        toks = jnp.asarray(_chunk_tokens(cfg, args, start, stop))
+        masks = jnp.asarray(schedule.active[start:stop])
+        if put_batch is not None:
+            toks, masks = put_batch(toks, masks)
+        last_toks = toks
+        return run_chunk(st, toks, masks,
+                         jnp.arange(start, stop, dtype=jnp.int32))
+
+    def loss_at(st, stop):
+        w = jax.tree.map(lambda x: x[0], st.X3)
+        return val_loss(w, jnp.asarray(last_toks[-1][0]))
+
+    return _chunk_loop(args, schedule, chunk, state, one_chunk, loss_at)
+
+
+def _chunk_loop(args, schedule, chunk, state, one_chunk, loss_at) -> dict:
+    """The chunk-dispatch loop shared by the host-fed and streamed scan
+    drivers: log whenever a `log_every` boundary was crossed inside the
+    chunk (every chunk when chunk == log_every, the default) or at the
+    final — possibly partial — chunk, and save whenever a `ckpt_every`
+    boundary was crossed.  `one_chunk(state, start, stop)` advances the
+    donated carry; `loss_at(state, stop)` evaluates worker 0's
+    validation loss at iteration stop - 1."""
     history = []
     t0 = time.time()
     for start in range(0, args.steps, chunk):
         stop = min(start + chunk, args.steps)
-        toks = _chunk_tokens(cfg, args, start, stop)
-        toks = jnp.asarray(toks)
-        masks = jnp.asarray(schedule.active[start:stop])
-        if put_batch is not None:
-            toks, masks = put_batch(toks, masks)
-        state = run_chunk(state, toks, masks,
-                          jnp.arange(start, stop, dtype=jnp.int32))
-        # log whenever a log_every boundary was crossed inside the chunk
-        # (every chunk when chunk == log_every, the default) or at the end
+        state = one_chunk(state, start, stop)
         if (stop // args.log_every > start // args.log_every
                 or stop == args.steps):
-            w = jax.tree.map(lambda x: x[0], state.X3)
-            loss = float(val_loss(w, jnp.asarray(toks[-1][0])))
-            history.append({"step": stop, "loss": loss,
+            history.append({"step": stop, "loss": float(loss_at(state, stop)),
                             "sim_time": float(schedule.sim_time[stop - 1]),
                             "host_s": round(time.time() - t0, 1),
                             "cuts": float(jnp.sum(state.cuts.active))})
             print(json.dumps(history[-1]))
-        # save whenever a ckpt_every boundary was crossed inside the chunk
         if args.ckpt_dir and stop // args.ckpt_every > start // args.ckpt_every:
             save_checkpoint(args.ckpt_dir, state.z3, stop)
     return {"history": history}
 
 
-def run_afto(cfg, args) -> dict:
+def _afto_scan_streamed(cfg, args, state, schedule, chunk, step,
+                        put_batch, val_loss, state_shardings) -> dict:
+    """The `--stream` chunk driver: tokens synthesized in-scan, (state,
+    key, cursor) donated across chunk dispatches, masks device-resident
+    and sliced in-dispatch (`_chunk_loop` holds the boundary logic)."""
+    stream = batch_stream(cfg, args.workers, args.batch, args.seq,
+                          seed=args.seed)
+    spec = stream.spec
+
+    key = jnp.asarray(stream.key)
+    cursor = jnp.zeros((), jnp.int32)
+    out_shardings = None
+    if state_shardings is not None:
+        # commit the scalar carry replicated and pin the outputs to the
+        # input layout, so warm chunks hit the executable cache
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        rep = NamedSharding(
+            jax.tree.leaves(state_shardings)[0].mesh, P())
+        key, cursor = jax.device_put((key, cursor), rep)
+        out_shardings = (state_shardings, rep, rep)
+
+    def body(carry, xs):
+        st, key = carry
+        mask, it = xs
+        batch = stream_lib.batch_at(spec, key, it)
+        return (step(st, batch, mask, it), key), None
+
+    @partial(jax.jit, static_argnames=("n",), donate_argnums=(0, 1, 2),
+             out_shardings=out_shardings)
+    def run_chunk(st, key, start, masks, n):
+        SCAN_TRACES["stream"] += 1
+        its = start + jnp.arange(n, dtype=jnp.int32)
+        mk = jax.lax.dynamic_slice_in_dim(masks, start, n)
+        (st, key), _ = jax.lax.scan(body, (st, key), (mk, its))
+        return st, key, start + n
+
+    @jax.jit
+    def val_at(w, key, it):
+        # worker 0's tokens at iteration `it` — the streamed stand-in
+        # for the host path's `toks[-1][0]` validation slice
+        toks = stream_lib.batch_at(spec, key, it, n_local=1)["tokens"][0]
+        return val_loss(w, toks)
+
+    masks = jnp.asarray(schedule.active, jnp.float32)
+    if put_batch is not None:
+        masks, = put_batch(masks)
+
+    def one_chunk(st, start, stop):
+        nonlocal key, cursor
+        st, key, cursor = run_chunk(st, key, cursor, masks,
+                                    n=stop - start)
+        return st
+
+    def loss_at(st, stop):
+        w = jax.tree.map(lambda x: x[0], st.X3)
+        return val_at(w, key, jnp.asarray(stop - 1, jnp.int32))
+
+    return _chunk_loop(args, schedule, chunk, state, one_chunk, loss_at)
+
+
+def _afto_setup(cfg, args):
+    """(hyper, state, sched, val_loss) for the AFTO drivers — split out
+    so tests exercise `run_afto_scan` in-process."""
     n, b, s = args.workers, args.batch, args.seq
     hyper = FedHyper(n_workers=n, cut_mode=args.cut_mode,
                      sketch_r=args.sketch_r, p_max=2, k_inner=1,
@@ -164,11 +279,19 @@ def run_afto(cfg, args) -> dict:
     sched = StragglerScheduler(StragglerConfig(
         n_workers=n, s_active=max(1, n - 1), tau=args.tau,
         n_stragglers=1, seed=args.seed))
+    return hyper, state, sched, val_loss
+
+
+def run_afto(cfg, args) -> dict:
+    hyper, state, sched, val_loss = _afto_setup(cfg, args)
 
     if args.engine == "scan":
         return run_afto_scan(cfg, args, hyper, state, sched, val_loss)
     if args.mesh_workers:
         raise ValueError("--mesh-workers requires --engine scan")
+    if getattr(args, "stream", False):
+        raise ValueError("--stream requires --engine scan")
+    n, b, s = args.workers, args.batch, args.seq
 
     step = jax.jit(lambda st, bt, m: afto_llm_step(cfg, hyper, st, bt, m))
     refresh = jax.jit(lambda st, bt: cut_refresh_llm(cfg, hyper, st, bt))
@@ -240,6 +363,13 @@ def main():
     ap.add_argument("--t-pre", type=int, default=20)
     ap.add_argument("--t1", type=int, default=10_000)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--stream", action="store_true",
+                    help="device-resident token stream (--engine scan): "
+                         "worker batches are synthesized inside the "
+                         "scan body from fold-in PRNG keys instead of "
+                         "host numpy chunks, and the key/cursor carry "
+                         "is donated across chunk dispatches — chunk "
+                         "boundaries transfer no token data")
     ap.add_argument("--scan-chunk", type=int, default=None,
                     help="master iterations per compiled scan dispatch "
                          "(--engine scan); defaults to --log-every. "

@@ -1,8 +1,13 @@
-"""Smoke tests for the CLI drivers (train/serve) as subprocesses."""
+"""Smoke tests for the CLI drivers (train/serve) as subprocesses, plus
+in-process coverage of `run_afto_scan`'s chunk-boundary logic (logging /
+checkpoint crossings, final partial chunk) and the `--stream`
+device-resident path."""
+import argparse
 import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
 
 ENV = dict(os.environ)
@@ -13,6 +18,145 @@ def _run(args, timeout=900):
     return subprocess.run([sys.executable, "-m"] + args, env=ENV,
                           capture_output=True, text=True, timeout=timeout,
                           cwd=os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _train_args(**overrides):
+    """The afto driver namespace mirroring `train.main`'s defaults."""
+    base = dict(arch="xlstm-125m", reduced=True, mode="afto",
+                engine="scan", cut_mode="sketch", sketch_r=32, steps=9,
+                workers=2, batch=1, seq=17, lr=3e-3, tau=4, t_pre=4,
+                t1=10_000, log_every=2, scan_chunk=6, mesh_workers=None,
+                ckpt_dir=None, ckpt_every=5, seed=0, stream=False)
+    base.update(overrides)
+    return argparse.Namespace(**base)
+
+
+def _tiny_cfg():
+    """A 2-layer d_model=32 xlstm family member: real lowering, CPU-cheap
+    (the full reduced configs stay covered by the subprocess smokes)."""
+    from repro.models.config import BlockSpec, ModelConfig, Stage
+
+    m = BlockSpec(mixer="mlstm", mlp="none")
+    s = BlockSpec(mixer="slstm", mlp="none")
+    return ModelConfig(name="xlstm-tiny", arch_type="ssm", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_head=16,
+                       d_ff=0, vocab_size=128,
+                       stages=(Stage((m, s), 1),)).validate()
+
+
+def _run_afto_scan(cfg, args):
+    from repro.launch import train
+
+    hyper, state, sched, val_loss = train._afto_setup(cfg, args)
+    return train.run_afto_scan(cfg, args, hyper, state, sched, val_loss)
+
+
+def _ckpt_steps(ckpt_dir):
+    return sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir))
+
+
+@pytest.fixture()
+def stub_afto_step(monkeypatch):
+    """Identity AFTO step/refresh + constant val loss: the chunk loop's
+    boundary logic (what run_afto_scan owns) exercised without paying a
+    model compile per parametrization."""
+    import jax.numpy as jnp
+
+    from repro.launch import train
+
+    monkeypatch.setattr(train, "afto_llm_step",
+                        lambda cfg, hyper, st, batch, mask: st)
+    monkeypatch.setattr(train, "cut_refresh_llm",
+                        lambda cfg, hyper, st, batch: st)
+
+    def run(cfg, args):
+        hyper, state, sched, _ = train._afto_setup(cfg, args)
+        return train.run_afto_scan(cfg, args, hyper, state, sched,
+                                   lambda w, tk: jnp.float32(0.125))
+    return run
+
+
+# ---------------------------------------------------------------------------
+# chunk-boundary logic (in-process; previously untested)
+# ---------------------------------------------------------------------------
+
+def test_chunk_larger_than_log_every_logs_once_per_crossing(
+        stub_afto_step, tmp_path):
+    """chunk=6 > log_every=2: each chunk crosses several log boundaries
+    but logs ONCE (at the chunk end); the final PARTIAL chunk [6, 9)
+    logs because stop == steps; ckpt_every=5 is crossed only inside the
+    first chunk, so exactly one checkpoint is written, at step 6."""
+    out = stub_afto_step(_tiny_cfg(), _train_args(
+        steps=9, scan_chunk=6, log_every=2,
+        ckpt_dir=str(tmp_path / "ck"), ckpt_every=5))
+    assert [h["step"] for h in out["history"]] == [6, 9]
+    assert all(np.isfinite(h["loss"]) for h in out["history"])
+    assert _ckpt_steps(tmp_path / "ck") == [6]
+
+
+def test_final_partial_chunk_always_logs(stub_afto_step):
+    """log_every=10 is never crossed in 9 steps, but the final partial
+    chunk still logs (stop == steps) so a run is never silent."""
+    out = stub_afto_step(_tiny_cfg(),
+                         _train_args(steps=9, scan_chunk=6, log_every=10))
+    assert [h["step"] for h in out["history"]] == [9]
+
+
+def test_default_chunk_keeps_log_cadence(stub_afto_step):
+    """scan_chunk=None defaults to log_every: one log per chunk plus the
+    final iteration — the pre-flag behavior."""
+    out = stub_afto_step(_tiny_cfg(), _train_args(steps=7, scan_chunk=None,
+                                                  log_every=3))
+    assert [h["step"] for h in out["history"]] == [3, 6, 7]
+
+
+def test_streamed_chunk_boundaries_match_host_path(stub_afto_step,
+                                                   tmp_path):
+    """--stream shares the host path's boundary behavior: one log per
+    crossed-or-final chunk, checkpoints at crossed ckpt boundaries."""
+    out = stub_afto_step(_tiny_cfg(), _train_args(
+        steps=9, scan_chunk=6, log_every=2, stream=True,
+        ckpt_dir=str(tmp_path / "ck"), ckpt_every=5))
+    assert [h["step"] for h in out["history"]] == [6, 9]
+    assert _ckpt_steps(tmp_path / "ck") == [6]
+
+
+# ---------------------------------------------------------------------------
+# --stream: device-resident token scan (real tiny model)
+# ---------------------------------------------------------------------------
+
+def test_streamed_scan_no_host_tokens(monkeypatch, tmp_path):
+    """--stream must never synthesize tokens on the host (_chunk_tokens /
+    make_token_stream are poisoned), equal-size warm chunks must reuse
+    ONE compiled trace (the donated state/key/cursor chain would break
+    on a retrace), and losses must come out finite."""
+    from repro.launch import train
+
+    def _boom(*a, **k):
+        raise AssertionError("host token synthesis on the streamed path")
+
+    # patch train's OWN bindings (it calls the imported names, not the
+    # synthetic module attribute)
+    monkeypatch.setattr(train, "_chunk_tokens", _boom)
+    monkeypatch.setattr(train, "make_token_stream", _boom)
+    before = dict(train.SCAN_TRACES)
+    out = _run_afto_scan(_tiny_cfg(), _train_args(
+        steps=8, scan_chunk=4, log_every=4, seq=17, stream=True,
+        ckpt_dir=str(tmp_path / "ck"), ckpt_every=4))
+    assert [h["step"] for h in out["history"]] == [4, 8]
+    assert all(np.isfinite(h["loss"]) for h in out["history"])
+    # two equal-size chunks -> one trace; the host runner stayed cold
+    assert train.SCAN_TRACES["stream"] == before["stream"] + 1
+    assert train.SCAN_TRACES["host"] == before["host"]
+    assert _ckpt_steps(tmp_path / "ck") == [4, 8]
+
+
+def test_stream_requires_scan_engine():
+    from repro.launch import train
+
+    args = _train_args(engine="eager", stream=True)
+    with pytest.raises(ValueError, match="--engine scan"):
+        train.run_afto(_tiny_cfg(), args)
 
 
 def test_train_afto_driver(tmp_path):

@@ -1,0 +1,403 @@
+"""Device-resident stream conformance harness (the PR-5 contract).
+
+Three rules define `repro.data.stream` (see its docstring): the base key
+is never advanced, iteration keys fold on the ABSOLUTE master iteration,
+worker keys fold on the GLOBAL worker index.  Everything here follows
+from them and guards them:
+
+  * chunking invariance — any chunk partition of a trajectory (batch
+    sequence AND state-continued engine dispatches, refreshes included)
+    is bit-identical to the unchunked run;
+  * streamed parity — eager / scanned / sharded (1-, 2-, 4-worker fake
+    meshes) / swept engines agree to f32 tolerance, and all match an
+    independent host-fed reference loop that materializes each batch;
+  * determinism — a fixed seed reproduces the batch stream across
+    processes; re-seeding a stream never retraces the compiled
+    trajectory.
+"""
+import dataclasses
+import hashlib
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import (make_hyper, make_quadratic_problem, make_schedules,
+                      make_straggler_cfg)
+from repro.core import StragglerScheduler, run, run_scanned, run_swept
+from repro.core import afto as afto_lib
+from repro.core import engine as engine_lib
+from repro.data import stream as stream_lib
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # the [test] extra installs it;
+    HAVE_HYPOTHESIS = False             # the deterministic variants of
+                                        # every property still run
+
+DIM = 3
+
+
+def _sample(key):
+    ka, kb = jax.random.split(key)
+    return {"A": jax.random.normal(ka, (DIM, DIM)) * 0.3,
+            "b": jax.random.normal(kb, (DIM,))}
+
+
+def _stream(seed=0, n_workers=4):
+    return stream_lib.make_stream(_sample, n_workers, seed)
+
+
+def _schedule(n, **kw):
+    return StragglerScheduler(make_straggler_cfg(**kw)).precompute(n)
+
+
+def _assert_trees_close(t1, t2, rtol=1e-4, atol=1e-6):
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+def _assert_trees_equal(t1, t2):
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# key discipline: fold-in determinism + worker-block locality
+# ---------------------------------------------------------------------------
+
+def test_next_batch_fold_in_determinism():
+    s = _stream(seed=3)
+    _assert_trees_equal(stream_lib.next_batch(s, 0),
+                        stream_lib.next_batch(s, 0))
+    # iterations draw distinct batches; the base key never advances
+    b0 = stream_lib.next_batch(s, 0)
+    b1 = stream_lib.next_batch(s, 1)
+    assert not np.allclose(np.asarray(b0["A"]), np.asarray(b1["A"]))
+    # worker rows are distinct draws
+    assert not np.allclose(np.asarray(b0["A"][0]), np.asarray(b0["A"][1]))
+    # a different seed is a different stream
+    b0_other = stream_lib.next_batch(_stream(seed=4), 0)
+    assert not np.allclose(np.asarray(b0["A"]), np.asarray(b0_other["A"]))
+
+
+def test_worker_blocks_are_layout_independent():
+    """A (worker_offset, n_local) block reproduces the same global rows
+    the full batch has — the property the sharded engines rely on to
+    draw shard-locally with no collectives."""
+    s = _stream(seed=1)
+    full = stream_lib.next_batch(s, 5)
+    for off, n_loc in ((0, 1), (1, 2), (2, 2), (0, 4)):
+        part = stream_lib.next_batch(s, 5, worker_offset=off,
+                                     n_local=n_loc)
+        _assert_trees_equal(part, jax.tree.map(
+            lambda x: x[off:off + n_loc], full))
+
+
+def test_batch_sequence_chunk_invariant():
+    """Fold-in (not iterated) keys: regenerating any sub-range of the
+    iteration axis reproduces the full sequence bitwise — there is no
+    sequential key state a chunk boundary could disturb."""
+    s = _stream(seed=2)
+    seq = [stream_lib.next_batch(s, it) for it in range(8)]
+    for a, b in ((0, 3), (3, 8), (2, 5)):
+        for it in range(a, b):
+            _assert_trees_equal(seq[it], stream_lib.next_batch(s, it))
+
+
+def test_stream_validation():
+    prob = make_quadratic_problem()
+    sched = _schedule(4)
+    with pytest.raises(ValueError):   # worker-count mismatch
+        run_scanned(prob, make_hyper(), sched, data=_stream(n_workers=3))
+    with pytest.raises(ValueError):   # spec-less stream
+        run_scanned(prob, make_hyper(), sched,
+                    data=stream_lib.Stream(key=jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# chunking invariance of whole trajectories (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _assert_chunking_invariant(prob, hyper, sched, strm, bounds):
+    """Chunked state-continued dispatches over `bounds` must reproduce
+    the unchunked final state BITWISE, INCLUDING t_pre refreshes (both
+    the batch fold-in and the refresh predicate run on the carried
+    absolute `state.t`, not the per-dispatch iteration index)."""
+    T = sched.n_iterations
+    full = run_scanned(prob, hyper, sched, metrics_every=T, data=strm)
+    state = None
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        state = run_scanned(prob, hyper, sched.slice(a, b),
+                            metrics_every=T, data=strm, state=state).state
+    _assert_trees_equal(state, full.state)
+
+
+@pytest.mark.parametrize("bounds", [
+    [0, 7, 12, 20],       # boundaries misaligned with t_pre=3
+    [0, 1, 20],           # single-iteration first chunk
+    [0, 19, 20],          # single-iteration final chunk
+    [0, 3, 6, 9, 20],     # boundaries ON the refresh stride
+])
+def test_chunked_trajectory_bit_identical(bounds):
+    prob = make_quadratic_problem()
+    _assert_chunking_invariant(prob, make_hyper(t_pre=3), _schedule(20),
+                               _stream(), bounds)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=12)
+    @given(data=st.data())
+    def test_chunked_trajectory_bit_identical_property(data):
+        """Hypothesis sweep of the same invariant over arbitrary
+        partitions and trajectory lengths."""
+        T = data.draw(st.integers(4, 20), label="n_iterations")
+        bounds = [0] + sorted(data.draw(
+            st.sets(st.integers(1, T - 1), max_size=3),
+            label="cuts")) + [T]
+        prob = make_quadratic_problem()
+        _assert_chunking_invariant(prob, make_hyper(t_pre=3),
+                                   _schedule(T), _stream(), bounds)
+
+
+# ---------------------------------------------------------------------------
+# streamed parity: eager vs scanned vs host-fed reference
+# ---------------------------------------------------------------------------
+
+def test_streamed_scan_matches_eager():
+    prob = make_quadratic_problem()
+    hyper, cfg = make_hyper(), make_straggler_cfg()
+    sched = _schedule(30)
+    strm = _stream()
+    res_e = run(prob, hyper, scheduler_cfg=cfg, mode="eager",
+                schedule=sched, metrics_every=10, data=strm)
+    res_s = run(prob, hyper, scheduler_cfg=cfg, mode="scan",
+                schedule=sched, metrics_every=10, data=strm)
+    _assert_trees_close(res_e.state, res_s.state, rtol=1e-5)
+    np.testing.assert_allclose(res_e.history["gap_sq"],
+                               res_s.history["gap_sq"],
+                               rtol=1e-4, atol=1e-6)
+    assert list(res_e.history["n_cuts_ii"]) == \
+        list(res_s.history["n_cuts_ii"])
+
+
+def test_streamed_matches_host_fed_reference():
+    """Independent host-fed reference: materialize every iteration's
+    batch on the host (numpy round-trip) and drive jitted afto_step /
+    cut_refresh with `problem.data` replaced per iteration — the
+    pre-stream architecture.  The streamed scan must reproduce it to
+    f32 tolerance."""
+    prob = make_quadratic_problem()
+    hyper = make_hyper(t_pre=5)
+    T = 25
+    sched = _schedule(T)
+    strm = _stream()
+
+    step = jax.jit(lambda s, m, d: afto_lib.afto_step(
+        dataclasses.replace(prob, data=d), hyper, s, m))
+    refresh = jax.jit(lambda s, d: afto_lib.cut_refresh(
+        dataclasses.replace(prob, data=d), hyper, s))
+
+    state = afto_lib.init_state(prob, hyper)
+    for it in range(T):
+        batch = jax.tree.map(
+            lambda x: jnp.asarray(np.asarray(x)),       # host round-trip
+            stream_lib.next_batch(strm, it))
+        state = step(state, jnp.asarray(sched.active[it]), batch)
+        if (it + 1) % hyper.t_pre == 0 and it < hyper.t1:
+            state = refresh(state, batch)
+
+    res = run_scanned(prob, hyper, sched, metrics_every=T, data=strm)
+    _assert_trees_close(state, res.state, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# worker-mesh parity (1-, 2-, 4-shard fake meshes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_streamed_sharded_matches_replicated(n_shards):
+    if jax.device_count() < n_shards:
+        pytest.skip(f"needs {n_shards} devices")
+    from repro.launch.mesh import make_worker_mesh
+
+    prob = make_quadratic_problem()
+    hyper = make_hyper()
+    sched = _schedule(20)
+    strm = _stream()
+    ref = run_scanned(prob, hyper, sched, metrics_every=5, data=strm)
+    sh = run_scanned(prob, hyper, sched, metrics_every=5, data=strm,
+                     mesh=make_worker_mesh(n_shards))
+    _assert_trees_close(ref.state, sh.state)
+    np.testing.assert_allclose(ref.history["gap_sq"],
+                               sh.history["gap_sq"],
+                               rtol=1e-3, atol=1e-6)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=8)
+    @given(seed=st.integers(0, 2 ** 16), sched_seed=st.integers(0, 2 ** 8))
+    def test_streamed_two_shard_parity_property(seed, sched_seed):
+        """Hypothesis variant of the 2-worker-mesh parity: arbitrary
+        stream seeds x arrival processes stay f32-close to the
+        replicated engine."""
+        if jax.device_count() < 2:
+            pytest.skip("needs 2 devices")
+        from repro.launch.mesh import make_worker_mesh
+
+        prob = make_quadratic_problem()
+        hyper = make_hyper()
+        sched = _schedule(12, seed=sched_seed)
+        strm = _stream(seed=seed)
+        ref = run_scanned(prob, hyper, sched, metrics_every=4, data=strm)
+        sh = run_scanned(prob, hyper, sched, metrics_every=4, data=strm,
+                         mesh=make_worker_mesh(2))
+        _assert_trees_close(ref.state, sh.state)
+
+
+# ---------------------------------------------------------------------------
+# swept engine
+# ---------------------------------------------------------------------------
+
+def test_streamed_sweep_rows_match_scanned():
+    prob = make_quadratic_problem()
+    hyper = make_hyper()
+    scheds = make_schedules(15, (0, 1))
+    strm = _stream()
+    swept = run_swept(prob, hyper, scheds, metrics_every=5, data=strm)
+    for r in range(2):
+        single = run_scanned(prob, hyper, scheds[r], metrics_every=5,
+                             data=strm)
+        np.testing.assert_allclose(single.history["gap_sq"],
+                                   swept.run(r).history["gap_sq"],
+                                   rtol=2e-4, atol=1e-6)
+        _assert_trees_close(single.state,
+                            jax.tree.map(lambda x: x[r], swept.state),
+                            rtol=2e-4)
+
+
+def test_streamed_sharded_sweep_matches_replicated_sweep():
+    """The streamed sharded-sweep engine (vmap inside shard_map, in-scan
+    batches, shared key) reproduces the replicated streamed sweep."""
+    if jax.device_count() < 2:
+        pytest.skip("needs 2 devices")
+    from repro.launch.mesh import make_worker_mesh
+
+    prob = make_quadratic_problem()
+    hyper = make_hyper()
+    scheds = make_schedules(12, (0, 1))
+    strm = _stream()
+    rep = run_swept(prob, hyper, scheds, metrics_every=4, data=strm)
+    sh = run_swept(prob, hyper, scheds, metrics_every=4, data=strm,
+                   mesh=make_worker_mesh(2))
+    _assert_trees_close(rep.state, sh.state, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(rep.history["gap_sq"]),
+                               np.asarray(sh.history["gap_sq"]),
+                               rtol=1e-3, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# retrace + determinism
+# ---------------------------------------------------------------------------
+
+def test_streamed_reseed_does_not_retrace():
+    prob = make_quadratic_problem()
+    hyper = make_hyper()
+    sched = _schedule(12)
+    strm = _stream()
+    run_scanned(prob, hyper, sched, metrics_every=6, data=strm)
+    builds = engine_lib.BUILD_COUNTS["scan_streamed"]
+    run_scanned(prob, hyper, sched, metrics_every=6,
+                data=dataclasses.replace(strm, key=jax.random.PRNGKey(9)))
+    assert engine_lib.BUILD_COUNTS["scan_streamed"] == builds
+
+
+_DIGEST_SNIPPET = textwrap.dedent("""
+    import hashlib
+
+    import jax
+    import numpy as np
+
+    from repro.data import stream as stream_lib
+
+    DIM = 3
+
+    def _sample(key):
+        ka, kb = jax.random.split(key)
+        return {"A": jax.random.normal(ka, (DIM, DIM)) * 0.3,
+                "b": jax.random.normal(kb, (DIM,))}
+
+    def digest(seed=7, n_workers=4, iters=4):
+        s = stream_lib.make_stream(_sample, n_workers, seed)
+        h = hashlib.sha256()
+        for it in range(iters):
+            b = stream_lib.next_batch(s, it)
+            h.update(np.asarray(b["A"], np.float32).tobytes())
+            h.update(np.asarray(b["b"], np.float32).tobytes())
+        return h.hexdigest()
+""")
+
+
+def test_cross_process_seed_determinism():
+    """A fixed seed reproduces the exact batch bytes in a FRESH process
+    (fold-in keys carry no process state — unlike e.g. salted string
+    hashing, which silently broke dataset reproducibility once before;
+    see data/synthetic.py)."""
+    ns: dict = {}
+    exec(compile(_DIGEST_SNIPPET, "<digest>", "exec"), ns)
+    here = ns["digest"]()
+
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _DIGEST_SNIPPET + "\nprint(digest())"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout.strip() == here
+
+
+# ---------------------------------------------------------------------------
+# LLM token streams
+# ---------------------------------------------------------------------------
+
+def test_zipf_tokens_device_side():
+    toks = stream_lib.zipf_tokens(jax.random.PRNGKey(0), (64, 128), 1000)
+    toks = np.asarray(toks)
+    assert toks.dtype == np.int32
+    assert toks.min() >= 0 and toks.max() < 1000
+    # zipf: token 0 is the most frequent id
+    vals, counts = np.unique(toks, return_counts=True)
+    assert vals[np.argmax(counts)] == 0
+    # a <= 1 has no normalizable rank tail (a == 1 would divide by zero,
+    # a < 1 degenerates to all-zero ids) — rejected at entry
+    for bad_a in (1.0, 0.9):
+        with pytest.raises(ValueError, match="zipf_a"):
+            stream_lib.zipf_tokens(jax.random.PRNGKey(0), (2, 4), 16,
+                                   zipf_a=bad_a)
+
+
+def test_llm_batch_stream_layout():
+    from repro.configs import get_config, reduced
+    from repro.fed.trilevel_llm import batch_stream
+
+    cfg = reduced(get_config("xlstm-125m"))
+    s = batch_stream(cfg, n_workers=2, b_local=1, seq=16, seed=0)
+    b = stream_lib.next_batch(s, 0)
+    assert b["tokens"].shape == (2, 1, 16)
+    assert b["tokens"].dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(b["tokens"]),
+                                  np.asarray(b["val_tokens"]))
+    assert np.asarray(b["tokens"]).max() < cfg.vocab_size
+    # shard-local block == the same global rows (mesh contract)
+    part = stream_lib.next_batch(s, 0, worker_offset=1, n_local=1)
+    np.testing.assert_array_equal(np.asarray(part["tokens"]),
+                                  np.asarray(b["tokens"][1:2]))
