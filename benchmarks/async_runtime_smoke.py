@@ -1,0 +1,75 @@
+"""CI async-runtime gate: replay parity + live convergence.
+
+Two checks, both fatal on failure:
+
+  1. PARITY.  The async master/worker runtime over the deterministic
+     in-process transport, replaying a seeded arrival Schedule, must
+     reproduce `run_scanned` under the same Schedule (gap history
+     within float32 tolerance, replayed arrival order exact).
+  2. LIVE.  A free-running master + workers (real thread timing, no
+     replay) must converge — stationarity gap decreasing — with every
+     recorded staleness within the paper's tau bound, and its RECORDED
+     arrival Schedule must itself replay through run_scanned back to
+     the async trajectory (the closed loop that pins the runtime to the
+     proven engine).
+
+  PYTHONPATH=src python -m benchmarks.async_runtime_smoke
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main(n_iterations: int = 40) -> dict:
+    import numpy as np
+
+    from repro.core import run_scanned
+    from repro.core.scheduler import StragglerConfig, StragglerScheduler
+    from repro.fed.runtime import problems as problems_lib
+    from repro.fed.runtime import run_async
+
+    problem, hyper = problems_lib.build("quadratic", n_workers=4)
+    cfg = StragglerConfig(n_workers=hyper.n_workers,
+                          s_active=hyper.s_active, tau=hyper.tau,
+                          n_stragglers=1, straggler_slowdown=5.0, seed=0)
+    schedule = StragglerScheduler(cfg).precompute(n_iterations)
+
+    # 1. replay parity against the scanned engine
+    ref = run_scanned(problem, hyper, schedule, metrics_every=10)
+    rep = run_async(problem, hyper, replay=schedule, metrics_every=10)
+    gap_err = float(np.max(np.abs(
+        np.asarray(rep.history["gap_sq"])
+        - np.asarray(ref.history["gap_sq"]))
+        / np.maximum(np.abs(np.asarray(ref.history["gap_sq"])), 1e-8)))
+    assert gap_err < 2e-5, f"replay parity broken: rel err {gap_err}"
+    assert np.array_equal(rep.arrivals.active, schedule.active), \
+        "replay consumed a different arrival order than the schedule"
+
+    # 2. live free-run: converge, respect tau, and round-trip the
+    #    recorded arrivals through the scanned engine
+    live = run_async(problem, hyper, n_iterations=n_iterations,
+                     metrics_every=10)
+    gaps = live.history["gap_sq"]
+    assert gaps[-1] < gaps[0], f"live run not decreasing: {gaps}"
+    max_stale = int(live.arrivals.max_staleness.max())
+    assert max_stale <= hyper.tau, (max_stale, hyper.tau)
+    echo = run_scanned(problem, hyper, live.arrivals, metrics_every=10)
+    echo_err = float(np.max(np.abs(
+        np.asarray(live.history["gap_sq"])
+        - np.asarray(echo.history["gap_sq"]))
+        / np.maximum(np.abs(np.asarray(echo.history["gap_sq"])), 1e-8)))
+    assert echo_err < 2e-5, f"recorded-arrival replay broken: {echo_err}"
+
+    return {"replay_rel_err": gap_err,
+            "live_gap_first": float(gaps[0]),
+            "live_gap_last": float(gaps[-1]),
+            "live_max_staleness": max_stale,
+            "recorded_replay_rel_err": echo_err}
+
+
+if __name__ == "__main__":
+    rec = main()
+    json.dump(rec, sys.stdout, indent=1)
+    print()
+    print("async runtime smoke: OK")

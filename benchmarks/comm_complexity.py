@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.conftest_shim import make_quadratic_problem
-from repro.core import Hyper, StragglerConfig, run
+from repro.core import Hyper, RunSpec, StragglerConfig, run
 from repro.utils.tree import tree_size
 
 
@@ -21,8 +21,9 @@ def main(n_iterations: int = 60):
                   t_pre=5, t1=100, eta_x=0.05, eta_z=0.05, d1=3)
     # single-seed sweep: the cut-count trajectory rides the same swept
     # dispatch path the figure benchmarks use
-    res = run(prob, hyper, n_iterations=n_iterations, metrics_every=10,
-              mode="sweep", seeds=(0,)).run(0)
+    res = run(RunSpec(problem=prob, hyper=hyper,
+                      n_iterations=n_iterations, metrics_every=10,
+                      engine="sweep", seeds=(0,))).run(0)
 
     d = (3, 3, 3)
     s = hyper.s_active

@@ -6,7 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import StragglerConfig, StragglerScheduler, run
+from repro.core import RunSpec, StragglerConfig, StragglerScheduler, run
 from repro.core.types import TrilevelProblem
 
 
@@ -27,10 +27,11 @@ def swept_method_histories(problem, hyper, s_actives, n_iterations: int,
             straggler_slowdown=straggler_slowdown,
             seed=seed)).precompute(n_iterations)
         for s_active in s_actives]
-    res = run(problem, hyper, n_iterations=n_iterations,
-              metrics_fn=metrics_fn, metrics_every=metrics_every,
-              mode="sweep", schedules=schedules,
-              sweep_hypers={"s_active": list(s_actives)})
+    res = run(RunSpec(problem=problem, hyper=hyper,
+                      n_iterations=n_iterations, metrics_fn=metrics_fn,
+                      metrics_every=metrics_every, engine="sweep",
+                      schedules=schedules,
+                      sweep_hypers={"s_active": list(s_actives)}))
     return [res.run(r).history for r in range(len(s_actives))]
 
 

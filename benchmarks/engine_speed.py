@@ -19,7 +19,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Hyper, StragglerConfig, StragglerScheduler, run,
+from repro.core import (Hyper, RunSpec, StragglerConfig, StragglerScheduler, run,
                         run_scanned, run_swept)
 from repro.core.types import TrilevelProblem
 
@@ -79,9 +79,10 @@ def quickstart_stream(seed: int = 0):
 def _timed_run(problem, hyper, cfg, schedule, mode: str):
     n_iterations = schedule.n_iterations
     t0 = time.perf_counter()
-    res = run(problem, hyper, scheduler_cfg=cfg, n_iterations=n_iterations,
-              metrics_every=max(1, n_iterations // 10), mode=mode,
-              schedule=schedule)
+    res = run(RunSpec(problem=problem, hyper=hyper, scheduler=cfg,
+                      n_iterations=n_iterations,
+                      metrics_every=max(1, n_iterations // 10),
+                      engine=mode, schedule=schedule))
     jax.block_until_ready(res.state)
     wall = time.perf_counter() - t0
     return res, wall

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from benchmarks.conftest_shim import swept_method_histories
 from repro.apps.robust_hpo import default_hyper, make_robust_hpo_problem
-from repro.core import StragglerConfig, run
+from repro.core import RunSpec, StragglerConfig, run
 
 # Table 1 settings: (N, S, stragglers, tau)
 SETTINGS = {
@@ -46,10 +46,10 @@ def run_dataset(dataset: str, n_iterations: int = 120, seed: int = 0,
             cfg = StragglerConfig(n_workers=n, s_active=s_active, tau=tau,
                                   n_stragglers=stragglers,
                                   straggler_slowdown=5.0, seed=seed)
-            per_algo.append(run(
-                task.problem, hyper, scheduler_cfg=cfg,
+            per_algo.append(run(RunSpec(
+                problem=task.problem, hyper=hyper, scheduler=cfg,
                 n_iterations=n_iterations, metrics_fn=metrics,
-                metrics_every=10, mode=engine).history)
+                metrics_every=10, engine=engine)).history)
     for (algo, _), h in zip(algos, per_algo):
         for i in range(len(h["t"])):
             rows.append({"dataset": dataset, "algo": algo,

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from benchmarks.conftest_shim import swept_method_histories
 from repro.apps.domain_adaptation import (default_hyper,
                                           make_domain_adaptation_problem)
-from repro.core import StragglerConfig, run
+from repro.core import RunSpec, StragglerConfig, run
 
 # Table 1: SVHN(finetune): N=4 S=3 1 straggler tau=5;
 #          SVHN(pretrain): N=6 S=3 2 stragglers tau=15
@@ -49,10 +49,10 @@ def run_direction(direction: str, n_iterations: int = 40, seed: int = 0,
             cfg = StragglerConfig(n_workers=n, s_active=s_active, tau=tau,
                                   n_stragglers=stragglers,
                                   straggler_slowdown=5.0, seed=seed)
-            per_algo.append(run(
-                task.problem, hyper, scheduler_cfg=cfg,
+            per_algo.append(run(RunSpec(
+                problem=task.problem, hyper=hyper, scheduler=cfg,
                 n_iterations=n_iterations, metrics_fn=metrics,
-                metrics_every=me, mode=engine).history)
+                metrics_every=me, engine=engine)).history)
     rows = []
     for (algo, _), h in zip(algos, per_algo):
         for i in range(len(h["t"])):

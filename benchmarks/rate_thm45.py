@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.conftest_shim import make_quadratic_problem
-from repro.core import Hyper, StragglerConfig, run
+from repro.core import Hyper, RunSpec, StragglerConfig, run
 
 
 def _fit_slope(t, g, t1):
@@ -53,9 +53,10 @@ def main(n_iterations: int = 400, seed: int = 0, n_seeds: int = 2):
                   t_pre=10, t1=200, eta_x=0.05, eta_z=0.05, d1=3)
     cfg = StragglerConfig(n_workers=4, s_active=3, tau=5, n_stragglers=1,
                           seed=seed)
-    res = run(prob, hyper, scheduler_cfg=cfg, n_iterations=n_iterations,
-              metrics_every=5, mode="sweep",
-              seeds=tuple(seed + i for i in range(n_seeds)))
+    res = run(RunSpec(problem=prob, hyper=hyper, scheduler=cfg,
+                      n_iterations=n_iterations, metrics_every=5,
+                      engine="sweep",
+                      seeds=tuple(seed + i for i in range(n_seeds))))
     t = np.asarray(res.history["t"], dtype=np.float64)
     slopes, gap0, gapT = [], None, []
     for r in range(n_seeds):

@@ -10,7 +10,8 @@ import numpy as np
 
 from repro.apps.baselines import run_adbo, run_fednest
 from repro.apps.robust_hpo import default_hyper, make_robust_hpo_problem
-from repro.core import StragglerConfig, StragglerScheduler, init_state, run
+from repro.core import (RunSpec, StragglerConfig, StragglerScheduler,
+                        init_state, run)
 from repro.utils.tree import tree_stack
 
 DATASETS = ("diabetes", "boston", "red_wine", "white_wine")
@@ -33,9 +34,10 @@ def run_afto_swept(tasks, n, n_iterations, seeds):
         for seed in seeds]
     data = tree_stack([t.problem.data for t in tasks])
     states = tree_stack([init_state(t.problem, hyper) for t in tasks])
-    res = run(tasks[0].problem, hyper, n_iterations=n_iterations,
-              metrics_every=n_iterations, mode="sweep",
-              schedules=schedules, sweep_states=states, sweep_data=data)
+    res = run(RunSpec(problem=tasks[0].problem, hyper=hyper,
+                      n_iterations=n_iterations,
+                      metrics_every=n_iterations, engine="sweep",
+                      schedules=schedules, sweep_states=states, data=data))
     return [jax.tree.map(lambda x: jnp.mean(x[r], 0), res.state.X3)
             for r in range(len(seeds))]
 

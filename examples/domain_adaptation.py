@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.apps.domain_adaptation import (default_hyper,
                                           make_domain_adaptation_problem)
-from repro.core import StragglerConfig, run
+from repro.core import RunSpec, StragglerConfig, run
 
 N, S, TAU = 4, 3, 5
 task = make_domain_adaptation_problem(N, pretrain_domain="svhn",
@@ -26,8 +26,9 @@ def metrics(state):
     return task.test_metrics(v)
 
 
-res = run(task.problem, hyper, scheduler_cfg=sched, n_iterations=30,
-          metrics_fn=metrics, metrics_every=10, mode="scan")
+res = run(RunSpec(problem=task.problem, hyper=hyper, scheduler=sched,
+              n_iterations=30, metrics_fn=metrics, metrics_every=10,
+              engine="scan"))
 h = res.history
 print("iter  sim_time  test_acc  test_loss")
 for i in range(len(h["t"])):

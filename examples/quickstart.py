@@ -5,7 +5,7 @@
 import jax
 import jax.numpy as jnp
 
-from repro.core import Hyper, StragglerConfig, TrilevelProblem, run
+from repro.core import Hyper, RunSpec, StragglerConfig, TrilevelProblem, run
 
 # A 4-worker quadratic trilevel problem (Eq. 2):
 #   level 1: fit x1 to a worker-local linear map of x3
@@ -44,8 +44,8 @@ sched = StragglerConfig(n_workers=N, s_active=3, tau=5, n_stragglers=1,
 # mode="scan" (the default) precomputes the seeded arrival schedule and
 # compiles the whole 100-iteration trajectory into one lax.scan dispatch;
 # mode="eager" recovers the per-iteration host loop.
-result = run(problem, hyper, scheduler_cfg=sched, n_iterations=100,
-             metrics_every=20, mode="scan")
+result = run(RunSpec(problem=problem, hyper=hyper, scheduler=sched,
+                     n_iterations=100, metrics_every=20, engine="scan"))
 
 print("iter  sim_time  ||grad G||^2  cuts(I/II)  max_staleness")
 h = result.history

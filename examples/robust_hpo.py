@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.apps.robust_hpo import default_hyper, make_robust_hpo_problem
-from repro.core import StragglerConfig, run
+from repro.core import RunSpec, StragglerConfig, run
 
 DATASET = "diabetes"   # synthetic stand-in with the UCI shapes
 N, S, TAU = 4, 3, 10
@@ -32,8 +32,9 @@ for algo, s_active in (("AFTO", S), ("SFTO", N)):
                             seed=0)
     # the scanned engine runs the whole trajectory in one compiled
     # dispatch; metrics here are pure JAX so they trace into the scan
-    res = run(task.problem, hyper, scheduler_cfg=sched, n_iterations=100,
-              metrics_fn=metrics, metrics_every=25, mode="scan")
+    res = run(RunSpec(problem=task.problem, hyper=hyper, scheduler=sched,
+                      n_iterations=100, metrics_fn=metrics,
+                      metrics_every=25, engine="scan"))
     h = res.history
     print(f"\n== {algo} ==")
     print("iter  sim_time  clean_mse  noisy_mse")

@@ -122,8 +122,9 @@ def run_adbo(task: RobustHPOTask, n_iterations: int = 200,
             return jnp.mean((pred - d_j["yval"]) ** 2)
         return {"val_mse": jnp.mean(jax.vmap(per)(prob.data, state.X3))}
 
-    res = runner_lib.run(frozen, hyper, scheduler_cfg=cfg,
-                         n_iterations=n_iterations, metrics_fn=metrics)
+    res = runner_lib.run(runner_lib.RunSpec(
+        problem=frozen, hyper=hyper, scheduler=cfg,
+        n_iterations=n_iterations, metrics_fn=metrics))
     # consensus weights = average of worker copies
     w = jax.tree.map(lambda x: jnp.mean(x, 0), res.state.X3)
     return {"w": w, "phi": res.state.z1["phi"], "history": res.history}

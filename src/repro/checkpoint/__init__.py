@@ -1,1 +1,2 @@
-from repro.checkpoint.io import load_checkpoint, save_checkpoint
+from repro.checkpoint.io import (latest_step, load_checkpoint,
+                                 save_checkpoint)

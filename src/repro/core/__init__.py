@@ -2,11 +2,12 @@
 from repro.core.types import (AFTOState, CutSet, FlatCuts, FlatSpec, Hyper,
                               InnerState2, InnerState3, StaleView,
                               TrilevelProblem)
-from repro.core.afto import afto_step, afto_step_aux, cut_refresh, init_state
-from repro.core.engine import (SweepResult, record_slots, run_scanned,
-                               run_swept)
-from repro.core.runner import RunResult, run
-from repro.core.scheduler import (Schedule, StragglerConfig,
+from repro.core.afto import (afto_step, afto_step_aux, afto_step_from_grads,
+                             cut_refresh, init_state, local_f1_grads)
+from repro.core.engine import (SweepResult, record_slots, run_chunked,
+                               run_scanned, run_swept)
+from repro.core.runner import RunResult, RunSpec, run, spec_from_kwargs
+from repro.core.scheduler import (ArrivalRecorder, Schedule, StragglerConfig,
                                   StragglerScheduler)
 from repro.core.stationarity import stationarity_gap_sq
 from repro.core.weakly_convex import estimate_mu, first_order_gap

@@ -88,6 +88,25 @@ def afto_step(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
     return afto_step_aux(problem, hyper, state, active, axis=axis)[0]
 
 
+def local_f1_grads(problem: TrilevelProblem, X1, X2, X3) -> Tuple:
+    """The data-dependent worker gradients of Eq. 16: grad f1(data_j, .)
+    at each worker's local point, stacked over the leading worker axis.
+
+    This is THE federated payload of one master iteration — everything
+    else in `afto_step` (the stale-dual corrections, the master z/dual
+    updates) is cheap cut/consensus algebra the master applies itself.
+    The async runtime (`repro.fed.runtime`) has each worker process
+    compute its own row of this stack at its own pace and push it to
+    the master, which completes the step via `afto_step_from_grads`.
+    """
+    def f1_grads(data_j, x1_j, x2_j, x3_j):
+        return jax.grad(
+            lambda a, b, c: problem.f1(data_j, a, b, c),
+            argnums=(0, 1, 2))(x1_j, x2_j, x3_j)
+
+    return jax.vmap(f1_grads)(problem.data, X1, X2, X3)
+
+
 def afto_step_aux(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
                   active, axis: str = None) -> Tuple[AFTOState, dict]:
     """`afto_step` plus the step's cut-algebra intermediates.
@@ -106,16 +125,26 @@ def afto_step_aux(problem: TrilevelProblem, hyper: Hyper, state: AFTOState,
     theta-sum feeding the master z1 update — every Eq. 16 worker
     contraction stays shard-local.
     """
-    t = state.t
-
     # ---- workers (Eq. 16): gradients of \hat L_p at each worker's stale view
-    def f1_grads(data_j, x1_j, x2_j, x3_j):
-        return jax.grad(
-            lambda a, b, c: problem.f1(data_j, a, b, c),
-            argnums=(0, 1, 2))(x1_j, x2_j, x3_j)
+    g1_f, g2_f, g3_f = local_f1_grads(problem, state.X1, state.X2, state.X3)
+    return afto_step_from_grads(problem, hyper, state, active,
+                                (g1_f, g2_f, g3_f), axis=axis)
 
-    g1_f, g2_f, g3_f = jax.vmap(f1_grads)(
-        problem.data, state.X1, state.X2, state.X3)
+
+def afto_step_from_grads(problem: TrilevelProblem, hyper: Hyper,
+                         state: AFTOState, active, f1_grads,
+                         axis: str = None) -> Tuple[AFTOState, dict]:
+    """The master half of Eq. 16-21 given precomputed worker f1-grads.
+
+    `f1_grads` is the `(g1_f, g2_f, g3_f)` stack triple of
+    `local_f1_grads`; rows of inactive workers are masked out and may
+    hold anything finite (the async master zero-fills them).  With
+    `f1_grads = local_f1_grads(problem, X1, X2, X3)` this is exactly
+    `afto_step_aux` — the split exists so a runtime master can apply
+    worker-pushed gradients stale without recomputing them.
+    """
+    t = state.t
+    g1_f, g2_f, g3_f = f1_grads
 
     # consensus dual term (stale own theta) and cut terms (stale lambda):
     # the per-worker b-block sums are column slices of the canonical

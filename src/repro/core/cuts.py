@@ -45,6 +45,7 @@ places: at cut construction (the new row) and at the `to_tree` /
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -56,6 +57,21 @@ from repro.utils.tree import tree_dot, tree_norm_sq
 
 
 _BLOCK_NAMES = ("a1", "a2", "a3", "b2", "b3")
+
+
+def _warn_cutset(entry: str) -> None:
+    """The tree-of-trees `CutSet` public surface is DEPRECATED.
+
+    `FlatCuts` is the only supported polytope storage; `to_tree` /
+    `from_tree` are the only supported conversions for callers that
+    still need the block-tree view.  The CutSet dispatch branches below
+    emit this warning and will be removed once external callers have
+    migrated (the `eval_cuts_tree` reference implementation stays, as a
+    test oracle, without a warning)."""
+    warnings.warn(
+        f"{entry} on the tree-of-trees CutSet view is deprecated; use "
+        "the canonical FlatCuts storage (convert with cuts.from_tree / "
+        "cuts.to_tree at the boundary)", DeprecationWarning, stacklevel=3)
 
 # Specs are tiny and purely shape-derived, so one cache entry per cut-set
 # layout (i.e. per problem) is enough; keyed structurally so traced and
@@ -124,7 +140,10 @@ def empty_cuts(p_max: int, n_workers: int, z1_tpl, z2_tpl, z3_tpl
 
 def empty_cutset(p_max: int, n_workers: int, z1_tpl, z2_tpl, z3_tpl
                  ) -> CutSet:
-    """Compatibility constructor for the derived block-tree view."""
+    """DEPRECATED compatibility constructor for the block-tree view;
+    build `empty_cuts` (FlatCuts) and use `to_tree` where a tree view is
+    genuinely needed."""
+    _warn_cutset("empty_cutset")
     return to_tree(empty_cuts(p_max, n_workers, z1_tpl, z2_tpl, z3_tpl))
 
 
@@ -168,9 +187,11 @@ def add_cut(cuts, coeffs, c, t):
     coefficient dict is flattened to a (D,) row and
     `lax.dynamic_update_slice`d into the matrix (shape-stable, traced
     slot).  Evicted rows are fully overwritten, so no stale coefficients
-    survive.  A `CutSet` argument takes the legacy per-block tree write
-    (compatibility path for tree-view callers)."""
+    survive.  A `CutSet` argument takes the DEPRECATED per-block tree
+    write (warns; convert with `from_tree` instead)."""
     slot = _next_slot(cuts.active, cuts.age)
+    if not isinstance(cuts, FlatCuts):
+        _warn_cutset("add_cut")
     if isinstance(cuts, FlatCuts):
         row = flatten_coeffs(cuts.spec, coeffs)
         return FlatCuts(
@@ -460,11 +481,12 @@ def eval_cuts(cuts, z1, z2, z3, X2=None, X3=None):
     the inner Lagrangians, which are differentiated to second order at
     cut refresh (see ops.cut_eval); the forward-only hot paths
     (afto_step, the stationarity gap) call `eval_cuts_flat` with the
-    Pallas kernel.  Accepts the block-tree `CutSet` view too (flattening
-    it first — compatibility path, tested against `eval_cuts_tree`)."""
+    Pallas kernel.  A block-tree `CutSet` argument is DEPRECATED (warns,
+    flattens first; convert with `from_tree` at the boundary instead)."""
     if isinstance(cuts, FlatCuts):
         spec, a_flat = cuts.spec, cuts.a
     else:
+        _warn_cutset("eval_cuts")
         spec = flat_spec(cuts)
         a_flat = flatten_cuts(cuts, spec)
     v = flatten_point(spec, z1, z2, z3, X2, X3)
@@ -506,10 +528,12 @@ def cut_weighted_coeff(cuts, weights, block: str):
 
     For b-blocks the result keeps the worker axis (N, ...).  On the
     canonical `FlatCuts` this slices the block's columns out of the
-    matrix; the block-tree path is the reference the flat one is tested
-    against.
+    matrix; the block-tree path is the DEPRECATED reference the flat one
+    is tested against (warns on CutSet input).
     """
     w = weights * cuts.active
+    if not isinstance(cuts, FlatCuts):
+        _warn_cutset("cut_weighted_coeff")
     if isinstance(cuts, FlatCuts):
         spec = cuts.spec
         b_idx = _BLOCK_NAMES.index(block)

@@ -60,7 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +80,10 @@ from repro.data.stream import Stream
 class RunResult:
     state: AFTOState
     history: Dict
+    # the LIVE arrival process recorded by the async runtime
+    # (`repro.fed.runtime`), as a replayable `Schedule`; None for the
+    # scheduled engines, whose arrival order was an input
+    arrivals: Any = None
 
 
 @dataclasses.dataclass
@@ -376,6 +380,71 @@ def _build_scan_sharded(problem: TrilevelProblem, hyper: Hyper,
         check_rep=False)
     donate_argnums = (0, 1) if donate else ()
     return jax.jit(fn, donate_argnums=donate_argnums)
+
+
+def _stitch_histories(parts, offsets, elapsed_offsets) -> Dict:
+    """Concatenate per-chunk histories into one absolute-iteration
+    record: "t" shifts by each chunk's start, host_time accumulates the
+    wall-clock spent before the chunk."""
+    out: Dict = {}
+    for k in parts[0]:
+        segs = []
+        for h, off, el in zip(parts, offsets, elapsed_offsets):
+            v = np.asarray(h[k])
+            if k == "t":
+                v = v + off
+            elif k == "host_time":
+                v = v + el
+            segs.append(v)
+        out[k] = np.concatenate(segs)
+    return out
+
+
+def run_chunked(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
+                chunk_size: int,
+                chunk_hook: Optional[Callable] = None,
+                metrics_fn: Optional[Callable] = None,
+                metrics_every: int = 10,
+                state: Optional[AFTOState] = None,
+                mesh=None, data=None) -> RunResult:
+    """`run_scanned` split into state-continued `chunk_size`-iteration
+    dispatches, with `chunk_hook(state, t_abs)` called on the LIVE carry
+    at every chunk boundary (including the final one).
+
+    The hook sees the post-chunk state and may return a replacement
+    state (or None to keep it) — the push/pull seam the async runtime
+    and the elastic-checkpoint path hang off: push = read the carry out
+    (checkpoint it, ship cut rows to a master), pull = splice refreshed
+    master state back in before the next dispatch.  Chunking is exact
+    for fresh starts by the continuation contract (the refresh predicate
+    and the streamed batches key on the carried absolute `state.t`), so
+    a hook that returns None reproduces the unchunked trajectory
+    bit-for-bit; warm equal-size chunks reuse one compiled trace.
+
+    History records per chunk (every `metrics_every`-th iteration plus
+    each chunk's final one), stitched to absolute iterations.
+    """
+    n_iterations = schedule.n_iterations
+    chunk_size = max(1, int(chunk_size))
+    parts, offsets, elapsed = [], [], []
+    spent = 0.0
+    for a in range(0, n_iterations, chunk_size):
+        b = min(a + chunk_size, n_iterations)
+        res = run_scanned(problem, hyper, schedule.slice(a, b),
+                          metrics_fn=metrics_fn,
+                          metrics_every=metrics_every, state=state,
+                          mesh=mesh, data=data)
+        state = res.state
+        parts.append(res.history)
+        offsets.append(a)
+        elapsed.append(spent)
+        spent += float(res.history["host_time"][-1])
+        if chunk_hook is not None:
+            replacement = chunk_hook(state, b)
+            if replacement is not None:
+                state = replacement
+    return RunResult(state=state,
+                     history=_stitch_histories(parts, offsets, elapsed))
 
 
 def run_scanned(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,

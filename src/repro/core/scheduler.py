@@ -62,6 +62,59 @@ class Schedule:
             .transpose(1, 0, 2))
 
 
+class ArrivalRecorder:
+    """Materializes a LIVE arrival process into a `Schedule`.
+
+    The simulated `StragglerScheduler` below is an open-loop model: it
+    draws arrival times from a seeded latency distribution with no
+    feedback from the optimization.  The async runtime
+    (`repro.fed.runtime`) replaces it with the real thing — worker
+    processes push updates when their actual computation finishes — and
+    records each master iteration here, so the observed process comes
+    back out as a first-class `Schedule`: replayable through
+    `run_scanned` (the runtime's conformance anchor) and inspectable
+    with the same tooling as the simulated schedules.
+    """
+
+    def __init__(self, n_workers: int):
+        self.n_workers = int(n_workers)
+        self._active: List[np.ndarray] = []
+        self._sim_time: List[float] = []
+        self._staleness: List[int] = []
+        self.last_active = np.zeros(self.n_workers, dtype=np.int64)
+
+    @property
+    def t(self) -> int:
+        return len(self._active)
+
+    def record(self, active_mask, sim_time: float) -> int:
+        """Append one master iteration's arrival set; returns the max
+        staleness after the iteration (the paper's tau diagnostic)."""
+        mask = np.asarray(active_mask, np.float32).reshape(self.n_workers)
+        self._active.append(mask)
+        self._sim_time.append(float(sim_time))
+        t = self.t
+        self.last_active[mask > 0] = t
+        stale = int(np.max(t - self.last_active))
+        self._staleness.append(stale)
+        return stale
+
+    def staleness(self) -> np.ndarray:
+        """Per-worker staleness going INTO the next iteration (t+1 -
+        last_active): the quantity the tau-forcing rule bounds."""
+        return (self.t + 1) - self.last_active
+
+    def to_schedule(self) -> Schedule:
+        """The recorded process as a `Schedule` (empty recorders yield
+        zero-length schedules)."""
+        n = self.n_workers
+        return Schedule(
+            active=(np.stack(self._active) if self._active
+                    else np.zeros((0, n), np.float32)),
+            sim_time=np.asarray(self._sim_time, np.float64),
+            max_staleness=np.asarray(self._staleness, np.int64))
+
+
 @dataclasses.dataclass
 class StragglerConfig:
     n_workers: int

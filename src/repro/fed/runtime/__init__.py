@@ -1,0 +1,40 @@
+"""Real asynchronous federation runtime.
+
+The scheduled engines (`repro.core.engine`) SIMULATE asynchrony: a
+seeded straggler model materializes the arrival process up front and a
+single compiled scan applies it.  This package is the real thing — a
+master endpoint owning the canonical `FlatCuts` polytope and the z
+variables, plus `hyper.n_workers` worker endpoints that each compute the
+Eq. 16 gradients at their own pace and push them over a serialized
+message layer.  The master consumes pushes stale under the paper's
+S-of-N / tau bounded-staleness arrival rule, applies the remaining
+master/dual algebra (`repro.core.afto.afto_step_from_grads`), and
+records the LIVE arrival process as a `Schedule`
+(`repro.core.scheduler.ArrivalRecorder`) — the scheduler finally gets
+feedback from optimization timing instead of an open-loop model.
+
+Layering:
+
+  messages.py   serializable wire format (json header + npz leaves,
+                no pickle) — `Message`, push/refresh constructors.
+  transport.py  pluggable byte movers: `InProcTransport` (queue pairs,
+                deterministic tests) and `TcpTransport` (length-prefixed
+                frames over sockets, real multi-process runs).
+  master.py     the arrival rule + master step loop (`Master`).
+  worker.py     the worker compute loop + subprocess CLI entry.
+  problems.py   name -> (problem, hyper) registry so subprocess workers
+                can rebuild the (unpicklable) closure-bearing problem.
+
+Conformance contract: `run_async(..., replay=schedule)` over the
+deterministic in-process transport reproduces the `run_scanned`
+trajectory for that arrival order (up to lowering-level float noise in
+the worker gradients), and the arrival process recorded by a free run
+replays through `run_scanned` the same way.  `tests/test_runtime.py`
+pins both directions.
+"""
+from repro.fed.runtime.master import Master, run_async
+from repro.fed.runtime.messages import Message, decode, encode
+from repro.fed.runtime.transport import InProcTransport, TcpTransport
+
+__all__ = ["Master", "run_async", "Message", "encode", "decode",
+           "InProcTransport", "TcpTransport"]

@@ -1,0 +1,278 @@
+"""The master endpoint: bounded-staleness arrival rule + step loop.
+
+The master owns the canonical state — the `FlatCuts` polytopes, the z
+variables, the duals, and every worker's last-consumed local point.
+Workers own nothing but their data shard and the gradient they are
+currently computing.  One master iteration:
+
+  1. ARRIVE.  Block until the paper's arrival rule is satisfied: at
+     least `hyper.s_active` worker pushes pending AND every tau-forced
+     worker (staleness about to exceed `hyper.tau`) has arrived; then
+     drain anything else already in flight (the scheduler's "extra
+     workers finished by t_done" rule) and consume ALL pending pushes.
+     In replay mode the master instead waits for — and consumes exactly
+     — the workers of `replay.active[t]`, which makes the run
+     deterministic on a deterministic transport.
+  2. STEP.  Zero-fill the inactive gradient rows (exact: the Eq. 16
+     update masks them out bitwise) and apply
+     `afto_step_from_grads` — the stale-dual cut corrections, the
+     masked worker updates, the master Gauss-Seidel z updates, and the
+     dual ascent, all at the master's consumption-time polytope.
+  3. REFRESH.  Every `t_pre` iterations (t < t1) generate the mu-cuts
+     (`cut_refresh`) — master-side, exactly as in the scanned engine.
+  4. REPLY.  Send each consumed worker its refreshed local point
+     (x1_j, x2_j, x3_j).  Worker rows change only at the worker's own
+     consumption, so each worker's local copy stays exactly in sync
+     with the master's row between its activations — the property that
+     makes the push-gradients / pull-rows decomposition reproduce the
+     single-process trajectory.
+
+The live arrival process is recorded per iteration
+(`ArrivalRecorder`) and returned as `RunResult.arrivals` — a
+`Schedule` replayable through `run_scanned` or through this master.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import afto as afto_lib
+from repro.core import stationarity as stat_lib
+from repro.core.engine import RunResult
+from repro.core.scheduler import ArrivalRecorder, Schedule
+from repro.core.types import AFTOState, Hyper, TrilevelProblem
+from repro.data.stream import Stream
+from repro.fed.runtime import messages as msg_lib
+from repro.fed.runtime import transport as transport_lib
+
+
+def _row(tree, j: int):
+    return jax.tree.map(lambda x: x[j], tree)
+
+
+def _zero_stack(template_stack):
+    return jax.tree.map(lambda x: np.zeros(x.shape, x.dtype),
+                        template_stack)
+
+
+def _set_row(stack, j: int, row_tree) -> None:
+    for dst, src in zip(jax.tree.leaves(stack), jax.tree.leaves(row_tree)):
+        dst[j] = np.asarray(src)
+
+
+class Master:
+    """Runs the async master loop over any `MasterEndpoint`."""
+
+    def __init__(self, problem: TrilevelProblem, hyper: Hyper,
+                 endpoint: transport_lib.MasterEndpoint,
+                 n_iterations: int,
+                 metrics_fn: Optional[Callable] = None,
+                 metrics_every: int = 10,
+                 state: Optional[AFTOState] = None,
+                 replay: Optional[Schedule] = None):
+        if replay is not None and replay.n_workers != hyper.n_workers:
+            raise ValueError(
+                f"replay schedule has {replay.n_workers} workers; hyper "
+                f"has {hyper.n_workers}")
+        self.problem, self.hyper = problem, hyper
+        self.endpoint = endpoint
+        self.n_iterations = (replay.n_iterations if replay is not None
+                             else n_iterations)
+        self.metrics_fn, self.metrics_every = metrics_fn, metrics_every
+        self.state = state if state is not None else afto_lib.init_state(
+            problem, hyper)
+        self.replay = replay
+        self.recorder = ArrivalRecorder(hyper.n_workers)
+        self.pending: Dict[int, tuple] = {}   # worker -> grads triple
+        self.status: Dict = {"t": 0, "n_iterations": self.n_iterations,
+                             "gap_sq": None, "max_staleness": 0,
+                             "pending": 0, "done": False}
+        self._step = jax.jit(
+            lambda s, m, g: afto_lib.afto_step_from_grads(
+                problem, hyper, s, m, g)[0])
+        self._cut_refresh = jax.jit(
+            lambda s: afto_lib.cut_refresh(problem, hyper, s))
+        self._gap = jax.jit(
+            lambda s: stat_lib.stationarity_gap_sq(problem, hyper, s))
+        self._row_templates = (problem.x1_init, problem.x2_init,
+                               problem.x3_init)
+
+    # -- message plumbing ---------------------------------------------------
+
+    def _consume_frame(self, frame: Optional[bytes]) -> None:
+        if frame is None:
+            return
+        m = msg_lib.decode(frame)
+        if m.kind == msg_lib.HELLO:
+            return   # handshakes are transport-level; ignore here
+        if m.kind != msg_lib.PUSH:
+            raise ValueError(f"master got unexpected {m.kind!r} message")
+        j = int(m.meta["worker"])
+        self.pending[j] = msg_lib.push_grads(m, self._row_templates)
+
+    def _send_rows(self, j: int, t_master: int) -> None:
+        rows = (_row(self.state.X1, j), _row(self.state.X2, j),
+                _row(self.state.X3, j))
+        self.endpoint.send(j, msg_lib.encode(
+            msg_lib.refresh(j, t_master, rows)))
+
+    # -- the arrival rule ---------------------------------------------------
+
+    def _wait_arrivals(self, it: int) -> np.ndarray:
+        """Block until this iteration's arrival set is pending; return
+        the sorted worker ids to consume."""
+        if self.replay is not None:
+            target = np.nonzero(self.replay.active[it] > 0)[0]
+            while not all(j in self.pending for j in target):
+                self._consume_frame(self.endpoint.recv())
+            return target
+        forced_rule, s_active = self.hyper.tau, self.hyper.s_active
+        while True:
+            forced = np.nonzero(
+                self.recorder.staleness() >= forced_rule)[0]
+            if (len(self.pending) >= s_active
+                    and all(j in self.pending for j in forced)):
+                break
+            self._consume_frame(self.endpoint.recv())
+        # the scheduler's "extra" rule: anything already in flight when
+        # the master proceeds counts as arrived this iteration
+        while True:
+            frame = self.endpoint.recv(timeout=0.0)
+            if frame is None:
+                break
+            self._consume_frame(frame)
+        return np.array(sorted(self.pending), dtype=np.int64)
+
+    # -- the loop -----------------------------------------------------------
+
+    def run(self) -> RunResult:
+        problem, hyper = self.problem, self.hyper
+        n = hyper.n_workers
+        hist: Dict[str, List[float]] = {
+            "t": [], "sim_time": [], "host_time": [], "gap_sq": [],
+            "n_cuts_i": [], "n_cuts_ii": [], "max_staleness": []}
+        t0_abs = int(self.state.t)
+        t_start = time.perf_counter()
+
+        # every worker starts from the master's initial rows
+        for j in range(n):
+            self._send_rows(j, t0_abs)
+
+        for it in range(self.n_iterations):
+            active_ids = self._wait_arrivals(it)
+            mask = np.zeros((n,), np.float32)
+            mask[active_ids] = 1.0
+
+            # zero-filled inactive rows are exact: Eq. 16 multiplies
+            # every gradient row by the arrival mask before applying it
+            grads = tuple(_zero_stack(s) for s in
+                          (self.state.X1, self.state.X2, self.state.X3))
+            for j in active_ids:
+                g1, g2, g3 = self.pending.pop(int(j))
+                _set_row(grads[0], int(j), g1)
+                _set_row(grads[1], int(j), g2)
+                _set_row(grads[2], int(j), g3)
+
+            self.state = self._step(self.state, jnp.asarray(mask), grads)
+            elapsed = time.perf_counter() - t_start
+            sim_t = (float(self.replay.sim_time[it])
+                     if self.replay is not None else elapsed)
+            stale = self.recorder.record(mask, sim_t)
+
+            t_post = t0_abs + it + 1
+            if t_post % hyper.t_pre == 0 and t_post - 1 < hyper.t1:
+                self.state = self._cut_refresh(self.state)
+
+            for j in active_ids:
+                self._send_rows(int(j), t_post)
+
+            self.status.update(t=it + 1, max_staleness=stale,
+                               pending=len(self.pending))
+            if (it + 1) % self.metrics_every == 0 \
+                    or it == self.n_iterations - 1:
+                gap = float(self._gap(self.state))
+                hist["t"].append(it + 1)
+                hist["sim_time"].append(sim_t)
+                hist["host_time"].append(time.perf_counter() - t_start)
+                hist["gap_sq"].append(gap)
+                hist["n_cuts_i"].append(
+                    float(jnp.sum(self.state.cuts_i.active)))
+                hist["n_cuts_ii"].append(
+                    float(jnp.sum(self.state.cuts_ii.active)))
+                hist["max_staleness"].append(float(stale))
+                if self.metrics_fn is not None:
+                    for k, v in self.metrics_fn(self.state).items():
+                        hist.setdefault(k, []).append(float(v))
+                self.status.update(gap_sq=gap)
+
+        for j in range(n):
+            self.endpoint.send(j, msg_lib.encode(msg_lib.stop()))
+        self.status.update(done=True)
+        return RunResult(state=self.state, history=hist,
+                         arrivals=self.recorder.to_schedule())
+
+
+def run_async(problem: TrilevelProblem, hyper: Hyper,
+              n_iterations: int = 200,
+              metrics_fn: Optional[Callable] = None,
+              metrics_every: int = 10,
+              state: Optional[AFTOState] = None,
+              replay: Optional[Schedule] = None,
+              transport=None, data=None,
+              master_hook: Optional[Callable] = None) -> RunResult:
+    """Run the async runtime end to end and return a `RunResult` (with
+    `.arrivals` carrying the recorded live Schedule).
+
+    transport=None (default) builds an `InProcTransport` and spawns one
+    thread per worker — the deterministic single-process configuration.
+    Passing a `TcpTransport` runs the master over sockets; the worker
+    processes must be launched separately (`launch/serve.py fed` does
+    both ends).  `master_hook(master)` runs after construction, before
+    the loop — the status-server attach point.
+    """
+    import threading
+
+    from repro.fed.runtime import worker as worker_lib
+
+    if isinstance(data, Stream):
+        raise NotImplementedError(
+            "the async runtime consumes static problem.data; streamed "
+            "batch synthesis folds on consumption-time state.t, which a "
+            "self-paced worker cannot know ahead of its push")
+    if data is not None:
+        problem = dataclasses.replace(
+            problem, data=jax.tree.map(jnp.asarray, data))
+
+    threads: List = []
+    if transport is None:
+        transport = transport_lib.InProcTransport(hyper.n_workers)
+    if isinstance(transport, transport_lib.InProcTransport):
+        for j in range(hyper.n_workers):
+            t = threading.Thread(
+                target=worker_lib.worker_loop,
+                args=(problem, j, transport.worker_endpoint(j)),
+                daemon=True)
+            t.start()
+            threads.append(t)
+        endpoint = transport.master_endpoint()
+    else:
+        endpoint = transport.master_endpoint()
+        endpoint.wait_for_workers()
+
+    master = Master(problem, hyper, endpoint, n_iterations,
+                    metrics_fn=metrics_fn, metrics_every=metrics_every,
+                    state=state, replay=replay)
+    if master_hook is not None:
+        master_hook(master)
+    try:
+        result = master.run()
+    finally:
+        endpoint.close()
+    for t in threads:
+        t.join(timeout=30.0)
+    return result

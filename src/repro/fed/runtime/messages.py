@@ -1,0 +1,134 @@
+"""Serializable message layer: json header + npz array payload.
+
+Every runtime message crosses the wire as one byte string:
+
+    [4-byte big-endian header length][json header][npz of the arrays]
+
+The header carries the message kind and json-safe scalars (worker id,
+iteration counts, flags); pytree payloads travel as their flattened
+leaves under positional keys ("g1/0", "g1/1", ...).  Treedefs are NEVER
+transmitted — both endpoints rebuild the same problem (in-process by
+sharing it, across processes via `problems.py`'s registry) and unflatten
+against their local templates.  No pickle anywhere, so a worker process
+can't smuggle arbitrary objects into the master.
+
+The same bytes flow over every transport — the in-process queue
+transport carries encoded frames too, so unit tests exercise the real
+wire format, not a shortcut.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import struct
+from typing import Dict, Sequence, Tuple
+
+import jax
+import numpy as np
+
+HELLO, PUSH, REFRESH, STOP = "hello", "push", "refresh", "stop"
+
+
+@dataclasses.dataclass
+class Message:
+    """One wire message: a kind tag, json-safe `meta` scalars, and named
+    array leaves."""
+    kind: str
+    meta: Dict
+    arrays: Dict[str, np.ndarray]
+
+
+def encode(msg: Message) -> bytes:
+    """`Message` -> one self-delimiting byte frame."""
+    buf = io.BytesIO()
+    np.savez(buf, **{k: np.asarray(v) for k, v in msg.arrays.items()})
+    header = json.dumps({"kind": msg.kind, "meta": msg.meta}).encode()
+    return struct.pack(">I", len(header)) + header + buf.getvalue()
+
+
+def decode(data: bytes) -> Message:
+    """Byte frame -> `Message` (arrays rejected if they'd need pickle)."""
+    (hlen,) = struct.unpack(">I", data[:4])
+    header = json.loads(data[4:4 + hlen].decode())
+    arrays: Dict[str, np.ndarray] = {}
+    payload = data[4 + hlen:]
+    if payload:
+        with np.load(io.BytesIO(payload), allow_pickle=False) as npz:
+            arrays = {k: npz[k] for k in npz.files}
+    return Message(kind=header["kind"], meta=header["meta"], arrays=arrays)
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> named-leaf helpers
+# ---------------------------------------------------------------------------
+
+def pack_trees(groups: Dict[str, object]) -> Dict[str, np.ndarray]:
+    """Flatten each named pytree into positional leaf keys."""
+    out: Dict[str, np.ndarray] = {}
+    for name, tree in groups.items():
+        for i, leaf in enumerate(jax.tree.leaves(tree)):
+            out[f"{name}/{i}"] = np.asarray(leaf)
+    return out
+
+
+def unpack_tree(msg: Message, name: str, template):
+    """Rebuild pytree `name` from a message against a local template
+    (leaf count must match — a wire/format mismatch fails loudly)."""
+    treedef = jax.tree.structure(template)
+    leaves = []
+    i = 0
+    while f"{name}/{i}" in msg.arrays:
+        leaves.append(msg.arrays[f"{name}/{i}"])
+        i += 1
+    if i != treedef.num_leaves:
+        raise ValueError(
+            f"message group {name!r} has {i} leaves; local template "
+            f"expects {treedef.num_leaves}")
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# message constructors (the whole protocol surface)
+# ---------------------------------------------------------------------------
+
+def hello(worker: int) -> Message:
+    """Worker -> master handshake (TCP connection registration)."""
+    return Message(HELLO, {"worker": int(worker)}, {})
+
+
+def push(worker: int, n_pushes: int, grads: Sequence) -> Message:
+    """Worker -> master: the Eq. 16 gradient triple (g1_j, g2_j, g3_j)
+    at the worker's current local point.  `n_pushes` counts this
+    worker's pushes (master-side sanity / debugging)."""
+    g1, g2, g3 = grads
+    return Message(PUSH, {"worker": int(worker), "n_pushes": int(n_pushes)},
+                   pack_trees({"g1": g1, "g2": g2, "g3": g3}))
+
+
+def push_grads(msg: Message, templates: Tuple) -> Tuple:
+    """Decode a PUSH payload against (x1, x2, x3) worker-row templates."""
+    t1, t2, t3 = templates
+    return (unpack_tree(msg, "g1", t1), unpack_tree(msg, "g2", t2),
+            unpack_tree(msg, "g3", t3))
+
+
+def refresh(worker: int, t_master: int, rows: Sequence) -> Message:
+    """Master -> worker: the worker's refreshed local point
+    (x1_j, x2_j, x3_j) after its push was consumed at master iteration
+    `t_master` (and the new local rows it must differentiate at next)."""
+    x1, x2, x3 = rows
+    return Message(REFRESH, {"worker": int(worker), "t": int(t_master)},
+                   pack_trees({"x1": x1, "x2": x2, "x3": x3}))
+
+
+def refresh_rows(msg: Message, templates: Tuple) -> Tuple:
+    """Decode a REFRESH payload against (x1, x2, x3) row templates."""
+    t1, t2, t3 = templates
+    return (unpack_tree(msg, "x1", t1), unpack_tree(msg, "x2", t2),
+            unpack_tree(msg, "x3", t3))
+
+
+def stop() -> Message:
+    """Master -> worker: run complete, exit the compute loop."""
+    return Message(STOP, {}, {})

@@ -1,0 +1,66 @@
+"""Problem registry for multi-process workers.
+
+`TrilevelProblem` carries objective *closures*, which don't cross
+process boundaries; subprocess workers and the serve front end instead
+agree on a registry NAME (plus a few integer knobs) and rebuild the
+identical problem on each side — same seeded data, same objectives, so
+a worker's gradients land in exactly the rows the master expects.
+
+Register new problems with `@register("name")`; a builder returns
+`(problem, hyper)` for a given (n_workers, dim, seed).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Hyper, TrilevelProblem
+
+REGISTRY: Dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def build(name: str, n_workers: int = 4, dim: int = 3,
+          seed: int = 0) -> Tuple[TrilevelProblem, Hyper]:
+    """Rebuild registry problem `name` deterministically from its knobs."""
+    if name not in REGISTRY:
+        raise KeyError(
+            f"unknown problem {name!r}; registered: {sorted(REGISTRY)}")
+    return REGISTRY[name](n_workers=n_workers, dim=dim, seed=seed)
+
+
+@register("quadratic")
+def quadratic(n_workers: int = 4, dim: int = 3,
+              seed: int = 0) -> Tuple[TrilevelProblem, Hyper]:
+    """The tiny seeded quadratic trilevel problem used across the test
+    suite and the quickstart — the canonical smoke problem."""
+    key = jax.random.PRNGKey(seed)
+    data = {"A": jax.random.normal(key, (n_workers, dim, dim)) * 0.3,
+            "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                   (n_workers, dim))}
+
+    def f1(d, x1, x2, x3):
+        return jnp.sum((x1 - d["A"] @ x3 - d["b"]) ** 2)
+
+    def f2(d, x1, x2, x3):
+        return jnp.sum((x2 + x3) ** 2) + 0.1 * jnp.sum(x2 ** 2)
+
+    def f3(d, x1, x2, x3):
+        return jnp.sum((x3 - x1) ** 2) + 0.1 * jnp.sum((x3 - x2) ** 2)
+
+    problem = TrilevelProblem(
+        f1=f1, f2=f2, f3=f3, data=data, n_workers=n_workers,
+        x1_init=jnp.zeros(dim), x2_init=jnp.zeros(dim),
+        x3_init=jnp.zeros(dim))
+    hyper = Hyper(n_workers=n_workers, s_active=max(1, n_workers - 1),
+                  tau=5, k_inner=3, p_max=6, t_pre=5, t1=100,
+                  eta_x=0.05, eta_z=0.05, d1=dim)
+    return problem, hyper

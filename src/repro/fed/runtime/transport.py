@@ -1,0 +1,221 @@
+"""Pluggable byte transports for the async runtime.
+
+A transport moves opaque encoded frames (`messages.encode` bytes)
+between one master endpoint and N worker endpoints; the master/worker
+loops never see sockets or queues, only this interface:
+
+  master endpoint:  recv(timeout) -> bytes | None,  send(j, bytes)
+  worker endpoint:  recv() -> bytes,                send(bytes)
+
+`InProcTransport` pairs the endpoints over `queue.Queue`s — fully
+deterministic when the master replays a fixed arrival order, which is
+what the conformance tests run on.  `TcpTransport` carries the same
+frames over sockets with a 4-byte length prefix and a HELLO handshake
+that maps connections to worker ids — the real multi-process path
+(`launch/serve.py fed --transport tcp`).
+"""
+from __future__ import annotations
+
+import queue
+import socket
+import struct
+import threading
+from typing import Dict, List, Optional
+
+from repro.fed.runtime import messages as msg_lib
+
+
+class MasterEndpoint:
+    """Master side of any transport: one inbound frame queue (workers
+    are multiplexed) + per-worker outbound sends."""
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[bytes]:
+        raise NotImplementedError
+
+    def send(self, worker: int, frame: bytes) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class WorkerEndpoint:
+    """Worker side: blocking recv from the master + send to it."""
+
+    def recv(self) -> bytes:
+        raise NotImplementedError
+
+    def send(self, frame: bytes) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# in-process transport (threads + queues)
+# ---------------------------------------------------------------------------
+
+class _InProcMaster(MasterEndpoint):
+    def __init__(self, hub: "InProcTransport"):
+        self._hub = hub
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[bytes]:
+        try:
+            return self._hub.to_master.get(timeout=timeout) \
+                if timeout is not None else self._hub.to_master.get()
+        except queue.Empty:
+            return None
+
+    def send(self, worker: int, frame: bytes) -> None:
+        self._hub.to_worker[worker].put(frame)
+
+
+class _InProcWorker(WorkerEndpoint):
+    def __init__(self, hub: "InProcTransport", worker: int):
+        self._hub, self._worker = hub, worker
+
+    def recv(self) -> bytes:
+        return self._hub.to_worker[self._worker].get()
+
+    def send(self, frame: bytes) -> None:
+        self._hub.to_master.put(frame)
+
+
+class InProcTransport:
+    """Queue-pair transport for same-process (threaded) runs.
+
+    Frames still round-trip through `messages.encode`/`decode`, so every
+    test on this transport exercises the real wire format."""
+
+    def __init__(self, n_workers: int):
+        self.n_workers = int(n_workers)
+        self.to_master: "queue.Queue[bytes]" = queue.Queue()
+        self.to_worker: List["queue.Queue[bytes]"] = [
+            queue.Queue() for _ in range(self.n_workers)]
+
+    def master_endpoint(self) -> MasterEndpoint:
+        return _InProcMaster(self)
+
+    def worker_endpoint(self, worker: int) -> WorkerEndpoint:
+        return _InProcWorker(self, worker)
+
+
+# ---------------------------------------------------------------------------
+# TCP transport (length-prefixed frames)
+# ---------------------------------------------------------------------------
+
+def _send_frame(sock: socket.socket, frame: bytes) -> None:
+    sock.sendall(struct.pack(">I", len(frame)) + frame)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed mid-frame")
+        buf += chunk
+    return buf
+
+
+def _recv_frame(sock: socket.socket) -> bytes:
+    (n,) = struct.unpack(">I", _recv_exact(sock, 4))
+    return _recv_exact(sock, n)
+
+
+class _TcpMaster(MasterEndpoint):
+    """Accepts `n_workers` connections, resolves each to a worker id via
+    its HELLO frame, then multiplexes per-connection reader threads into
+    one inbound queue."""
+
+    def __init__(self, host: str, port: int, n_workers: int):
+        self.n_workers = n_workers
+        self._server = socket.create_server((host, port))
+        self.port = self._server.getsockname()[1]
+        self._socks: Dict[int, socket.socket] = {}
+        self._inbound: "queue.Queue[bytes]" = queue.Queue()
+        self._threads: List[threading.Thread] = []
+
+    def wait_for_workers(self) -> None:
+        while len(self._socks) < self.n_workers:
+            conn, _ = self._server.accept()
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            m = msg_lib.decode(_recv_frame(conn))
+            if m.kind != msg_lib.HELLO:
+                raise ConnectionError(
+                    f"expected hello handshake, got {m.kind!r}")
+            j = int(m.meta["worker"])
+            self._socks[j] = conn
+            t = threading.Thread(target=self._reader, args=(conn,),
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _reader(self, conn: socket.socket) -> None:
+        try:
+            while True:
+                self._inbound.put(_recv_frame(conn))
+        except (ConnectionError, OSError):
+            return   # worker hung up (normal after STOP)
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[bytes]:
+        try:
+            return self._inbound.get(timeout=timeout) \
+                if timeout is not None else self._inbound.get()
+        except queue.Empty:
+            return None
+
+    def send(self, worker: int, frame: bytes) -> None:
+        _send_frame(self._socks[worker], frame)
+
+    def close(self) -> None:
+        for s in self._socks.values():
+            try:
+                s.close()
+            except OSError:
+                pass
+        self._server.close()
+
+
+class _TcpWorker(WorkerEndpoint):
+    def __init__(self, host: str, port: int, worker: int):
+        self._sock = socket.create_connection((host, port))
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        _send_frame(self._sock, msg_lib.encode(msg_lib.hello(worker)))
+
+    def recv(self) -> bytes:
+        return _recv_frame(self._sock)
+
+    def send(self, frame: bytes) -> None:
+        _send_frame(self._sock, frame)
+
+    def close(self) -> None:
+        self._sock.close()
+
+
+class TcpTransport:
+    """Socket transport for real multi-process runs.
+
+    Master side: ``TcpTransport(n_workers).master_endpoint()`` binds an
+    ephemeral port (read it back from ``.port``) and blocks in
+    `wait_for_workers` until all workers have completed the HELLO
+    handshake.  Worker side (separate process):
+    ``TcpTransport.connect(host, port, worker)``.
+    """
+
+    def __init__(self, n_workers: int, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.n_workers = int(n_workers)
+        self.host, self.port = host, port
+        self._master: Optional[_TcpMaster] = None
+
+    def master_endpoint(self) -> _TcpMaster:
+        if self._master is None:
+            self._master = _TcpMaster(self.host, self.port, self.n_workers)
+            self.port = self._master.port
+        return self._master
+
+    @staticmethod
+    def connect(host: str, port: int, worker: int) -> WorkerEndpoint:
+        return _TcpWorker(host, port, worker)

@@ -1,0 +1,86 @@
+"""The worker endpoint: Eq. 16 gradient compute loop + subprocess CLI.
+
+A worker owns exactly its data shard.  Its loop is the dual of the
+master's reply protocol: receive the refreshed local point
+(x1_j, x2_j, x3_j), differentiate the local objective f1 there, push the
+gradient triple, repeat until STOP.  The worker's point only changes
+when the master consumes one of its pushes, so between activations the
+local copy is bitwise the master's row — the worker never recomputes a
+gradient the master won't use, and every gradient it pushes is evaluated
+exactly where the scanned reference would evaluate it.
+
+`main()` is the multi-process entry (`python -m repro.fed.runtime.worker
+--problem quadratic --worker 0 --port P`): problem closures aren't
+picklable, so subprocess workers rebuild the problem by name from
+`problems.py` and connect over TCP.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import TrilevelProblem
+from repro.fed.runtime import messages as msg_lib
+from repro.fed.runtime import transport as transport_lib
+
+
+def worker_loop(problem: TrilevelProblem, worker: int,
+                endpoint: transport_lib.WorkerEndpoint,
+                max_pushes: Optional[int] = None) -> int:
+    """Run worker `worker`'s compute loop until STOP (or `max_pushes`);
+    returns the number of gradients pushed."""
+    data_j = jax.tree.map(lambda d: jnp.asarray(d)[worker], problem.data)
+    templates = (problem.x1_init, problem.x2_init, problem.x3_init)
+
+    @jax.jit
+    def grad_fn(x1, x2, x3):
+        return jax.grad(
+            lambda a, b, c: problem.f1(data_j, a, b, c),
+            argnums=(0, 1, 2))(x1, x2, x3)
+
+    n_pushes = 0
+    while max_pushes is None or n_pushes < max_pushes:
+        m = msg_lib.decode(endpoint.recv())
+        if m.kind == msg_lib.STOP:
+            break
+        if m.kind != msg_lib.REFRESH:
+            raise ValueError(f"worker got unexpected {m.kind!r} message")
+        x1, x2, x3 = (jax.tree.map(jnp.asarray, r) for r in
+                      msg_lib.refresh_rows(m, templates))
+        grads = grad_fn(x1, x2, x3)
+        n_pushes += 1
+        endpoint.send(msg_lib.encode(
+            msg_lib.push(worker, n_pushes, grads)))
+    endpoint.close()
+    return n_pushes
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """Subprocess worker entry (TCP transport only)."""
+    from repro.fed.runtime import problems as problems_lib
+
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--problem", default="quadratic",
+                   help="problem registry name (problems.py)")
+    p.add_argument("--worker", type=int, required=True)
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, required=True)
+    p.add_argument("--n-workers", type=int, default=2)
+    p.add_argument("--dim", type=int, default=3)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    problem, _ = problems_lib.build(
+        args.problem, n_workers=args.n_workers, dim=args.dim,
+        seed=args.seed)
+    endpoint = transport_lib.TcpTransport.connect(
+        args.host, args.port, args.worker)
+    worker_loop(problem, args.worker, endpoint)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,12 +1,33 @@
-"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+"""Serving front end: batched decode + the async federation runtime.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
-      --batch 4 --prompt-len 64 --gen 32
+Two subcommands:
+
+  decode   the batched LLM serving driver (prefill + N decode steps):
+      PYTHONPATH=src python -m repro.launch.serve decode \
+          --arch llama3-8b --reduced --batch 4 --prompt-len 64 --gen 32
+      (a bare flag invocation without a subcommand still routes here —
+      the historical CLI surface.)
+
+  fed      launch an async federation run — one master plus N workers
+           over the in-process transport (threads) or TCP (real worker
+           subprocesses) — streaming per-record status lines and an
+           optional HTTP status endpoint:
+      PYTHONPATH=src python -m repro.launch.serve fed \
+          --problem quadratic --workers 2 --iters 60 --transport tcp
+      GET /status on --status-port (0 picks an ephemeral port) returns
+      the master's live counters as JSON.  Exits nonzero unless the
+      stationarity gap decreased over the run — the end-to-end
+      convergence gate the CI smoke step drives.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +37,10 @@ from repro.configs import get_config, reduced as reduce_cfg
 from repro.data.synthetic import make_token_stream
 from repro.models import transformer as tfm
 
+
+# ---------------------------------------------------------------------------
+# decode: the batched serving driver
+# ---------------------------------------------------------------------------
 
 def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0,
           greedy: bool = True):
@@ -53,15 +78,15 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0,
             "generated": np.asarray(gen_ids)}
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def main_decode(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="serve decode")
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -72,7 +97,146 @@ def main():
     print(f"prefill {res['prefill_s']:.2f}s, decode {res['decode_s']:.2f}s"
           f" ({res['tok_per_s']:.1f} tok/s)")
     print("first generations:", res["generated"][:2, :16].tolist())
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# fed: master + N workers over a live transport
+# ---------------------------------------------------------------------------
+
+def start_status_server(master, port: int):
+    """Serve `master.status` as JSON on GET /status (daemon thread);
+    returns the HTTPServer (read the bound port off `.server_address`)."""
+    import http.server
+    import threading
+
+    class Handler(http.server.BaseHTTPRequestHandler):
+        def do_GET(self):
+            if self.path.rstrip("/") not in ("", "/status"):
+                self.send_error(404)
+                return
+            body = json.dumps(master.status).encode()
+            self.send_response(200)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):   # stay quiet on the run's stdout
+            pass
+
+    srv = http.server.ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    return srv
+
+
+def spawn_tcp_workers(args, port: int):
+    """One `repro.fed.runtime.worker` subprocess per worker id, pointed
+    at the master's bound port (each rebuilds the problem by name)."""
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    return [subprocess.Popen(
+        [sys.executable, "-m", "repro.fed.runtime.worker",
+         "--problem", args.problem, "--worker", str(j),
+         "--port", str(port), "--n-workers", str(args.workers),
+         "--dim", str(args.dim), "--seed", str(args.seed)],
+        env=env) for j in range(args.workers)]
+
+
+def run_fed(args):
+    """Launch the run described by parsed `fed` args; returns
+    (RunResult, status_server | None)."""
+    from repro.fed.runtime import problems as problems_lib
+    from repro.fed.runtime import run_async
+    from repro.fed.runtime.transport import TcpTransport
+
+    problem, hyper = problems_lib.build(
+        args.problem, n_workers=args.workers, dim=args.dim,
+        seed=args.seed)
+
+    transport, procs = None, []
+    if args.transport == "tcp":
+        transport = TcpTransport(args.workers, port=args.port)
+        transport.master_endpoint()          # bind before spawning
+        print(f"master listening on 127.0.0.1:{transport.port}")
+        procs = spawn_tcp_workers(args, transport.port)
+
+    status_server = None
+
+    def hook(master):
+        nonlocal status_server
+        if args.status_port >= 0:
+            status_server = start_status_server(master, args.status_port)
+            print(f"status endpoint: http://127.0.0.1:"
+                  f"{status_server.server_address[1]}/status")
+
+    try:
+        result = run_async(
+            problem, hyper, n_iterations=args.iters,
+            metrics_every=args.metrics_every, transport=transport,
+            master_hook=hook)
+    finally:
+        for p in procs:
+            p.wait(timeout=60)
+    return result, status_server
+
+
+def main_fed(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="serve fed")
+    ap.add_argument("--problem", default="quadratic")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--dim", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--iters", type=int, default=60)
+    ap.add_argument("--metrics-every", type=int, default=10)
+    ap.add_argument("--transport", choices=("inproc", "tcp"),
+                    default="inproc")
+    ap.add_argument("--port", type=int, default=0,
+                    help="TCP master port (0 = ephemeral)")
+    ap.add_argument("--status-port", type=int, default=-1,
+                    help="HTTP status port (0 = ephemeral, -1 = off)")
+    args = ap.parse_args(argv)
+
+    result, status_server = run_fed(args)
+    for i, t in enumerate(result.history["t"]):
+        print(json.dumps({
+            "t": int(t),
+            "gap_sq": result.history["gap_sq"][i],
+            "n_cuts_ii": result.history["n_cuts_ii"][i],
+            "max_staleness": result.history["max_staleness"][i]}))
+    if status_server is not None:
+        status_server.shutdown()
+
+    gaps = result.history["gap_sq"]
+    decreasing = gaps[-1] < gaps[0]
+    max_stale = int(result.arrivals.max_staleness.max())
+    stale_ok = max_stale <= _problem_tau(args)
+    print(f"gap {gaps[0]:.4f} -> {gaps[-1]:.4f} "
+          f"({'decreasing' if decreasing else 'NOT decreasing'}); "
+          f"max recorded staleness {max_stale} "
+          f"(tau bound {'ok' if stale_ok else 'VIOLATED'})")
+    return 0 if (decreasing and stale_ok) else 1
+
+
+def _problem_tau(args) -> int:
+    from repro.fed.runtime import problems as problems_lib
+    _, hyper = problems_lib.build(args.problem, n_workers=args.workers,
+                                  dim=args.dim, seed=args.seed)
+    return hyper.tau
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # historical CLI surface: a bare flag invocation is `decode`
+    if not argv or argv[0] not in ("decode", "fed"):
+        argv = ["decode"] + argv
+    if argv[0] == "decode":
+        return main_decode(argv[1:])
+    return main_fed(argv[1:])
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

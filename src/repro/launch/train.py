@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.core.scheduler import StragglerConfig, StragglerScheduler
 from repro.data import stream as stream_lib
@@ -132,6 +132,9 @@ def run_afto_scan(cfg, args, hyper, state, sched, val_loss) -> dict:
     # init_fed_state may alias buffers across fields; donation needs
     # each buffer to appear once.
     state = jax.tree.map(jnp.array, state)
+    if getattr(args, "resume", False) and args.mesh_workers:
+        raise ValueError("--resume with --mesh-workers is not supported "
+                         "yet (restore precedes mesh placement)")
     put_batch = state_shardings = None
     if args.mesh_workers:
         mesh, state, put_batch, state_shardings = _worker_mesh_put(
@@ -178,31 +181,63 @@ def run_afto_scan(cfg, args, hyper, state, sched, val_loss) -> dict:
         w = jax.tree.map(lambda x: x[0], st.X3)
         return val_loss(w, jnp.asarray(last_toks[-1][0]))
 
-    return _chunk_loop(args, schedule, chunk, state, one_chunk, loss_at)
+    carry, start0 = _maybe_resume(args, {"state": state})
+    return _chunk_loop(args, schedule, chunk, carry["state"], one_chunk,
+                       loss_at, carry_to_save=lambda st: {"state": st},
+                       start=start0)
 
 
-def _chunk_loop(args, schedule, chunk, state, one_chunk, loss_at) -> dict:
+def _maybe_resume(args, template):
+    """(carry, start_step): restore the latest full-carry checkpoint from
+    `--ckpt-dir` when `--resume` is set, else the template untouched.
+
+    The restored carry is exactly what `_chunk_loop` saved at a chunk
+    boundary — for the streamed path (state, key, cursor), i.e. the
+    whole donated scan carry — so continuing from it is bit-identical to
+    the uninterrupted run by the chunking-invariance contract (schedule
+    masks and stream batches key on the absolute iteration)."""
+    if not (getattr(args, "resume", False) and args.ckpt_dir):
+        return template, 0
+    step = latest_step(args.ckpt_dir)
+    if step is None:
+        return template, 0
+    carry = load_checkpoint(args.ckpt_dir, template, step)
+    carry = jax.tree.map(
+        lambda t, v: jnp.asarray(v, getattr(t, "dtype", None)),
+        template, carry)
+    print(json.dumps({"resumed_from": step, "ckpt_dir": args.ckpt_dir}))
+    return carry, step
+
+
+def _chunk_loop(args, schedule, chunk, state, one_chunk, loss_at,
+                carry_to_save=None, start: int = 0) -> dict:
     """The chunk-dispatch loop shared by the host-fed and streamed scan
     drivers: log whenever a `log_every` boundary was crossed inside the
     chunk (every chunk when chunk == log_every, the default) or at the
     final — possibly partial — chunk, and save whenever a `ckpt_every`
     boundary was crossed.  `one_chunk(state, start, stop)` advances the
     donated carry; `loss_at(state, stop)` evaluates worker 0's
-    validation loss at iteration stop - 1."""
+    validation loss at iteration stop - 1; `carry_to_save(state)` is the
+    checkpoint payload — the FULL restart carry for the scan drivers
+    (legacy z3-only when unset).  `start` > 0 continues a resumed run
+    from that absolute step."""
     history = []
     t0 = time.time()
-    for start in range(0, args.steps, chunk):
-        stop = min(start + chunk, args.steps)
-        state = one_chunk(state, start, stop)
-        if (stop // args.log_every > start // args.log_every
+    for begin in range(start, args.steps, chunk):
+        stop = min(begin + chunk, args.steps)
+        state = one_chunk(state, begin, stop)
+        if (stop // args.log_every > begin // args.log_every
                 or stop == args.steps):
             history.append({"step": stop, "loss": float(loss_at(state, stop)),
                             "sim_time": float(schedule.sim_time[stop - 1]),
                             "host_s": round(time.time() - t0, 1),
                             "cuts": float(jnp.sum(state.cuts.active))})
             print(json.dumps(history[-1]))
-        if args.ckpt_dir and stop // args.ckpt_every > start // args.ckpt_every:
-            save_checkpoint(args.ckpt_dir, state.z3, stop)
+        if args.ckpt_dir and stop // args.ckpt_every > begin // args.ckpt_every:
+            save_checkpoint(
+                args.ckpt_dir,
+                carry_to_save(state) if carry_to_save else state.z3,
+                stop)
     return {"history": history}
 
 
@@ -217,6 +252,9 @@ def _afto_scan_streamed(cfg, args, state, schedule, chunk, step,
 
     key = jnp.asarray(stream.key)
     cursor = jnp.zeros((), jnp.int32)
+    carry, start0 = _maybe_resume(
+        args, {"state": state, "key": key, "cursor": cursor})
+    state, key, cursor = carry["state"], carry["key"], carry["cursor"]
     out_shardings = None
     if state_shardings is not None:
         # commit the scalar carry replicated and pin the outputs to the
@@ -263,7 +301,13 @@ def _afto_scan_streamed(cfg, args, state, schedule, chunk, step,
         w = jax.tree.map(lambda x: x[0], st.X3)
         return val_at(w, key, jnp.asarray(stop - 1, jnp.int32))
 
-    return _chunk_loop(args, schedule, chunk, state, one_chunk, loss_at)
+    def carry_to_save(st):
+        # the WHOLE donated carry: restoring (state, key, cursor) and
+        # continuing is bit-identical to the uninterrupted run
+        return {"state": st, "key": key, "cursor": cursor}
+
+    return _chunk_loop(args, schedule, chunk, state, one_chunk, loss_at,
+                       carry_to_save=carry_to_save, start=start0)
 
 
 def _afto_setup(cfg, args):
@@ -385,6 +429,11 @@ def main():
                          "a fake-device CPU mesh (the dry-run machinery)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest full-carry checkpoint from "
+                         "--ckpt-dir and continue from its step "
+                         "(--engine scan; bit-identical to the "
+                         "uninterrupted run)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -183,3 +183,68 @@ def test_serve_driver():
                 "--batch", "2", "--prompt-len", "16", "--gen", "8"])
     assert out.returncode == 0, out.stderr[-2000:]
     assert "tok/s" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# resume-after-restart (checkpointed streamed chunk loop)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def mixing_afto_step(monkeypatch):
+    """A cheap step that folds the BATCH into the state: resume is only
+    bitwise-exact if (state, key, cursor) all restore correctly — an
+    identity stub would pass even with a broken stream cursor."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch import train
+
+    def step(cfg, hyper, st, batch, mask):
+        s = jnp.float32(0.0)
+        for leaf in jax.tree.leaves(batch):
+            s = s + jnp.sum(jnp.asarray(leaf).astype(jnp.float32))
+        bump = (s % 977.0) * 1e-4
+        return jax.tree.map(
+            lambda x: x + bump.astype(x.dtype)
+            if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) else x,
+            st)
+
+    monkeypatch.setattr(train, "afto_llm_step", step)
+    monkeypatch.setattr(train, "cut_refresh_llm",
+                        lambda cfg, hyper, st, batch: st)
+
+    def run(cfg, args):
+        from repro.launch import train as train_lib
+        hyper, state, sched, _ = train_lib._afto_setup(cfg, args)
+        import jax.numpy as jnp2
+        return train_lib.run_afto_scan(cfg, args, hyper, state, sched,
+                                       lambda w, tk: jnp2.float32(0.125))
+    return run
+
+
+def test_resume_after_restart_is_bitwise_identical(mixing_afto_step,
+                                                   tmp_path):
+    """Kill-and-restore: a run resumed from the step-4 checkpoint must
+    land on a bitwise-identical step-8 checkpoint (the streamed carry
+    (state, key, cursor) is the WHOLE resume surface)."""
+    import shutil
+
+    full_dir, res_dir = tmp_path / "full", tmp_path / "resume"
+    mixing_afto_step(_tiny_cfg(), _train_args(
+        steps=8, scan_chunk=4, log_every=4, stream=True,
+        ckpt_dir=str(full_dir), ckpt_every=4))
+    assert _ckpt_steps(full_dir) == [4, 8]
+
+    # simulate the restart: only the step-4 checkpoint survives
+    res_dir.mkdir()
+    shutil.copytree(full_dir / "step_00000004", res_dir / "step_00000004")
+    mixing_afto_step(_tiny_cfg(), _train_args(
+        steps=8, scan_chunk=4, log_every=4, stream=True,
+        ckpt_dir=str(res_dir), ckpt_every=4, resume=True))
+    assert _ckpt_steps(res_dir) == [4, 8]
+
+    a = np.load(full_dir / "step_00000008" / "arrays.npz")
+    b = np.load(res_dir / "step_00000008" / "arrays.npz")
+    assert sorted(a.files) == sorted(b.files)
+    for k in a.files:
+        assert np.array_equal(a[k], b[k]), k

@@ -1,0 +1,342 @@
+"""Async federation runtime: wire format, transports, parity, RunSpec.
+
+The headline contract (ISSUE 6): the async master/worker runtime over a
+deterministic transport, replaying a recorded arrival order, must
+reproduce `run_scanned` under the equivalent Schedule — and a live
+free-run's *recorded* arrivals must replay through the scanned engine
+to the async run's exact trajectory.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (RunSpec, Schedule, StragglerConfig, init_state, run,
+                        run_chunked, run_scanned)
+from repro.core.scheduler import ArrivalRecorder
+from repro.fed.runtime import (InProcTransport, Master, TcpTransport, decode,
+                               encode, run_async)
+from repro.fed.runtime import messages as msg_lib
+from repro.fed.runtime import problems as problems_lib
+from repro.fed.runtime import worker as worker_lib
+
+from conftest import (make_hyper, make_quadratic_problem, make_schedules,
+                      make_straggler_cfg)
+
+
+# ---------------------------------------------------------------------------
+# message layer
+# ---------------------------------------------------------------------------
+
+def test_message_roundtrip_push():
+    g = (jnp.arange(3.0), jnp.ones((2, 2)), jnp.zeros(4))
+    m = msg_lib.push(2, 7, g)
+    out = decode(encode(m))
+    assert out.kind == msg_lib.PUSH
+    assert out.meta == {"worker": 2, "n_pushes": 7}
+    got = msg_lib.push_grads(out, g)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(g)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_message_roundtrip_empty_payload():
+    for m in (msg_lib.hello(3), msg_lib.stop()):
+        out = decode(encode(m))
+        assert out.kind == m.kind and out.meta == m.meta
+        assert out.arrays == {}
+
+
+def test_message_leaf_count_mismatch_fails_loudly():
+    m = decode(encode(msg_lib.push(0, 0, (jnp.zeros(2),) * 3)))
+    bad_template = {"a": jnp.zeros(2), "b": jnp.zeros(2)}
+    with pytest.raises(ValueError, match="leaves"):
+        msg_lib.unpack_tree(m, "g1", bad_template)
+
+
+def test_message_rejects_pickled_payload():
+    # the decoder must refuse object arrays outright
+    import io
+    import json
+    import struct
+    buf = io.BytesIO()
+    np.savez(buf, x=np.array([{"evil": 1}], dtype=object))
+    header = json.dumps({"kind": "push", "meta": {}}).encode()
+    frame = struct.pack(">I", len(header)) + header + buf.getvalue()
+    with pytest.raises(ValueError):
+        decode(frame)
+
+
+# ---------------------------------------------------------------------------
+# transports carry the same encoded frames
+# ---------------------------------------------------------------------------
+
+def test_inproc_transport_routes_frames():
+    hub = InProcTransport(2)
+    me = hub.master_endpoint()
+    w0, w1 = hub.worker_endpoint(0), hub.worker_endpoint(1)
+    w1.send(encode(msg_lib.hello(1)))
+    got = decode(me.recv())
+    assert got.kind == msg_lib.HELLO and got.meta["worker"] == 1
+    me.send(0, encode(msg_lib.stop()))
+    assert decode(w0.recv()).kind == msg_lib.STOP
+    assert me.recv(timeout=0.0) is None
+
+
+def test_tcp_transport_handshake_and_frames():
+    hub = TcpTransport(2, port=0)
+    me = hub.master_endpoint()
+    conns = []
+    try:
+        conns = [TcpTransport.connect("127.0.0.1", hub.port, j)
+                 for j in range(2)]
+        me.wait_for_workers()
+        conns[1].send(encode(msg_lib.push(1, 0, (jnp.ones(2),) * 3)))
+        got = decode(me.recv())
+        assert got.kind == msg_lib.PUSH and got.meta["worker"] == 1
+        me.send(1, encode(msg_lib.stop()))
+        assert decode(conns[1].recv()).kind == msg_lib.STOP
+    finally:
+        for c in conns:
+            c.close()
+        me.close()
+
+
+# ---------------------------------------------------------------------------
+# arrival recorder
+# ---------------------------------------------------------------------------
+
+def test_arrival_recorder_matches_scheduler_semantics():
+    rec = ArrivalRecorder(3)
+    rec.record(np.array([1, 0, 1], np.float32), 1.0)
+    rec.record(np.array([1, 0, 1], np.float32), 2.0)
+    # worker 1 never active: staleness (t+1) - last_active = 3
+    np.testing.assert_array_equal(rec.staleness(), [1, 3, 1])
+    # consuming worker 1 resets it; workers 0/2 now lag by one
+    stale = rec.record(np.array([0, 1, 0], np.float32), 3.0)
+    assert stale == 1
+    sched = rec.to_schedule()
+    assert isinstance(sched, Schedule)
+    assert sched.n_iterations == 3 and sched.n_workers == 3
+    np.testing.assert_array_equal(sched.active[:, 1], [0, 0, 1])
+    np.testing.assert_array_equal(sched.sim_time, [1.0, 2.0, 3.0])
+
+
+# ---------------------------------------------------------------------------
+# the parity contracts
+# ---------------------------------------------------------------------------
+
+def _tiny():
+    prob = make_quadratic_problem()
+    hyper = make_hyper()
+    return prob, hyper
+
+
+def test_async_replay_matches_run_scanned():
+    """Deterministic transport + recorded arrival order == run_scanned
+    under the equivalent Schedule (the ISSUE acceptance contract)."""
+    prob, hyper = _tiny()
+    (schedule,) = make_schedules(30, seeds=(0,))
+    ref = run_scanned(prob, hyper, schedule, metrics_every=5)
+    res = run_async(prob, hyper, replay=schedule, metrics_every=5)
+    np.testing.assert_allclose(res.history["gap_sq"],
+                               ref.history["gap_sq"], rtol=2e-5)
+    for a, b in zip(jax.tree.leaves(res.state), jax.tree.leaves(ref.state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=1e-6)
+    # replay reproduces the schedule it was given
+    np.testing.assert_array_equal(res.arrivals.active, schedule.active)
+
+
+def test_async_free_run_arrivals_replay_through_scanned_engine():
+    """A live free-run's recorded Schedule, replayed through
+    run_scanned, reproduces the async trajectory."""
+    prob, hyper = _tiny()
+    res = run_async(prob, hyper, n_iterations=25, metrics_every=5)
+    rec = res.arrivals
+    assert rec.n_iterations == 25
+    # the master's arrival rule respects the paper's staleness bound
+    assert int(rec.max_staleness.max()) <= hyper.tau
+    ref = run_scanned(prob, hyper, rec, metrics_every=5)
+    np.testing.assert_allclose(res.history["gap_sq"],
+                               ref.history["gap_sq"], rtol=2e-5)
+    # and the run itself converges
+    gaps = res.history["gap_sq"]
+    assert gaps[-1] < gaps[0]
+
+
+def test_async_rejects_stream_data():
+    from repro.data.stream import Stream
+    prob, hyper = _tiny()
+    with pytest.raises(NotImplementedError):
+        run_async(prob, hyper, n_iterations=2,
+                  data=Stream(key=jax.random.PRNGKey(0)))
+
+
+def test_run_spec_async_engine_routes_to_runtime():
+    prob, hyper = _tiny()
+    (schedule,) = make_schedules(12, seeds=(0,))
+    ref = run_scanned(prob, hyper, schedule, metrics_every=4)
+    res = run(RunSpec(problem=prob, hyper=hyper, engine="async",
+                      schedule=schedule, metrics_every=4))
+    np.testing.assert_allclose(res.history["gap_sq"],
+                               ref.history["gap_sq"], rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RunSpec front end + deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_run_spec_equivalent_to_legacy_kwargs():
+    prob, hyper = _tiny()
+    cfg = make_straggler_cfg()
+    spec_res = run(RunSpec(problem=prob, hyper=hyper, scheduler=cfg,
+                           n_iterations=20, metrics_every=5))
+    with pytest.warns(DeprecationWarning, match="RunSpec"):
+        legacy = run(prob, hyper, scheduler_cfg=cfg, n_iterations=20,
+                     metrics_every=5, mode="scan")
+    np.testing.assert_array_equal(spec_res.history["gap_sq"],
+                                  legacy.history["gap_sq"])
+
+
+def test_run_spec_defaults_scheduler_from_hyper():
+    prob, hyper = _tiny()
+    spec = RunSpec(problem=prob, hyper=hyper)
+    cfg = spec.resolved_scheduler()
+    assert cfg.n_workers == hyper.n_workers
+    assert cfg.s_active == hyper.s_active and cfg.tau == hyper.tau
+
+
+def test_run_spec_schedule_wins_iteration_count():
+    prob, hyper = _tiny()
+    (schedule,) = make_schedules(13, seeds=(0,))
+    spec = RunSpec(problem=prob, hyper=hyper, schedule=schedule,
+                   n_iterations=999)
+    assert spec.resolved_iterations() == 13
+    res = run(spec)
+    assert int(res.history["t"][-1]) == 13
+
+
+def test_legacy_unknown_kwarg_still_typeerror():
+    prob, hyper = _tiny()
+    with pytest.raises(TypeError, match="nonsense"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            run(prob, hyper, nonsense=1)
+
+
+def test_run_spec_validation_errors_preserved():
+    prob, hyper = _tiny()
+    with pytest.raises(ValueError, match="unknown mode"):
+        run(RunSpec(problem=prob, hyper=hyper, engine="warp"))
+    with pytest.raises(ValueError, match="chunk"):
+        run(RunSpec(problem=prob, hyper=hyper, chunk_hook=lambda s, t: None))
+    with pytest.raises(ValueError, match="jit"):
+        run(RunSpec(problem=prob, hyper=hyper, engine="sweep", jit=False,
+                    seeds=(0,)))
+
+
+def test_run_spec_chunked_scan_matches_monolithic():
+    prob, hyper = _tiny()
+    (schedule,) = make_schedules(12, seeds=(0,))
+    ref = run(RunSpec(problem=prob, hyper=hyper, schedule=schedule,
+                      metrics_every=3))
+    boundaries = []
+    res = run(RunSpec(problem=prob, hyper=hyper, schedule=schedule,
+                      metrics_every=3, chunk_size=5,
+                      chunk_hook=lambda st, t: boundaries.append(t)))
+    # chunking is exact on the state; the history gains each chunk's
+    # final record, so compare at the shared absolute iterations
+    for a, b in zip(jax.tree.leaves(res.state), jax.tree.leaves(ref.state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   atol=1e-7)
+    shared = {int(t): g for t, g in zip(res.history["t"],
+                                        res.history["gap_sq"])}
+    for t, g in zip(ref.history["t"], ref.history["gap_sq"]):
+        if int(t) in shared:
+            np.testing.assert_allclose(shared[int(t)], g, rtol=1e-6)
+    assert boundaries == [5, 10, 12]
+
+
+def test_run_chunked_exported_from_core():
+    prob, hyper = _tiny()
+    (schedule,) = make_schedules(8, seeds=(0,))
+    ref = run_scanned(prob, hyper, schedule, metrics_every=4)
+    res = run_chunked(prob, hyper, schedule, chunk_size=3, metrics_every=4)
+    for a, b in zip(jax.tree.leaves(res.state), jax.tree.leaves(ref.state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   atol=1e-7)
+    np.testing.assert_allclose(res.history["gap_sq"][-1],
+                               ref.history["gap_sq"][-1], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# CutSet deprecation
+# ---------------------------------------------------------------------------
+
+def test_cutset_surface_warns_flatcuts_does_not():
+    from repro.core import cuts as cuts_lib
+    tpl = jnp.zeros(3)
+    with pytest.warns(DeprecationWarning, match="FlatCuts"):
+        cs = cuts_lib.empty_cutset(2, 1, tpl, tpl, tpl)
+    flat = cuts_lib.empty_cuts(2, 1, tpl, tpl, tpl)
+    with warnings.catch_warnings():   # the canonical path must NOT warn
+        warnings.simplefilter("error", DeprecationWarning)
+        flat = cuts_lib.add_cut(flat, {"a1": jnp.ones(3)}, 0.5, t=0)
+        cuts_lib.eval_cuts(flat, jnp.ones(3), jnp.zeros(3), jnp.zeros(3))
+    with pytest.warns(DeprecationWarning, match="FlatCuts"):
+        cuts_lib.eval_cuts(cs, jnp.ones(3), jnp.zeros(3), jnp.zeros(3))
+
+
+# ---------------------------------------------------------------------------
+# worker loop unit behavior
+# ---------------------------------------------------------------------------
+
+def test_worker_loop_stops_on_stop_message():
+    prob, hyper = _tiny()
+    hub = InProcTransport(hyper.n_workers)
+    me = hub.master_endpoint()
+    we = hub.worker_endpoint(0)
+    me.send(0, encode(msg_lib.stop()))
+    n = worker_lib.worker_loop(prob, 0, we)
+    assert n == 0
+
+
+def test_worker_loop_pushes_f1_gradient_rows():
+    prob, hyper = _tiny()
+    hub = InProcTransport(hyper.n_workers)
+    me = hub.master_endpoint()
+    we = hub.worker_endpoint(0)
+    state = init_state(prob, hyper)
+    rows = (jax.tree.map(lambda x: x[0], state.X1),
+            jax.tree.map(lambda x: x[0], state.X2),
+            jax.tree.map(lambda x: x[0], state.X3))
+    me.send(0, encode(msg_lib.refresh(0, 0, rows)))
+    me.send(0, encode(msg_lib.stop()))
+    n = worker_lib.worker_loop(prob, 0, we)
+    assert n == 1
+    got = decode(me.recv())
+    assert got.kind == msg_lib.PUSH
+    g1, g2, g3 = msg_lib.push_grads(got, rows)
+    data0 = jax.tree.map(lambda x: x[0], prob.data)
+    want = jax.grad(lambda a, b, c: prob.f1(data0, a, b, c),
+                    argnums=(0, 1, 2))(*rows)
+    for a, b in zip(jax.tree.leaves((g1, g2, g3)),
+                    jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# problems registry
+# ---------------------------------------------------------------------------
+
+def test_problem_registry_rebuilds_identically():
+    p1, h1 = problems_lib.build("quadratic", n_workers=3, dim=2, seed=4)
+    p2, h2 = problems_lib.build("quadratic", n_workers=3, dim=2, seed=4)
+    for a, b in zip(jax.tree.leaves(p1.data), jax.tree.leaves(p2.data)):
+        np.testing.assert_array_equal(a, b)
+    assert h1 == h2
+    with pytest.raises(KeyError, match="unknown problem"):
+        problems_lib.build("no-such-problem")
