@@ -3,6 +3,17 @@
 Orbax is not available offline; this covers the framework's needs:
 sharding-agnostic host save/restore with structure and dtype fidelity,
 atomic writes, and step-numbered directories with retention.
+
+Two checkpoint families share the directory layout:
+
+  - `save_checkpoint`/`load_checkpoint`: template-shaped pytrees (the
+    training scan carry) — the caller supplies the structure on load.
+  - `save_array_dict`/`load_array_dict`: self-describing flat
+    name -> ndarray dicts (the async master's durable runtime carry,
+    whose pieces — recorded arrival history, pending push map — have no
+    static template).  Array-dict manifests carry a crc32 of the array
+    payload; a truncated or corrupted checkpoint raises
+    `CheckpointError` instead of resuming from garbage.
 """
 from __future__ import annotations
 
@@ -10,10 +21,15 @@ import json
 import os
 import shutil
 import tempfile
-from typing import Any, Optional
+import zlib
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is missing, truncated, or fails its checksum."""
 
 
 def _flatten(tree):
@@ -94,3 +110,91 @@ def load_checkpoint(directory: str, template: Any,
             f"leaf {i}: ckpt {arr.shape} != template {np.shape(tpl)}"
         restored.append(jax.numpy.asarray(arr, dtype=tpl.dtype))
     return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+# ---------------------------------------------------------------------------
+# self-describing array-dict checkpoints (durable runtime state)
+# ---------------------------------------------------------------------------
+
+def save_array_dict(directory: str, arrays: Dict[str, np.ndarray],
+                    step: int, keep: int = 3) -> str:
+    """Write a flat name -> ndarray dict as
+    <directory>/step_<step>/{manifest.json, arrays.npz} (atomic, with
+    retention).  Unlike `save_checkpoint`, the names travel with the
+    data — no template is needed to load, so variable-length state
+    (recorded histories, pending maps) round-trips as-is."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".ckpt_tmp_")
+    try:
+        npz_path = os.path.join(tmp, "arrays.npz")
+        np.savez(npz_path,
+                 **{k: np.asarray(v) for k, v in arrays.items()})
+        with open(npz_path, "rb") as f:
+            crc = zlib.crc32(f.read())
+        manifest = {"step": int(step), "format": "array_dict",
+                    "keys": sorted(arrays), "crc32": crc}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for old in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, old), ignore_errors=True)
+    return final
+
+
+def load_array_dict(directory: str,
+                    step: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Load an array-dict checkpoint (latest step if unspecified).
+
+    Raises `CheckpointError` — never garbage — when the checkpoint is
+    missing, the manifest is unreadable, the npz payload fails its
+    crc32, or the stored keys don't match the manifest."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise CheckpointError(f"no checkpoints in {directory!r}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    man_path = os.path.join(path, "manifest.json")
+    npz_path = os.path.join(path, "arrays.npz")
+    try:
+        with open(man_path) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointError(
+            f"unreadable manifest at {man_path}: {e}") from e
+    if manifest.get("format") != "array_dict":
+        raise CheckpointError(
+            f"{path} is not an array-dict checkpoint "
+            f"(format={manifest.get('format')!r}); use load_checkpoint")
+    try:
+        with open(npz_path, "rb") as f:
+            payload = f.read()
+    except OSError as e:
+        raise CheckpointError(
+            f"missing array payload at {npz_path}: {e}") from e
+    crc = zlib.crc32(payload)
+    if crc != int(manifest.get("crc32", -1)):
+        raise CheckpointError(
+            f"checksum mismatch for {npz_path}: stored "
+            f"{manifest.get('crc32')}, computed {crc} — the checkpoint "
+            f"is corrupt or truncated")
+    import io as _io
+    try:
+        with np.load(_io.BytesIO(payload), allow_pickle=False) as npz:
+            out = {k: npz[k] for k in npz.files}
+    except Exception as e:
+        raise CheckpointError(
+            f"undecodable array payload at {npz_path}: {e}") from e
+    if sorted(out) != list(manifest.get("keys", [])):
+        raise CheckpointError(
+            f"key set mismatch in {path}: manifest lists "
+            f"{len(manifest.get('keys', []))} keys, payload has "
+            f"{len(out)}")
+    return out

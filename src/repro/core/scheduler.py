@@ -28,6 +28,13 @@ class Schedule:
     active: np.ndarray         # (T, N) float32 arrival masks
     sim_time: np.ndarray       # (T,) float64 completion sim-times
     max_staleness: np.ndarray  # (T,) int64 max staleness after each iter
+    # Degradation marker (fault-tolerant runtime): (T, N) {0,1} mask of
+    # workers DECLARED DEAD as of each iteration.  `max_staleness` is
+    # computed among live workers only, so a degraded trajectory still
+    # satisfies the tau bound among survivors; `active` alone drives the
+    # step math, so a degraded schedule replays exactly through
+    # `run_scanned`.  None for simulated / pre-fault-era schedules.
+    dead: Optional[np.ndarray] = None
 
     @property
     def n_iterations(self) -> int:
@@ -39,11 +46,12 @@ class Schedule:
 
     def slice(self, a: int, b: int) -> "Schedule":
         """Iterations [a, b) as a standalone Schedule — the chunk view
-        used by state-continued chunked dispatches (all three
-        per-iteration arrays sliced together)."""
+        used by state-continued chunked dispatches (all per-iteration
+        arrays sliced together)."""
         return dataclasses.replace(
             self, active=self.active[a:b], sim_time=self.sim_time[a:b],
-            max_staleness=self.max_staleness[a:b])
+            max_staleness=self.max_staleness[a:b],
+            dead=None if self.dead is None else self.dead[a:b])
 
     def worker_shards(self, n_shards: int) -> np.ndarray:
         """Host-side inspection helper: the arrival masks grouped by
@@ -81,27 +89,50 @@ class ArrivalRecorder:
         self._active: List[np.ndarray] = []
         self._sim_time: List[float] = []
         self._staleness: List[int] = []
+        self._dead: List[np.ndarray] = []
         self.last_active = np.zeros(self.n_workers, dtype=np.int64)
+        self.dead = np.zeros(self.n_workers, dtype=bool)
 
     @property
     def t(self) -> int:
         return len(self._active)
 
+    def mark_dead(self, j: int) -> None:
+        """Declare worker j dead: it is excluded from the staleness
+        diagnostics (and from the master's tau-forced set) until it
+        rejoins.  Recorded per iteration as the schedule's `dead` mask."""
+        self.dead[int(j)] = True
+
+    def mark_alive(self, j: int) -> None:
+        """Resurrect worker j (rejoin).  Its staleness clock restarts at
+        the current iteration — a rejoined worker gets the full tau
+        window to produce its first push, exactly like a worker whose
+        push was just consumed."""
+        j = int(j)
+        self.dead[j] = False
+        self.last_active[j] = self.t
+
     def record(self, active_mask, sim_time: float) -> int:
         """Append one master iteration's arrival set; returns the max
-        staleness after the iteration (the paper's tau diagnostic)."""
+        staleness after the iteration (the paper's tau diagnostic,
+        computed among live workers only)."""
         mask = np.asarray(active_mask, np.float32).reshape(self.n_workers)
         self._active.append(mask)
         self._sim_time.append(float(sim_time))
+        self._dead.append(self.dead.astype(np.float32).copy())
         t = self.t
         self.last_active[mask > 0] = t
-        stale = int(np.max(t - self.last_active))
+        live = ~self.dead
+        stale = int(np.max((t - self.last_active)[live])) if live.any() \
+            else 0
         self._staleness.append(stale)
         return stale
 
     def staleness(self) -> np.ndarray:
         """Per-worker staleness going INTO the next iteration (t+1 -
-        last_active): the quantity the tau-forcing rule bounds."""
+        last_active): the quantity the tau-forcing rule bounds.  Dead
+        workers' entries keep growing — mask with the liveness view
+        before forcing on them."""
         return (self.t + 1) - self.last_active
 
     def to_schedule(self) -> Schedule:
@@ -112,7 +143,38 @@ class ArrivalRecorder:
             active=(np.stack(self._active) if self._active
                     else np.zeros((0, n), np.float32)),
             sim_time=np.asarray(self._sim_time, np.float64),
-            max_staleness=np.asarray(self._staleness, np.int64))
+            max_staleness=np.asarray(self._staleness, np.int64),
+            dead=(np.stack(self._dead) if self._dead
+                  else np.zeros((0, n), np.float32)))
+
+    # -- durable-master support (checkpoint/io.py array dicts) -------------
+
+    def state_dict(self) -> dict:
+        """The recorder's full mutable state as a flat name -> ndarray
+        dict (the checkpointable form of the live arrival process)."""
+        n = self.n_workers
+        return {
+            "active": (np.stack(self._active) if self._active
+                       else np.zeros((0, n), np.float32)),
+            "sim_time": np.asarray(self._sim_time, np.float64),
+            "staleness": np.asarray(self._staleness, np.int64),
+            "dead_hist": (np.stack(self._dead) if self._dead
+                          else np.zeros((0, n), np.float32)),
+            "last_active": self.last_active.copy(),
+            "dead": self.dead.copy(),
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        """Inverse of `state_dict`: restore the recorded history and the
+        liveness clocks in place."""
+        self._active = [np.asarray(r, np.float32)
+                        for r in np.asarray(d["active"])]
+        self._sim_time = [float(x) for x in np.asarray(d["sim_time"])]
+        self._staleness = [int(x) for x in np.asarray(d["staleness"])]
+        self._dead = [np.asarray(r, np.float32)
+                      for r in np.asarray(d["dead_hist"])]
+        self.last_active = np.asarray(d["last_active"], np.int64).copy()
+        self.dead = np.asarray(d["dead"], bool).copy()
 
 
 @dataclasses.dataclass

@@ -16,12 +16,24 @@ feedback from optimization timing instead of an open-loop model.
 Layering:
 
   messages.py   serializable wire format (json header + npz leaves,
-                no pickle) — `Message`, push/refresh constructors.
+                no pickle) — `Message`, push/refresh constructors, plus
+                the fault-protocol surface (HELLO epochs, HEARTBEAT,
+                local DISCONNECT frames).
   transport.py  pluggable byte movers: `InProcTransport` (queue pairs,
                 deterministic tests) and `TcpTransport` (length-prefixed
-                frames over sockets, real multi-process runs).
-  master.py     the arrival rule + master step loop (`Master`).
-  worker.py     the worker compute loop + subprocess CLI entry.
+                frames over sockets, real multi-process runs, reconnect
+                accepts, broken connections surfaced as DISCONNECT).
+  membership.py `FaultConfig` + `Membership` (the master's failure
+                detector / session bookkeeping) and the exact worker
+                resharding operators (`make_views` / `assemble_state`).
+  master.py     the arrival rule + master step loop (`Master`) with
+                liveness deadlines, degradation recording, durable
+                checkpoint/resume of the whole runtime carry.
+  worker.py     the worker compute loop (heartbeats, retransmits) +
+                reconnecting subprocess CLI entry.
+  chaos.py      seeded deterministic fault injection (`ChaosScript`)
+                and the supervised crash/rejoin harness
+                (`run_chaos_async`).
   problems.py   name -> (problem, hyper) registry so subprocess workers
                 can rebuild the (unpicklable) closure-bearing problem.
 
@@ -29,12 +41,21 @@ Conformance contract: `run_async(..., replay=schedule)` over the
 deterministic in-process transport reproduces the `run_scanned`
 trajectory for that arrival order (up to lowering-level float noise in
 the worker gradients), and the arrival process recorded by a free run
-replays through `run_scanned` the same way.  `tests/test_runtime.py`
-pins both directions.
+replays through `run_scanned` the same way — INCLUDING degraded runs:
+worker deaths only shape which masks get recorded, never the step math,
+so a chaos run's Schedule replays bit-exactly too.
+`tests/test_runtime.py` and `tests/test_chaos.py` pin both directions.
 """
+from repro.fed.runtime.chaos import ChaosCrash, ChaosScript, run_chaos_async
 from repro.fed.runtime.master import Master, run_async
+from repro.fed.runtime.membership import (FaultConfig, Membership,
+                                          assemble_state, make_views,
+                                          reshard_state)
 from repro.fed.runtime.messages import Message, decode, encode
 from repro.fed.runtime.transport import InProcTransport, TcpTransport
 
 __all__ = ["Master", "run_async", "Message", "encode", "decode",
-           "InProcTransport", "TcpTransport"]
+           "InProcTransport", "TcpTransport",
+           "FaultConfig", "Membership", "make_views", "assemble_state",
+           "reshard_state", "ChaosScript", "ChaosCrash",
+           "run_chaos_async"]

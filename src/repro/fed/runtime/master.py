@@ -27,6 +27,25 @@ currently computing.  One master iteration:
      makes the push-gradients / pull-rows decomposition reproduce the
      single-process trajectory.
 
+Fault tolerance (ISSUE 7) wraps the loop without touching the math:
+
+  - FAILURE DETECTION.  Every frame from worker j refreshes its
+    liveness clock (`membership.Membership`); a transport DISCONNECT or
+    silence past `FaultConfig.death_timeout` declares it dead — removed
+    from the tau-forced set, pending rows dropped (zero-filled rows are
+    exact), effective S shrinks to the live population, and the
+    degradation is recorded in the Schedule's `dead` mask, so the
+    degraded trajectory still replays exactly through `run_scanned`.
+  - RETRY/RECONNECT.  Pushes carry (epoch, seq); duplicates and
+    dead-session frames are exact no-ops, a current-session duplicate
+    seq retransmits the lost refresh, and a re-HELLO with a bumped
+    resume epoch replays the worker's last consumed local point — a
+    rejoined worker is bit-identical to one that never left.
+  - DURABLE STATE.  `ckpt_every` arrivals, the WHOLE canonical carry
+    (state + recorder + pending map + per-worker epochs + history) is
+    written through `checkpoint/io.py` array dicts; `restore()` resumes
+    it bitwise (`serve fed --resume`).
+
 The live arrival process is recorded per iteration
 (`ArrivalRecorder`) and returned as `RunResult.arrivals` — a
 `Schedule` replayable through `run_scanned` or through this master.
@@ -41,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import io as ckpt_io
 from repro.core import afto as afto_lib
 from repro.core import stationarity as stat_lib
 from repro.core.engine import RunResult
@@ -49,6 +69,7 @@ from repro.core.types import AFTOState, Hyper, TrilevelProblem
 from repro.data.stream import Stream
 from repro.fed.runtime import messages as msg_lib
 from repro.fed.runtime import transport as transport_lib
+from repro.fed.runtime.membership import FaultConfig, Membership
 
 
 def _row(tree, j: int):
@@ -65,6 +86,10 @@ def _set_row(stack, j: int, row_tree) -> None:
         dst[j] = np.asarray(src)
 
 
+_HIST_KEYS = ("t", "sim_time", "host_time", "gap_sq", "n_cuts_i",
+              "n_cuts_ii", "max_staleness")
+
+
 class Master:
     """Runs the async master loop over any `MasterEndpoint`."""
 
@@ -74,7 +99,10 @@ class Master:
                  metrics_fn: Optional[Callable] = None,
                  metrics_every: int = 10,
                  state: Optional[AFTOState] = None,
-                 replay: Optional[Schedule] = None):
+                 replay: Optional[Schedule] = None,
+                 fault: Optional[FaultConfig] = None,
+                 ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 0):
         if replay is not None and replay.n_workers != hyper.n_workers:
             raise ValueError(
                 f"replay schedule has {replay.n_workers} workers; hyper "
@@ -87,11 +115,22 @@ class Master:
         self.state = state if state is not None else afto_lib.init_state(
             problem, hyper)
         self.replay = replay
-        self.recorder = ArrivalRecorder(hyper.n_workers)
-        self.pending: Dict[int, tuple] = {}   # worker -> grads triple
+        self.fault = fault or FaultConfig()
+        self.ckpt_dir, self.ckpt_every = ckpt_dir, int(ckpt_every)
+        n = hyper.n_workers
+        self.recorder = ArrivalRecorder(n)
+        self.members = Membership(n, self.fault)
+        self.pending: Dict[int, tuple] = {}   # worker -> (seq, grads)
+        self.last_refresh_t = np.zeros(n, dtype=np.int64)
+        self._last_tx = np.zeros(n, dtype=np.float64)  # refresh send times
+        self.start_it = 0
+        self.hist: Dict[str, List[float]] = {k: [] for k in _HIST_KEYS}
         self.status: Dict = {"t": 0, "n_iterations": self.n_iterations,
                              "gap_sq": None, "max_staleness": 0,
-                             "pending": 0, "done": False}
+                             "pending": 0, "done": False, "deaths": 0,
+                             "rejoins": 0, "corrupt_frames": 0,
+                             "resumed_from": None,
+                             "workers": self.members.status()}
         self._step = jax.jit(
             lambda s, m, g: afto_lib.afto_step_from_grads(
                 problem, hyper, s, m, g)[0])
@@ -101,44 +140,149 @@ class Master:
             lambda s: stat_lib.stationarity_gap_sq(problem, hyper, s))
         self._row_templates = (problem.x1_init, problem.x2_init,
                                problem.x3_init)
+        self._update_worker_status()
 
     # -- message plumbing ---------------------------------------------------
 
     def _consume_frame(self, frame: Optional[bytes]) -> None:
         if frame is None:
             return
-        m = msg_lib.decode(frame)
+        try:
+            m = msg_lib.decode(frame)
+        except Exception:
+            # a chaos-cut / mid-frame-truncated frame: count it and let
+            # the retransmit protocol recover the payload
+            self.status["corrupt_frames"] += 1
+            return
+        n = self.hyper.n_workers
+        j = int(m.meta.get("worker", -1))
+        if not 0 <= j < n:
+            self.status["corrupt_frames"] += 1
+            return
+        if m.kind == msg_lib.DISCONNECT:
+            if self.members.disconnect(j):
+                self._degrade(j)
+            return
         if m.kind == msg_lib.HELLO:
-            return   # handshakes are transport-level; ignore here
+            rejoin = self.members.hello(j, int(m.meta.get("epoch", 0)))
+            if rejoin:
+                self.recorder.mark_alive(j)
+                self._resend_last(j)
+            return
+        if m.kind == msg_lib.HEARTBEAT:
+            if self.members.saw(j):
+                self.recorder.mark_alive(j)   # slow, not gone: resurrect
+            self.members.observe_epoch(j, int(m.meta.get("epoch", 0)))
+            return
         if m.kind != msg_lib.PUSH:
             raise ValueError(f"master got unexpected {m.kind!r} message")
-        j = int(m.meta["worker"])
-        self.pending[j] = msg_lib.push_grads(m, self._row_templates)
+        if self.members.saw(j):
+            self.recorder.mark_alive(j)
+        epoch = int(m.meta.get("epoch", 0))
+        seq = int(m.meta.get("n_pushes", 0))
+        self.members.observe_epoch(j, epoch)
+        if self.members.fresh_push(j, epoch, seq):
+            self.pending[j] = (seq,
+                               msg_lib.push_grads(m, self._row_templates))
+        elif epoch == int(self.members.epoch[j]):
+            # current-session duplicate: the worker's refresh was lost —
+            # retransmit its last consumed local point (rows unchanged
+            # since, so this is an exact retransmission)
+            self._resend_last(j)
+
+    def _degrade(self, j: int) -> None:
+        """Declare worker j dead: drop it from the tau-forced set and
+        zero its pending rows (exact — Eq. 16 masks inactive rows)."""
+        self.recorder.mark_dead(j)
+        self.pending.pop(j, None)
+        self.status["deaths"] = self.members.deaths
+
+    def _send(self, j: int, frame: bytes) -> None:
+        try:
+            self.endpoint.send(j, frame)
+        except (ConnectionError, OSError):
+            # a dead socket surfaces through the reader's DISCONNECT (or
+            # the deadline); sends to the gone worker are best-effort
+            pass
 
     def _send_rows(self, j: int, t_master: int) -> None:
         rows = (_row(self.state.X1, j), _row(self.state.X2, j),
                 _row(self.state.X3, j))
-        self.endpoint.send(j, msg_lib.encode(
-            msg_lib.refresh(j, t_master, rows)))
+        self._send(j, msg_lib.encode(msg_lib.refresh(j, t_master, rows)))
+        self.last_refresh_t[j] = int(t_master)
+        self._last_tx[j] = time.monotonic()
+
+    def _resend_last(self, j: int) -> None:
+        """Replay worker j's last consumed local point (its rows changed
+        only at its own consumption, so resending last_refresh_t's rows
+        is bit-identical to the original refresh)."""
+        self._send_rows(int(j), int(self.last_refresh_t[int(j)]))
+
+    # -- failure detection --------------------------------------------------
+
+    def _check_deadlines(self) -> None:
+        for j in self.members.overdue():
+            self.members.mark_dead(j)
+            self._degrade(j)
+
+    def _heal_stalled(self) -> None:
+        """Retransmit the last refresh to live workers that owe a push
+        but have been silent on the compute side too long — recovers a
+        refresh (or initial-rows) frame lost in flight."""
+        now = time.monotonic()
+        for j in range(self.hyper.n_workers):
+            if (self.members.alive[j] and j not in self.pending
+                    and now - self._last_tx[j]
+                    > self.fault.refresh_resend_every):
+                self._resend_last(j)
 
     # -- the arrival rule ---------------------------------------------------
 
     def _wait_arrivals(self, it: int) -> np.ndarray:
         """Block until this iteration's arrival set is pending; return
         the sorted worker ids to consume."""
+        poll = self.fault.poll_interval
         if self.replay is not None:
             target = np.nonzero(self.replay.active[it] > 0)[0]
             while not all(j in self.pending for j in target):
-                self._consume_frame(self.endpoint.recv())
+                self._consume_frame(self.endpoint.recv(timeout=poll))
+                self._heal_stalled()
             return target
         forced_rule, s_active = self.hyper.tau, self.hyper.s_active
+        dead_deadline = None
         while True:
-            forced = np.nonzero(
-                self.recorder.staleness() >= forced_rule)[0]
-            if (len(self.pending) >= s_active
-                    and all(j in self.pending for j in forced)):
-                break
-            self._consume_frame(self.endpoint.recv())
+            # drain everything already in flight BEFORE judging
+            # liveness: the master may have been away compiling/stepping
+            # for seconds, and queued heartbeats prove the silence was
+            # ours, not the workers'
+            while True:
+                frame = self.endpoint.recv(timeout=0.0)
+                if frame is None:
+                    break
+                self._consume_frame(frame)
+            self._check_deadlines()
+            alive = self.members.alive
+            n_live = self.members.n_live
+            if n_live == 0:
+                # nobody left: hold the line for a rejoin, then fail
+                if dead_deadline is None:
+                    dead_deadline = (time.monotonic()
+                                     + self.fault.all_dead_timeout)
+                elif time.monotonic() > dead_deadline:
+                    raise RuntimeError(
+                        "all workers declared dead and none rejoined "
+                        f"within {self.fault.all_dead_timeout}s")
+            else:
+                dead_deadline = None
+                stale = self.recorder.staleness()
+                forced = np.nonzero((stale >= forced_rule) & alive)[0]
+                s_eff = max(1, min(s_active, n_live))
+                pend_live = sum(1 for j in self.pending if alive[j])
+                if (pend_live >= s_eff
+                        and all(j in self.pending for j in forced)):
+                    break
+            self._consume_frame(self.endpoint.recv(timeout=poll))
+            self._heal_stalled()
         # the scheduler's "extra" rule: anything already in flight when
         # the master proceeds counts as arrived this iteration
         while True:
@@ -148,22 +292,133 @@ class Master:
             self._consume_frame(frame)
         return np.array(sorted(self.pending), dtype=np.int64)
 
+    # -- durable master state (checkpoint/io.py array dicts) ----------------
+
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        """The master's WHOLE runtime carry as a flat name -> ndarray
+        dict: canonical state leaves, the recorder's live arrival
+        process, the pending push map (stacked rows + per-worker seq),
+        membership epochs, refresh bookkeeping and the metrics history.
+        Restoring it reproduces the loop bitwise from the same point."""
+        out: Dict[str, np.ndarray] = {
+            "it": np.asarray(self.start_it, np.int64),
+            "last_refresh_t": self.last_refresh_t.copy(),
+        }
+        for i, leaf in enumerate(jax.tree.leaves(self.state)):
+            out[f"state/{i}"] = np.asarray(leaf)
+        for k, v in self.recorder.state_dict().items():
+            out[f"rec/{k}"] = v
+        for k, v in self.members.state_dict().items():
+            out[f"mem/{k}"] = v
+        n = self.hyper.n_workers
+        pend_seq = np.zeros(n, np.int64)
+        stacks = tuple(_zero_stack(s) for s in
+                       (self.state.X1, self.state.X2, self.state.X3))
+        for j, (seq, grads) in self.pending.items():
+            pend_seq[j] = seq
+            for stack, g in zip(stacks, grads):
+                _set_row(stack, int(j), g)
+        out["pending_seq"] = pend_seq
+        for gi, stack in enumerate(stacks):
+            for i, leaf in enumerate(jax.tree.leaves(stack)):
+                out[f"pend/g{gi + 1}/{i}"] = np.asarray(leaf)
+        for k, v in self.hist.items():
+            out[f"hist/{k}"] = np.asarray(v, np.float64)
+        return out
+
+    def save(self, step: int) -> str:
+        """Checkpoint the runtime carry (called every `ckpt_every`
+        arrivals from the loop; safe to call manually)."""
+        assert self.ckpt_dir, "Master has no ckpt_dir configured"
+        snap = self.snapshot()
+        snap["it"] = np.asarray(step, np.int64)
+        return ckpt_io.save_array_dict(self.ckpt_dir, snap, step=step)
+
+    def restore(self, step: Optional[int] = None) -> int:
+        """Restore the runtime carry saved by `save`; returns the
+        iteration to resume from.  Connection-scoped session state
+        (epochs, consumed seqs) is reset — a resumed master faces a
+        fresh worker population and replays each worker's last consumed
+        local point instead of the initial rows."""
+        assert self.ckpt_dir, "Master has no ckpt_dir configured"
+        d = ckpt_io.load_array_dict(self.ckpt_dir, step=step)
+        leaves, treedef = jax.tree_util.tree_flatten(self.state)
+        restored = []
+        for i, tpl in enumerate(leaves):
+            arr = d[f"state/{i}"]
+            if tuple(arr.shape) != tuple(np.shape(tpl)):
+                raise ckpt_io.CheckpointError(
+                    f"state leaf {i}: checkpoint shape {arr.shape} != "
+                    f"runtime template {np.shape(tpl)}")
+            restored.append(jnp.asarray(arr, dtype=tpl.dtype))
+        self.state = jax.tree_util.tree_unflatten(treedef, restored)
+        self.recorder.load_state_dict(
+            {k[len("rec/"):]: v for k, v in d.items()
+             if k.startswith("rec/")})
+        self.members.load_state_dict(
+            {k[len("mem/"):]: v for k, v in d.items()
+             if k.startswith("mem/")})
+        self.members.reset_sessions()
+        self.last_refresh_t = np.asarray(d["last_refresh_t"],
+                                         np.int64).copy()
+        pend_seq = np.asarray(d["pending_seq"], np.int64)
+        self.pending = {}
+        for j in np.nonzero(pend_seq > 0)[0]:
+            grads = []
+            for gi, tpl_stack in enumerate((self.state.X1, self.state.X2,
+                                            self.state.X3)):
+                t_leaves, t_def = jax.tree_util.tree_flatten(tpl_stack)
+                g_leaves = [np.asarray(d[f"pend/g{gi + 1}/{i}"][j])
+                            for i in range(len(t_leaves))]
+                grads.append(jax.tree_util.tree_unflatten(
+                    t_def, g_leaves))
+            self.pending[int(j)] = (int(pend_seq[j]), tuple(grads))
+        # a resumed master's consumed counters restart with the fresh
+        # sessions; restored pending seqs must stay ahead of them
+        self.members.consumed_seq[:] = 0
+        self.hist = {k[len("hist/"):]: list(np.asarray(v))
+                     for k, v in d.items() if k.startswith("hist/")}
+        self.start_it = int(d["it"])
+        self.status.update(t=self.start_it, resumed_from=self.start_it,
+                           pending=len(self.pending))
+        return self.start_it
+
     # -- the loop -----------------------------------------------------------
 
+    def _update_worker_status(self) -> None:
+        stale = self.recorder.staleness()
+        rows = self.members.status()
+        for j, row in enumerate(rows):
+            row["staleness"] = int(stale[j])
+            row["dead"] = bool(self.recorder.dead[j])
+        self.status.update(workers=rows, deaths=self.members.deaths,
+                           rejoins=self.members.rejoins)
+
     def run(self) -> RunResult:
-        problem, hyper = self.problem, self.hyper
+        hyper = self.hyper
         n = hyper.n_workers
-        hist: Dict[str, List[float]] = {
-            "t": [], "sim_time": [], "host_time": [], "gap_sq": [],
-            "n_cuts_i": [], "n_cuts_ii": [], "max_staleness": []}
-        t0_abs = int(self.state.t)
+        hist = self.hist
+        # absolute-iteration origin: state.t advances one per consumed
+        # iteration, so subtracting the resume point recovers t0
+        t0_abs = int(self.state.t) - self.start_it
         t_start = time.perf_counter()
 
-        # every worker starts from the master's initial rows
-        for j in range(n):
-            self._send_rows(j, t0_abs)
+        if self.start_it == 0:
+            # every worker starts from the master's initial rows
+            for j in range(n):
+                self._send_rows(j, t0_abs)
+        else:
+            # resumed master, fresh workers: replay each live worker's
+            # last consumed local point (rows unchanged since — a
+            # rejoined population is bit-identical to one that never
+            # saw the crash)
+            for j in range(n):
+                if self.members.alive[j]:
+                    self._resend_last(j)
+        self._update_worker_status()
 
-        for it in range(self.n_iterations):
+        for it in range(self.start_it, self.n_iterations):
+            iter_t0 = time.monotonic()
             active_ids = self._wait_arrivals(it)
             mask = np.zeros((n,), np.float32)
             mask[active_ids] = 1.0
@@ -173,7 +428,8 @@ class Master:
             grads = tuple(_zero_stack(s) for s in
                           (self.state.X1, self.state.X2, self.state.X3))
             for j in active_ids:
-                g1, g2, g3 = self.pending.pop(int(j))
+                seq, (g1, g2, g3) = self.pending.pop(int(j))
+                self.members.consumed(int(j), seq)
                 _set_row(grads[0], int(j), g1)
                 _set_row(grads[1], int(j), g2)
                 _set_row(grads[2], int(j), g3)
@@ -193,6 +449,7 @@ class Master:
 
             self.status.update(t=it + 1, max_staleness=stale,
                                pending=len(self.pending))
+            self._update_worker_status()
             if (it + 1) % self.metrics_every == 0 \
                     or it == self.n_iterations - 1:
                 gap = float(self._gap(self.state))
@@ -209,9 +466,17 @@ class Master:
                     for k, v in self.metrics_fn(self.state).items():
                         hist.setdefault(k, []).append(float(v))
                 self.status.update(gap_sq=gap)
+            if self.ckpt_dir and self.ckpt_every \
+                    and (it + 1) % self.ckpt_every == 0:
+                self.save(step=it + 1)
+            if self.replay is None and self.fault.min_iter_time > 0:
+                left = self.fault.min_iter_time \
+                    - (time.monotonic() - iter_t0)
+                if left > 0:
+                    time.sleep(left)
 
         for j in range(n):
-            self.endpoint.send(j, msg_lib.encode(msg_lib.stop()))
+            self._send(j, msg_lib.encode(msg_lib.stop()))
         self.status.update(done=True)
         return RunResult(state=self.state, history=hist,
                          arrivals=self.recorder.to_schedule())
@@ -224,7 +489,12 @@ def run_async(problem: TrilevelProblem, hyper: Hyper,
               state: Optional[AFTOState] = None,
               replay: Optional[Schedule] = None,
               transport=None, data=None,
-              master_hook: Optional[Callable] = None) -> RunResult:
+              master_hook: Optional[Callable] = None,
+              fault: Optional[FaultConfig] = None,
+              ckpt_dir: Optional[str] = None,
+              ckpt_every: int = 0,
+              resume: bool = False,
+              accept_timeout: Optional[float] = None) -> RunResult:
     """Run the async runtime end to end and return a `RunResult` (with
     `.arrivals` carrying the recorded live Schedule).
 
@@ -234,6 +504,11 @@ def run_async(problem: TrilevelProblem, hyper: Hyper,
     processes must be launched separately (`launch/serve.py fed` does
     both ends).  `master_hook(master)` runs after construction, before
     the loop — the status-server attach point.
+
+    fault / ckpt_dir / ckpt_every configure the fault-tolerant layer
+    (liveness deadlines, durable state); `resume=True` restores the
+    latest checkpoint from `ckpt_dir` before the loop and continues the
+    interrupted trajectory.
     """
     import threading
 
@@ -256,21 +531,34 @@ def run_async(problem: TrilevelProblem, hyper: Hyper,
             t = threading.Thread(
                 target=worker_lib.worker_loop,
                 args=(problem, j, transport.worker_endpoint(j)),
+                kwargs={"fault": fault},
                 daemon=True)
             t.start()
             threads.append(t)
         endpoint = transport.master_endpoint()
     else:
         endpoint = transport.master_endpoint()
-        endpoint.wait_for_workers()
+        endpoint.wait_for_workers(timeout=accept_timeout)
 
     master = Master(problem, hyper, endpoint, n_iterations,
                     metrics_fn=metrics_fn, metrics_every=metrics_every,
-                    state=state, replay=replay)
-    if master_hook is not None:
-        master_hook(master)
+                    state=state, replay=replay, fault=fault,
+                    ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
     try:
+        if resume:
+            master.restore()
+        if master_hook is not None:
+            master_hook(master)
         result = master.run()
+    except BaseException:
+        # don't leak worker threads: a failed master still dismisses
+        # its population before propagating
+        for j in range(hyper.n_workers):
+            try:
+                endpoint.send(j, msg_lib.encode(msg_lib.stop()))
+            except Exception:
+                pass
+        raise
     finally:
         endpoint.close()
     for t in threads:

@@ -1,0 +1,318 @@
+"""Elastic membership: liveness tracking + exact worker resharding.
+
+Two halves:
+
+1. `Membership` — the master's failure-detector state machine.  Every
+   frame from worker j refreshes its `last_seen` clock; a worker silent
+   past `FaultConfig.death_timeout` (or surfaced as a transport
+   `DISCONNECT`) is DECLARED DEAD: removed from the tau-forced arrival
+   set, its pending gradient rows dropped (zero-filled rows are exact —
+   Eq. 16 masks inactive rows bitwise), and the degradation recorded in
+   the arrival `Schedule`'s `dead` mask so the trajectory still replays
+   exactly through `run_scanned`.  A rejoin (re-HELLO with a bumped
+   resume epoch, or a late frame from a presumed-dead worker) resurrects
+   it with a fresh staleness clock.  Per-worker (epoch, seq) bookkeeping
+   makes duplicated / retransmitted / dead-session frames exact no-ops.
+
+2. Exact resharding — `make_views` / `assemble_state` partition the
+   canonical `AFTOState` into per-shard worker views (each shard holds
+   its own workers' stacked rows plus a local cut polytope from
+   `cuts.shard_cuts`: replicated a-columns + own workers' b-columns) and
+   reassemble them bitwise.  Because the column partition is exact, a
+   membership change mid-trajectory (workers regrouped over a different
+   shard count on permanent leave/join) is a pure re-layout: a resharded
+   continuation matches the fixed-membership run bit-for-bit
+   (`tests/test_membership.py` pins this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import cuts as cuts_lib
+from repro.core.types import (AFTOState, FlatCuts, InnerState2, InnerState3,
+                              StaleView)
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerance knobs (master + worker sides share one config)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Timeouts and pacing for the fault-tolerant runtime.
+
+    The defaults are generous relative to the test problems' per-push
+    compute (~ms) so healthy runs never trip a deadline; chaos tests
+    shrink them to exercise the failure paths quickly.
+    """
+    heartbeat_every: float = 0.2    # worker liveness beacon period (idle)
+    resend_every: float = 1.0       # worker push-retransmit period
+    refresh_resend_every: float = 1.0   # master refresh-retransmit period
+    death_timeout: float = 10.0     # silence before a worker is declared dead
+    poll_interval: float = 0.02     # master recv poll while blocked
+    all_dead_timeout: float = 30.0  # blocked with zero live workers -> error
+    min_iter_time: float = 0.0      # master pacing floor (chaos smoke)
+    backoff_base: float = 0.05      # worker reconnect backoff (seconds)
+    backoff_cap: float = 2.0
+    backoff_tries: int = 20
+
+
+class Membership:
+    """Per-worker liveness, session epochs and consumed-push sequence
+    numbers — the master's view of who is alive, who is gone, and which
+    frames are from dead sessions."""
+
+    def __init__(self, n_workers: int, cfg: Optional[FaultConfig] = None,
+                 clock=time.monotonic):
+        self.n = int(n_workers)
+        self.cfg = cfg or FaultConfig()
+        self.clock = clock
+        now = clock()
+        self.alive = np.ones(self.n, dtype=bool)
+        self.last_seen = np.full(self.n, now, dtype=np.float64)
+        self.epoch = np.zeros(self.n, dtype=np.int64)
+        self.consumed_seq = np.zeros(self.n, dtype=np.int64)
+        self.deaths = 0
+        self.rejoins = 0
+
+    # -- liveness transitions ----------------------------------------------
+
+    def saw(self, j: int) -> bool:
+        """Any frame from worker j refreshes its clock; returns True if
+        this resurrects a presumed-dead worker (it was slow, not gone)."""
+        j = int(j)
+        self.last_seen[j] = self.clock()
+        if not self.alive[j]:
+            self.alive[j] = True
+            self.rejoins += 1
+            return True
+        return False
+
+    def hello(self, j: int, epoch: int) -> bool:
+        """Process a HELLO; returns True if the master must replay the
+        worker's last consumed local point (a rejoin: the worker was
+        dead, or announces a new session epoch)."""
+        j = int(j)
+        was_dead = self.saw(j)
+        if int(epoch) > int(self.epoch[j]):
+            # new session: the worker restarted, its push sequence
+            # restarts at 1 — reset the consumed counter so its fresh
+            # pushes aren't discarded as duplicates
+            self.epoch[j] = int(epoch)
+            self.consumed_seq[j] = 0
+            return True
+        return was_dead
+
+    def disconnect(self, j: int) -> bool:
+        """Transport surfaced a broken connection; returns True if the
+        worker was alive (newly declared dead)."""
+        j = int(j)
+        newly = bool(self.alive[j])
+        if newly:
+            self.alive[j] = False
+            self.deaths += 1
+        return newly
+
+    def overdue(self) -> List[int]:
+        """Live workers silent past the death deadline."""
+        now = self.clock()
+        return [int(j) for j in range(self.n)
+                if self.alive[j]
+                and now - self.last_seen[j] > self.cfg.death_timeout]
+
+    def mark_dead(self, j: int) -> None:
+        j = int(j)
+        if self.alive[j]:
+            self.alive[j] = False
+            self.deaths += 1
+
+    @property
+    def n_live(self) -> int:
+        return int(self.alive.sum())
+
+    def observe_epoch(self, j: int, epoch: int) -> bool:
+        """Adopt a newer session epoch seen on any frame (covers a lost
+        rejoin HELLO: the first push of the new session advances the
+        epoch and resets the consumed counter).  Returns True if the
+        epoch advanced."""
+        j = int(j)
+        if int(epoch) > int(self.epoch[j]):
+            self.epoch[j] = int(epoch)
+            self.consumed_seq[j] = 0
+            return True
+        return False
+
+    def fresh_push(self, j: int, epoch: int, seq: int) -> bool:
+        """True iff a PUSH with this (epoch, seq) is new — from the
+        worker's current session and not yet consumed.  Stale-session
+        frames are dropped; a current-session duplicate seq means the
+        worker never got its refresh (retransmit it)."""
+        j = int(j)
+        return (int(epoch) == int(self.epoch[j])
+                and int(seq) > int(self.consumed_seq[j]))
+
+    def consumed(self, j: int, seq: int) -> None:
+        self.consumed_seq[int(j)] = int(seq)
+
+    def reset_sessions(self) -> None:
+        """Forget connection-scoped bookkeeping (epochs + consumed
+        sequence numbers) — used when a resumed master faces a fresh
+        worker population.  Liveness clocks restart too."""
+        self.epoch[:] = 0
+        self.consumed_seq[:] = 0
+        self.alive[:] = True
+        self.last_seen[:] = self.clock()
+
+    def status(self) -> List[Dict]:
+        """Per-worker liveness snapshot for the serve /status endpoint."""
+        now = self.clock()
+        return [{"worker": j,
+                 "alive": bool(self.alive[j]),
+                 "last_seen_age": float(now - self.last_seen[j]),
+                 "epoch": int(self.epoch[j]),
+                 "consumed_seq": int(self.consumed_seq[j])}
+                for j in range(self.n)]
+
+    # -- durable-master support --------------------------------------------
+
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        return {"epoch": self.epoch.copy(),
+                "consumed_seq": self.consumed_seq.copy(),
+                "alive": self.alive.copy()}
+
+    def load_state_dict(self, d: Dict[str, np.ndarray]) -> None:
+        self.epoch = np.asarray(d["epoch"], np.int64).copy()
+        self.consumed_seq = np.asarray(d["consumed_seq"], np.int64).copy()
+        self.alive = np.asarray(d["alive"], bool).copy()
+        self.last_seen[:] = self.clock()
+
+
+# ---------------------------------------------------------------------------
+# exact resharding of the canonical state over worker groups
+# ---------------------------------------------------------------------------
+
+# every AFTOState piece with a leading worker axis (nested fields listed
+# explicitly so a new stacked field fails the conformance test loudly
+# instead of silently staying un-resharded)
+_STACKED_TOP = ("X1", "X2", "X3", "theta")
+
+
+@dataclasses.dataclass
+class ShardView:
+    """One shard's worker-partitioned slice of the canonical state:
+    its workers' stacked rows plus the local cut polytopes (replicated
+    a-columns + own workers' b-columns, `cuts.shard_spec` layout)."""
+    index: int
+    n_shards: int
+    stacks: Dict   # field name -> (n_loc, ...) tree (incl. nested pieces)
+    cuts_i: FlatCuts
+    cuts_ii: FlatCuts
+
+
+def _block(tree, w: int, n_loc: int):
+    return jax.tree.map(lambda x: x[w * n_loc:(w + 1) * n_loc], tree)
+
+
+def _n_workers_of(state: AFTOState) -> int:
+    return int(np.shape(state.stale.t_hat)[0])
+
+
+def make_views(state: AFTOState, n_shards: int) -> List[ShardView]:
+    """Partition the canonical state into `n_shards` worker views.  The
+    worker axis must divide evenly (contiguous groups — the same layout
+    `Schedule.worker_shards` and the sharded engine use)."""
+    n = _n_workers_of(state)
+    if n % n_shards != 0:
+        raise ValueError(
+            f"{n} workers do not partition over {n_shards} shards")
+    n_loc = n // n_shards
+    ci = cuts_lib.shard_cuts(state.cuts_i, n_shards)
+    cii = cuts_lib.shard_cuts(state.cuts_ii, n_shards)
+    views = []
+    for w in range(n_shards):
+        stacks = {f: _block(getattr(state, f), w, n_loc)
+                  for f in _STACKED_TOP}
+        stacks["stale"] = StaleView(
+            z1=_block(state.stale.z1, w, n_loc),
+            z2=_block(state.stale.z2, w, n_loc),
+            z3=_block(state.stale.z3, w, n_loc),
+            lam=_block(state.stale.lam, w, n_loc),
+            theta=_block(state.stale.theta, w, n_loc),
+            t_hat=_block(state.stale.t_hat, w, n_loc))
+        stacks["inner3_x3"] = _block(state.inner3.x3, w, n_loc)
+        stacks["inner3_phi"] = _block(state.inner3.phi, w, n_loc)
+        stacks["inner2_x2"] = _block(state.inner2.x2, w, n_loc)
+        stacks["inner2_phi"] = _block(state.inner2.phi, w, n_loc)
+        views.append(ShardView(
+            index=w, n_shards=n_shards, stacks=stacks,
+            cuts_i=FlatCuts(a=ci.a[w], c=ci.c, active=ci.active,
+                            age=ci.age, spec=ci.spec),
+            cuts_ii=FlatCuts(a=cii.a[w], c=cii.c, active=cii.active,
+                             age=cii.age, spec=cii.spec)))
+    return views
+
+
+def _concat(trees):
+    import jax.numpy as jnp
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
+
+
+def assemble_state(master_state: AFTOState,
+                   views: List[ShardView]) -> AFTOState:
+    """Reassemble the canonical state from per-shard views (inverse of
+    `make_views`, bit-exact).  Master-replicated fields (z's, lam,
+    gamma_k, inner consensus/slack pieces, t) come from `master_state`;
+    every worker-partitioned piece and the cut matrices come from the
+    views."""
+    import jax.numpy as jnp
+    views = sorted(views, key=lambda v: v.index)
+    n_shards = len(views)
+    if any(v.n_shards != n_shards for v in views) \
+            or [v.index for v in views] != list(range(n_shards)):
+        raise ValueError("views do not form a complete shard set")
+
+    def cat(name):
+        return _concat([v.stacks[name] for v in views])
+
+    ci = FlatCuts(a=jnp.stack([v.cuts_i.a for v in views]),
+                  c=views[0].cuts_i.c, active=views[0].cuts_i.active,
+                  age=views[0].cuts_i.age, spec=views[0].cuts_i.spec)
+    cii = FlatCuts(a=jnp.stack([v.cuts_ii.a for v in views]),
+                   c=views[0].cuts_ii.c, active=views[0].cuts_ii.active,
+                   age=views[0].cuts_ii.age, spec=views[0].cuts_ii.spec)
+    stale_parts = [v.stacks["stale"] for v in views]
+    return dataclasses.replace(
+        master_state,
+        X1=cat("X1"), X2=cat("X2"), X3=cat("X3"), theta=cat("theta"),
+        stale=StaleView(
+            z1=_concat([s.z1 for s in stale_parts]),
+            z2=_concat([s.z2 for s in stale_parts]),
+            z3=_concat([s.z3 for s in stale_parts]),
+            lam=_concat([s.lam for s in stale_parts]),
+            theta=_concat([s.theta for s in stale_parts]),
+            t_hat=_concat([s.t_hat for s in stale_parts])),
+        inner3=InnerState3(x3=cat("inner3_x3"),
+                           z3=master_state.inner3.z3,
+                           phi=cat("inner3_phi")),
+        inner2=InnerState2(x2=cat("inner2_x2"),
+                           z2=master_state.inner2.z2,
+                           phi=cat("inner2_phi"),
+                           s=master_state.inner2.s,
+                           gamma=master_state.inner2.gamma),
+        cuts_i=cuts_lib.unshard_cuts(ci, master_state.cuts_i.spec),
+        cuts_ii=cuts_lib.unshard_cuts(cii, master_state.cuts_ii.spec))
+
+
+def reshard_state(state: AFTOState, n_old: int, n_new: int) -> AFTOState:
+    """Re-partition the canonical state from `n_old` worker groups to
+    `n_new` — the membership-change operation.  Both directions go
+    through the exact column partition, so the result is bit-identical
+    to the input state: a continuation from it matches the
+    fixed-membership run bitwise."""
+    canonical = assemble_state(state, make_views(state, n_old))
+    return assemble_state(canonical, make_views(canonical, n_new))

@@ -22,12 +22,17 @@ import dataclasses
 import io
 import json
 import struct
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 HELLO, PUSH, REFRESH, STOP = "hello", "push", "refresh", "stop"
+# fault-tolerance protocol surface: HEARTBEAT keeps a silent-but-alive
+# worker out of the master's dead set; DISCONNECT never crosses the wire
+# — it is synthesized LOCALLY (by a transport reader thread or a chaos
+# supervisor) so the master loop can distinguish "slow" from "gone".
+HEARTBEAT, DISCONNECT = "heartbeat", "disconnect"
 
 
 @dataclasses.dataclass
@@ -45,6 +50,27 @@ def encode(msg: Message) -> bytes:
     np.savez(buf, **{k: np.asarray(v) for k, v in msg.arrays.items()})
     header = json.dumps({"kind": msg.kind, "meta": msg.meta}).encode()
     return struct.pack(">I", len(header)) + header + buf.getvalue()
+
+
+def peek_kind(data: bytes) -> Optional[str]:
+    """The frame's kind without decoding the array payload (None if the
+    frame is truncated/corrupt) — what chaos scripts key faults on."""
+    try:
+        (hlen,) = struct.unpack(">I", data[:4])
+        return json.loads(data[4:4 + hlen].decode())["kind"]
+    except Exception:
+        return None
+
+
+def peek_meta(data: bytes) -> Optional[Dict]:
+    """The frame's meta dict without decoding the array payload (None if
+    truncated/corrupt) — lets chaos scripts key on push sequence
+    numbers without paying for the npz."""
+    try:
+        (hlen,) = struct.unpack(">I", data[:4])
+        return json.loads(data[4:4 + hlen].decode())["meta"]
+    except Exception:
+        return None
 
 
 def decode(data: bytes) -> Message:
@@ -92,17 +118,36 @@ def unpack_tree(msg: Message, name: str, template):
 # message constructors (the whole protocol surface)
 # ---------------------------------------------------------------------------
 
-def hello(worker: int) -> Message:
-    """Worker -> master handshake (TCP connection registration)."""
-    return Message(HELLO, {"worker": int(worker)}, {})
+def hello(worker: int, epoch: int = 0) -> Message:
+    """Worker -> master handshake / rejoin announcement.  `epoch` is the
+    worker's session counter: 0 for a first connection, incremented on
+    every reconnect, so the master can replay the worker's last consumed
+    local point and discard frames from dead sessions."""
+    return Message(HELLO, {"worker": int(worker), "epoch": int(epoch)}, {})
 
 
-def push(worker: int, n_pushes: int, grads: Sequence) -> Message:
+def heartbeat(worker: int, epoch: int = 0) -> Message:
+    """Worker -> master liveness beacon (sent while idle-waiting for a
+    refresh, so a slow worker is never declared dead)."""
+    return Message(HEARTBEAT, {"worker": int(worker),
+                               "epoch": int(epoch)}, {})
+
+
+def disconnect(worker: int) -> Message:
+    """LOCAL frame a transport reader (or chaos supervisor) enqueues when
+    worker `worker`'s connection breaks — never sent over a wire."""
+    return Message(DISCONNECT, {"worker": int(worker)}, {})
+
+
+def push(worker: int, n_pushes: int, grads: Sequence,
+         epoch: int = 0) -> Message:
     """Worker -> master: the Eq. 16 gradient triple (g1_j, g2_j, g3_j)
-    at the worker's current local point.  `n_pushes` counts this
-    worker's pushes (master-side sanity / debugging)."""
+    at the worker's current local point.  `n_pushes` is the within-epoch
+    push sequence number — the master consumes each (epoch, seq) at most
+    once, so duplicated / retransmitted frames are exact no-ops."""
     g1, g2, g3 = grads
-    return Message(PUSH, {"worker": int(worker), "n_pushes": int(n_pushes)},
+    return Message(PUSH, {"worker": int(worker), "n_pushes": int(n_pushes),
+                          "epoch": int(epoch)},
                    pack_trees({"g1": g1, "g2": g2, "g3": g3}))
 
 

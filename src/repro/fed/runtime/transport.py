@@ -5,7 +5,7 @@ between one master endpoint and N worker endpoints; the master/worker
 loops never see sockets or queues, only this interface:
 
   master endpoint:  recv(timeout) -> bytes | None,  send(j, bytes)
-  worker endpoint:  recv() -> bytes,                send(bytes)
+  worker endpoint:  recv(timeout) -> bytes | None,  send(bytes)
 
 `InProcTransport` pairs the endpoints over `queue.Queue`s — fully
 deterministic when the master replays a fixed arrival order, which is
@@ -13,6 +13,15 @@ what the conformance tests run on.  `TcpTransport` carries the same
 frames over sockets with a 4-byte length prefix and a HELLO handshake
 that maps connections to worker ids — the real multi-process path
 (`launch/serve.py fed --transport tcp`).
+
+Failure surface: a broken worker connection is never swallowed — the
+master-side reader thread enqueues a synthetic `messages.disconnect(j)`
+frame so the master loop can distinguish "slow" (heartbeats still
+flowing) from "gone" (DISCONNECT / deadline exceeded).  After the
+initial handshake the TCP master keeps accepting connections: a worker
+that re-HELLOs (with a bumped resume epoch) replaces its old socket and
+the HELLO frame is surfaced to the master loop, which replays the
+worker's last consumed local point.
 """
 from __future__ import annotations
 
@@ -40,9 +49,9 @@ class MasterEndpoint:
 
 
 class WorkerEndpoint:
-    """Worker side: blocking recv from the master + send to it."""
+    """Worker side: recv from the master (None on timeout) + send."""
 
-    def recv(self) -> bytes:
+    def recv(self, timeout: Optional[float] = None) -> Optional[bytes]:
         raise NotImplementedError
 
     def send(self, frame: bytes) -> None:
@@ -75,8 +84,13 @@ class _InProcWorker(WorkerEndpoint):
     def __init__(self, hub: "InProcTransport", worker: int):
         self._hub, self._worker = hub, worker
 
-    def recv(self) -> bytes:
-        return self._hub.to_worker[self._worker].get()
+    def recv(self, timeout: Optional[float] = None) -> Optional[bytes]:
+        try:
+            return self._hub.to_worker[self._worker].get(timeout=timeout) \
+                if timeout is not None \
+                else self._hub.to_worker[self._worker].get()
+        except queue.Empty:
+            return None
 
     def send(self, frame: bytes) -> None:
         self._hub.to_master.put(frame)
@@ -86,7 +100,9 @@ class InProcTransport:
     """Queue-pair transport for same-process (threaded) runs.
 
     Frames still round-trip through `messages.encode`/`decode`, so every
-    test on this transport exercises the real wire format."""
+    test on this transport exercises the real wire format.  A rejoining
+    worker simply requests `worker_endpoint(j)` again — the queues
+    persist across worker sessions, like a master-side mailbox."""
 
     def __init__(self, n_workers: int):
         self.n_workers = int(n_workers)
@@ -127,37 +143,124 @@ def _recv_frame(sock: socket.socket) -> bytes:
 class _TcpMaster(MasterEndpoint):
     """Accepts `n_workers` connections, resolves each to a worker id via
     its HELLO frame, then multiplexes per-connection reader threads into
-    one inbound queue."""
+    one inbound queue.  After the initial handshake an accept thread
+    keeps running so crashed workers can reconnect: a re-HELLO replaces
+    the worker's socket and the HELLO frame is surfaced to the master
+    loop (which owns the resume protocol)."""
 
     def __init__(self, host: str, port: int, n_workers: int):
         self.n_workers = n_workers
         self._server = socket.create_server((host, port))
         self.port = self._server.getsockname()[1]
         self._socks: Dict[int, socket.socket] = {}
+        self._lock = threading.Lock()
         self._inbound: "queue.Queue[bytes]" = queue.Queue()
         self._threads: List[threading.Thread] = []
+        self._closed = False
 
-    def wait_for_workers(self) -> None:
+    def _handshake(self, conn: socket.socket):
+        """Read + validate one HELLO; returns (worker id, raw frame).
+        The frame is NOT enqueued — callers decide."""
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        raw = _recv_frame(conn)
+        m = msg_lib.decode(raw)
+        if m.kind != msg_lib.HELLO:
+            raise ConnectionError(
+                f"expected hello handshake, got {m.kind!r}")
+        j = int(m.meta["worker"])
+        if not 0 <= j < self.n_workers:
+            raise ConnectionError(
+                f"hello from out-of-range worker id {j} "
+                f"(expected 0..{self.n_workers - 1})")
+        return j, raw
+
+    def wait_for_workers(self, timeout: Optional[float] = None) -> None:
+        """Block until every worker has completed the HELLO handshake.
+
+        Rejects duplicate and out-of-range worker ids loudly (a
+        duplicate id would silently adopt another worker's row
+        assignment), and fails the launch with `TimeoutError` if the
+        full population hasn't arrived within `timeout` seconds.  On
+        success, starts the reconnect accept loop."""
+        import time as _time
+        deadline = None if timeout is None else _time.monotonic() + timeout
         while len(self._socks) < self.n_workers:
-            conn, _ = self._server.accept()
-            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            m = msg_lib.decode(_recv_frame(conn))
-            if m.kind != msg_lib.HELLO:
+            if deadline is not None:
+                self._server.settimeout(max(0.0,
+                                            deadline - _time.monotonic()))
+            try:
+                conn, _ = self._server.accept()
+            except (socket.timeout, TimeoutError):
+                raise TimeoutError(
+                    f"timed out waiting for workers: "
+                    f"{len(self._socks)}/{self.n_workers} connected "
+                    f"(missing {sorted(set(range(self.n_workers)) - set(self._socks))})")
+            j, _ = self._handshake(conn)
+            if j in self._socks:
+                conn.close()
                 raise ConnectionError(
-                    f"expected hello handshake, got {m.kind!r}")
-            j = int(m.meta["worker"])
-            self._socks[j] = conn
-            t = threading.Thread(target=self._reader, args=(conn,),
-                                 daemon=True)
-            t.start()
-            self._threads.append(t)
+                    f"duplicate hello for worker id {j}; its socket is "
+                    f"already registered")
+            self._install(j, conn)
+        self._server.settimeout(None)
+        self._start_accept_loop()
 
-    def _reader(self, conn: socket.socket) -> None:
+    def _install(self, j: int, conn: socket.socket) -> None:
+        with self._lock:
+            old = self._socks.get(j)
+            self._socks[j] = conn
+        if old is not None:
+            try:
+                old.close()
+            except OSError:
+                pass
+        t = threading.Thread(target=self._reader, args=(conn, j),
+                             daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def _start_accept_loop(self) -> None:
+        t = threading.Thread(target=self._accept_loop, daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def _accept_loop(self) -> None:
+        """Post-launch accepts: reconnecting workers re-HELLO (with a
+        resume epoch); the replacement socket is installed and the HELLO
+        surfaced to the master loop for the row-replay protocol."""
+        while not self._closed:
+            try:
+                conn, _ = self._server.accept()
+            except OSError:
+                return          # server socket closed
+            try:
+                conn.settimeout(10.0)
+                j, raw_hello = self._handshake(conn)
+                conn.settimeout(None)
+            except (ConnectionError, OSError, TimeoutError):
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                continue
+            self._install(j, conn)
+            # surface the original HELLO (it carries the resume epoch)
+            # so the master loop can run the rejoin/row-replay protocol
+            self._inbound.put(raw_hello)
+
+    def _reader(self, conn: socket.socket, worker: int) -> None:
         try:
             while True:
                 self._inbound.put(_recv_frame(conn))
         except (ConnectionError, OSError):
-            return   # worker hung up (normal after STOP)
+            # surface the hangup instead of swallowing it — but only if
+            # this connection is still the worker's registered socket
+            # (a replaced socket dying must not kill the fresh session)
+            with self._lock:
+                current = self._socks.get(worker) is conn
+            if current and not self._closed:
+                self._inbound.put(msg_lib.encode(
+                    msg_lib.disconnect(worker)))
 
     def recv(self, timeout: Optional[float] = None) -> Optional[bytes]:
         try:
@@ -167,10 +270,21 @@ class _TcpMaster(MasterEndpoint):
             return None
 
     def send(self, worker: int, frame: bytes) -> None:
-        _send_frame(self._socks[worker], frame)
+        with self._lock:
+            sock = self._socks.get(worker)
+        if sock is None:
+            raise ConnectionError(f"no connection for worker {worker}")
+        try:
+            _send_frame(sock, frame)
+        except (OSError, ValueError) as e:
+            raise ConnectionError(
+                f"send to worker {worker} failed: {e}") from e
 
     def close(self) -> None:
-        for s in self._socks.values():
+        self._closed = True
+        with self._lock:
+            socks = list(self._socks.values())
+        for s in socks:
             try:
                 s.close()
             except OSError:
@@ -179,16 +293,35 @@ class _TcpMaster(MasterEndpoint):
 
 
 class _TcpWorker(WorkerEndpoint):
-    def __init__(self, host: str, port: int, worker: int):
+    def __init__(self, host: str, port: int, worker: int, epoch: int = 0):
         self._sock = socket.create_connection((host, port))
         self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        _send_frame(self._sock, msg_lib.encode(msg_lib.hello(worker)))
+        _send_frame(self._sock, msg_lib.encode(
+            msg_lib.hello(worker, epoch)))
 
-    def recv(self) -> bytes:
-        return _recv_frame(self._sock)
+    def recv(self, timeout: Optional[float] = None) -> Optional[bytes]:
+        if timeout is None:
+            self._sock.settimeout(None)
+            return _recv_frame(self._sock)
+        # Poll a single byte under the timeout, then block for the rest
+        # of the frame: an idle timeout never desyncs the byte stream
+        # (frames are small and sent whole, so the tail follows at once).
+        self._sock.settimeout(timeout)
+        try:
+            first = self._sock.recv(1)
+        except (socket.timeout, TimeoutError):
+            return None
+        if not first:
+            raise ConnectionError("master closed the connection")
+        self._sock.settimeout(None)
+        (n,) = struct.unpack(">I", first + _recv_exact(self._sock, 3))
+        return _recv_exact(self._sock, n)
 
     def send(self, frame: bytes) -> None:
-        _send_frame(self._sock, frame)
+        try:
+            _send_frame(self._sock, frame)
+        except (OSError, ValueError) as e:
+            raise ConnectionError(f"send to master failed: {e}") from e
 
     def close(self) -> None:
         self._sock.close()
@@ -200,8 +333,11 @@ class TcpTransport:
     Master side: ``TcpTransport(n_workers).master_endpoint()`` binds an
     ephemeral port (read it back from ``.port``) and blocks in
     `wait_for_workers` until all workers have completed the HELLO
-    handshake.  Worker side (separate process):
-    ``TcpTransport.connect(host, port, worker)``.
+    handshake (pass `timeout=` to fail a missing worker loudly).
+    Worker side (separate process):
+    ``TcpTransport.connect(host, port, worker, epoch)`` — reconnecting
+    workers bump `epoch` so the master can replay their last consumed
+    local point.
     """
 
     def __init__(self, n_workers: int, host: str = "127.0.0.1",
@@ -217,5 +353,6 @@ class TcpTransport:
         return self._master
 
     @staticmethod
-    def connect(host: str, port: int, worker: int) -> WorkerEndpoint:
-        return _TcpWorker(host, port, worker)
+    def connect(host: str, port: int, worker: int,
+                epoch: int = 0) -> WorkerEndpoint:
+        return _TcpWorker(host, port, worker, epoch)

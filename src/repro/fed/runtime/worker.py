@@ -9,29 +9,58 @@ local copy is bitwise the master's row — the worker never recomputes a
 gradient the master won't use, and every gradient it pushes is evaluated
 exactly where the scanned reference would evaluate it.
 
+Fault tolerance (the worker half of the ISSUE 7 protocol):
+
+  - The session opens with `hello(worker, epoch)` — epoch 0 for a first
+    connection, bumped on every reconnect, so the master can replay the
+    worker's last consumed local point and discard dead-session frames.
+  - While idle the worker emits HEARTBEATs (period
+    `FaultConfig.heartbeat_every`), so slow is never mistaken for gone.
+  - An unacknowledged push is retransmitted every
+    `FaultConfig.resend_every` — pushes carry (epoch, seq), so the
+    master consumes each at most once and duplicates are exact no-ops.
+  - Refreshes are deduplicated by master iteration `t`: a retransmitted
+    refresh for an already-computed point triggers an immediate push
+    retransmit instead of recomputation (the rows are bitwise the same,
+    so recomputing would be exact too — just wasted).
+  - Corrupt frames (a connection cut mid-write, a chaos `cut` fault)
+    are skipped; the retransmit protocol recovers the payload.
+
 `main()` is the multi-process entry (`python -m repro.fed.runtime.worker
 --problem quadratic --worker 0 --port P`): problem closures aren't
 picklable, so subprocess workers rebuild the problem by name from
-`problems.py` and connect over TCP.
+`problems.py` and connect over TCP — with capped-exponential-backoff
+reconnects (seeded jitter) and an epoch bump whenever an established
+session breaks.
 """
 from __future__ import annotations
 
 import argparse
+import time
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import TrilevelProblem
 from repro.fed.runtime import messages as msg_lib
 from repro.fed.runtime import transport as transport_lib
+from repro.fed.runtime.membership import FaultConfig
 
 
 def worker_loop(problem: TrilevelProblem, worker: int,
                 endpoint: transport_lib.WorkerEndpoint,
-                max_pushes: Optional[int] = None) -> int:
+                max_pushes: Optional[int] = None,
+                epoch: int = 0,
+                fault: Optional[FaultConfig] = None) -> int:
     """Run worker `worker`'s compute loop until STOP (or `max_pushes`);
-    returns the number of gradients pushed."""
+    returns the number of gradients pushed.  `epoch` is the session
+    counter announced in the opening HELLO (bumped by reconnect loops).
+
+    Raises `ConnectionError` if the transport breaks mid-session — the
+    caller (supervisor thread / CLI reconnect loop) owns the retry."""
+    fault = fault or FaultConfig()
     data_j = jax.tree.map(lambda d: jnp.asarray(d)[worker], problem.data)
     templates = (problem.x1_init, problem.x2_init, problem.x3_init)
 
@@ -41,25 +70,62 @@ def worker_loop(problem: TrilevelProblem, worker: int,
             lambda a, b, c: problem.f1(data_j, a, b, c),
             argnums=(0, 1, 2))(x1, x2, x3)
 
+    endpoint.send(msg_lib.encode(msg_lib.hello(worker, epoch)))
     n_pushes = 0
+    last_t = -1                 # newest master iteration acted on
+    last_push_frame: Optional[bytes] = None   # unacked push, for resends
+    last_push_tx = 0.0
+
+    def push_current() -> None:
+        nonlocal last_push_tx
+        if last_push_frame is not None:
+            endpoint.send(last_push_frame)
+            last_push_tx = time.monotonic()
+
     while max_pushes is None or n_pushes < max_pushes:
-        m = msg_lib.decode(endpoint.recv())
+        frame = endpoint.recv(timeout=fault.heartbeat_every)
+        if frame is None:
+            # idle: retransmit an unacked push (the master may have lost
+            # it), otherwise beacon liveness so slow != dead
+            if last_push_frame is not None and \
+                    time.monotonic() - last_push_tx > fault.resend_every:
+                push_current()
+            else:
+                endpoint.send(msg_lib.encode(
+                    msg_lib.heartbeat(worker, epoch)))
+            continue
+        try:
+            m = msg_lib.decode(frame)
+        except Exception:
+            continue            # corrupt frame; retransmits recover it
         if m.kind == msg_lib.STOP:
             break
         if m.kind != msg_lib.REFRESH:
             raise ValueError(f"worker got unexpected {m.kind!r} message")
+        t = int(m.meta.get("t", 0))
+        if t <= last_t:
+            # duplicate refresh: our push for this point was lost in
+            # flight — the rows are unchanged, so retransmit instead of
+            # recomputing the identical gradients
+            push_current()
+            continue
+        last_t = t
         x1, x2, x3 = (jax.tree.map(jnp.asarray, r) for r in
                       msg_lib.refresh_rows(m, templates))
         grads = grad_fn(x1, x2, x3)
         n_pushes += 1
-        endpoint.send(msg_lib.encode(
-            msg_lib.push(worker, n_pushes, grads)))
+        last_push_frame = msg_lib.encode(
+            msg_lib.push(worker, n_pushes, grads, epoch=epoch))
+        push_current()
     endpoint.close()
     return n_pushes
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
-    """Subprocess worker entry (TCP transport only)."""
+    """Subprocess worker entry (TCP transport only) with a reconnect
+    loop: capped exponential backoff + seeded jitter on connection
+    refusal, and an epoch bump whenever an ESTABLISHED session breaks
+    (so the master replays the last consumed local point)."""
     from repro.fed.runtime import problems as problems_lib
 
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -71,15 +137,41 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--n-workers", type=int, default=2)
     p.add_argument("--dim", type=int, default=3)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--epoch", type=int, default=0,
+                   help="starting session epoch (respawned workers pass "
+                        "their previous epoch + 1)")
     args = p.parse_args(argv)
 
     problem, _ = problems_lib.build(
         args.problem, n_workers=args.n_workers, dim=args.dim,
         seed=args.seed)
-    endpoint = transport_lib.TcpTransport.connect(
-        args.host, args.port, args.worker)
-    worker_loop(problem, args.worker, endpoint)
-    return 0
+    fault = FaultConfig()
+    rng = np.random.default_rng((args.seed, args.worker))
+    epoch = args.epoch
+    tries = 0
+    while True:
+        try:
+            endpoint = transport_lib.TcpTransport.connect(
+                args.host, args.port, args.worker, epoch=epoch)
+        except OSError:
+            tries += 1
+            if tries > fault.backoff_tries:
+                raise
+            delay = min(fault.backoff_cap,
+                        fault.backoff_base * 2.0 ** (tries - 1))
+            time.sleep(delay * (0.5 + float(rng.random())))
+            continue
+        tries = 0
+        try:
+            worker_loop(problem, args.worker, endpoint,
+                        epoch=epoch, fault=fault)
+            return 0
+        except (ConnectionError, OSError):
+            # the session was established and then broke: the master saw
+            # (or will see) this session die, so the next one must
+            # announce itself as new
+            epoch += 1
+            time.sleep(fault.backoff_base)
 
 
 if __name__ == "__main__":

@@ -151,6 +151,7 @@ def run_fed(args):
     (RunResult, status_server | None)."""
     from repro.fed.runtime import problems as problems_lib
     from repro.fed.runtime import run_async
+    from repro.fed.runtime.membership import FaultConfig
     from repro.fed.runtime.transport import TcpTransport
 
     problem, hyper = problems_lib.build(
@@ -164,6 +165,9 @@ def run_fed(args):
         print(f"master listening on 127.0.0.1:{transport.port}")
         procs = spawn_tcp_workers(args, transport.port)
 
+    fault = FaultConfig(
+        death_timeout=args.death_timeout,
+        min_iter_time=args.min_iter_time)
     status_server = None
 
     def hook(master):
@@ -177,7 +181,11 @@ def run_fed(args):
         result = run_async(
             problem, hyper, n_iterations=args.iters,
             metrics_every=args.metrics_every, transport=transport,
-            master_hook=hook)
+            master_hook=hook, fault=fault,
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+            resume=args.resume,
+            accept_timeout=(args.accept_timeout
+                            if args.accept_timeout > 0 else None))
     finally:
         for p in procs:
             p.wait(timeout=60)
@@ -198,6 +206,24 @@ def main_fed(argv: Optional[Sequence[str]] = None) -> int:
                     help="TCP master port (0 = ephemeral)")
     ap.add_argument("--status-port", type=int, default=-1,
                     help="HTTP status port (0 = ephemeral, -1 = off)")
+    ap.add_argument("--accept-timeout", type=float, default=0.0,
+                    help="seconds to wait for the full worker population "
+                         "at launch (0 = wait forever)")
+    ap.add_argument("--death-timeout", type=float, default=10.0,
+                    help="seconds of silence before a worker is "
+                         "declared dead")
+    ap.add_argument("--min-iter-time", type=float, default=0.0,
+                    help="master pacing floor per iteration (seconds); "
+                         "the chaos smoke uses it to keep a run alive "
+                         "long enough to kill and respawn a worker")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="directory for durable master checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint the master carry every K "
+                         "iterations (0 = off)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint from --ckpt-dir "
+                         "before running")
     args = ap.parse_args(argv)
 
     result, status_server = run_fed(args)

@@ -1,0 +1,175 @@
+"""Array-dict checkpoints: the async master's durable-state substrate.
+
+Satellite contract (ISSUE 7): `checkpoint/io.py` round-trips the
+master's FULL runtime carry — canonical state, recorder history, pending
+push map, membership bookkeeping — and a corrupted or truncated
+checkpoint raises `CheckpointError` instead of resuming from garbage.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (CheckpointError, latest_step,
+                                 load_array_dict, save_array_dict,
+                                 save_checkpoint)
+
+from conftest import make_hyper, make_quadratic_problem
+
+
+# ---------------------------------------------------------------------------
+# array-dict round trip
+# ---------------------------------------------------------------------------
+
+def _sample():
+    return {
+        "f32": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "i64": np.array([1, -2, 3], np.int64),
+        "bools": np.array([True, False, True]),
+        "scalar": np.asarray(7, np.int64),
+        "empty_hist": np.zeros((0, 4), np.float32),
+    }
+
+
+def test_array_dict_round_trip(tmp_path):
+    d = os.fspath(tmp_path / "ck")
+    path = save_array_dict(d, _sample(), step=3)
+    assert path.endswith("step_00000003")
+    out = load_array_dict(d)
+    assert sorted(out) == sorted(_sample())
+    for k, v in _sample().items():
+        np.testing.assert_array_equal(out[k], v)
+        assert out[k].dtype == v.dtype
+
+
+def test_array_dict_steps_and_retention(tmp_path):
+    d = os.fspath(tmp_path / "ck")
+    for step in (1, 2, 3, 4, 5):
+        save_array_dict(d, {"x": np.full(2, step)}, step=step, keep=3)
+    assert latest_step(d) == 5
+    assert sorted(os.listdir(d)) == [f"step_0000000{s}" for s in (3, 4, 5)]
+    np.testing.assert_array_equal(load_array_dict(d, step=4)["x"],
+                                  [4, 4])
+    np.testing.assert_array_equal(load_array_dict(d)["x"], [5, 5])
+
+
+def test_array_dict_missing_raises(tmp_path):
+    with pytest.raises(CheckpointError, match="no checkpoints"):
+        load_array_dict(os.fspath(tmp_path / "nope"))
+
+
+def test_array_dict_corruption_detected(tmp_path):
+    d = os.fspath(tmp_path / "ck")
+    save_array_dict(d, _sample(), step=1)
+    npz = os.path.join(d, "step_00000001", "arrays.npz")
+    blob = bytearray(open(npz, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF            # flip one byte mid-payload
+    with open(npz, "wb") as f:
+        f.write(blob)
+    with pytest.raises(CheckpointError, match="checksum"):
+        load_array_dict(d)
+
+
+def test_array_dict_truncation_detected(tmp_path):
+    d = os.fspath(tmp_path / "ck")
+    save_array_dict(d, _sample(), step=1)
+    npz = os.path.join(d, "step_00000001", "arrays.npz")
+    blob = open(npz, "rb").read()
+    with open(npz, "wb") as f:
+        f.write(blob[: len(blob) // 2])     # torn write
+    with pytest.raises(CheckpointError, match="checksum"):
+        load_array_dict(d)
+
+
+def test_array_dict_unreadable_manifest_raises(tmp_path):
+    d = os.fspath(tmp_path / "ck")
+    save_array_dict(d, _sample(), step=1)
+    man = os.path.join(d, "step_00000001", "manifest.json")
+    with open(man, "w") as f:
+        f.write("{not json")
+    with pytest.raises(CheckpointError, match="manifest"):
+        load_array_dict(d)
+
+
+def test_array_dict_rejects_template_checkpoints(tmp_path):
+    """The two checkpoint families must not be confused: loading a
+    template-shaped checkpoint through the array-dict path fails with a
+    pointed error, not garbage keys."""
+    d = os.fspath(tmp_path / "ck")
+    save_checkpoint(d, {"w": np.zeros(3)}, step=1)
+    with pytest.raises(CheckpointError, match="load_checkpoint"):
+        load_array_dict(d)
+
+
+# ---------------------------------------------------------------------------
+# the master's full runtime carry round-trips
+# ---------------------------------------------------------------------------
+
+def _master(ckpt_dir):
+    from repro.fed.runtime.master import Master
+    from repro.fed.runtime.transport import InProcTransport
+
+    prob = make_quadratic_problem()
+    hyper = make_hyper()
+    hub = InProcTransport(hyper.n_workers)
+    return Master(prob, hyper, hub.master_endpoint(), n_iterations=10,
+                  ckpt_dir=ckpt_dir)
+
+
+def test_master_runtime_carry_round_trip(tmp_path):
+    d = os.fspath(tmp_path / "master_ck")
+    m = _master(d)
+    # fabricate a mid-run carry: arrival history, a death, a pending
+    # push, refresh bookkeeping and metrics history
+    m.recorder.record(np.array([1, 0, 1, 1], np.float32), 0.5)
+    m.recorder.mark_dead(1)
+    m.recorder.record(np.array([0, 0, 1, 0], np.float32), 0.9)
+    row = lambda s, j: jax.tree.map(lambda x: np.asarray(x[j]) + 1.0, s)
+    m.pending[2] = (4, (row(m.state.X1, 2), row(m.state.X2, 2),
+                        row(m.state.X3, 2)))
+    m.last_refresh_t[:] = [3, 0, 2, 2]
+    m.hist["t"].append(2.0)
+    m.hist["gap_sq"].append(0.125)
+    m.members.hello(2, epoch=1)
+    m.members.consumed(2, 3)
+    m.save(step=2)
+
+    m2 = _master(d)
+    assert m2.restore() == 2
+    assert m2.start_it == 2 and m2.status["resumed_from"] == 2
+    # canonical state: bitwise
+    for a, b in zip(jax.tree.leaves(m.state), jax.tree.leaves(m2.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # recorder: full history + liveness clocks
+    for k, v in m.recorder.state_dict().items():
+        np.testing.assert_array_equal(m2.recorder.state_dict()[k], v)
+    # pending push map: same workers, same seqs, same gradient rows
+    assert sorted(m2.pending) == sorted(m.pending)
+    seq, grads = m2.pending[2]
+    assert seq == 4
+    for a, b in zip(jax.tree.leaves(grads),
+                    jax.tree.leaves(m.pending[2][1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(m2.last_refresh_t, m.last_refresh_t)
+    assert m2.hist["t"] == [2.0] and m2.hist["gap_sq"] == [0.125]
+    # connection-scoped bookkeeping resets: fresh worker population
+    assert m2.members.epoch.sum() == 0
+    assert m2.members.consumed_seq.sum() == 0
+    assert m2.members.alive.all()
+
+
+def test_master_restore_rejects_shape_mismatch(tmp_path):
+    from repro.fed.runtime.master import Master
+    from repro.fed.runtime.transport import InProcTransport
+
+    d = os.fspath(tmp_path / "master_ck")
+    m = _master(d)
+    m.save(step=1)
+    prob = make_quadratic_problem(dim=5)       # different problem shape
+    hyper = make_hyper()
+    hub = InProcTransport(hyper.n_workers)
+    other = Master(prob, hyper, hub.master_endpoint(), n_iterations=10,
+                   ckpt_dir=d)
+    with pytest.raises(CheckpointError, match="shape"):
+        other.restore()

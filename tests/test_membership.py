@@ -1,0 +1,185 @@
+"""Membership: the failure-detector state machine + exact resharding.
+
+The resharding conformance contract (ISSUE 7): partitioning the
+canonical `AFTOState` into per-shard worker views and reassembling it is
+bitwise lossless, and a mid-trajectory membership re-layout leaves the
+continuation bit-identical to the fixed-membership run.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import init_state, run_scanned
+from repro.fed.runtime.membership import (FaultConfig, Membership,
+                                          assemble_state, make_views,
+                                          reshard_state)
+
+from conftest import make_hyper, make_quadratic_problem, make_schedules
+
+
+# ---------------------------------------------------------------------------
+# the failure detector (deterministic via a fake clock)
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _members(n=3, **cfg):
+    clock = _Clock()
+    m = Membership(n, FaultConfig(**cfg), clock=clock)
+    return m, clock
+
+
+def test_membership_disconnect_and_resurrect():
+    m, _ = _members()
+    assert m.n_live == 3
+    assert m.disconnect(1) is True       # newly dead
+    assert m.disconnect(1) is False      # idempotent
+    assert m.n_live == 2 and m.deaths == 1
+    # ANY frame from a presumed-dead worker resurrects it
+    assert m.saw(1) is True
+    assert m.n_live == 3 and m.rejoins == 1
+    assert m.saw(1) is False             # still alive: no-op
+
+
+def test_membership_deadline_detection():
+    m, clock = _members(death_timeout=1.0)
+    clock.t = 0.5
+    m.saw(0)                             # worker 0 checked in at 0.5
+    clock.t = 1.4
+    assert m.overdue() == [1, 2]         # silent since t=0
+    for j in m.overdue():
+        m.mark_dead(j)
+    assert m.n_live == 1 and m.deaths == 2
+    assert m.overdue() == []             # dead workers aren't re-reported
+
+
+def test_membership_epoch_and_seq_dedup():
+    m, _ = _members()
+    # session 0: pushes 1, 2 consumed
+    assert m.fresh_push(0, epoch=0, seq=1) is True
+    m.consumed(0, 1)
+    assert m.fresh_push(0, epoch=0, seq=1) is False   # duplicate
+    assert m.fresh_push(0, epoch=0, seq=2) is True
+    m.consumed(0, 2)
+    # a rejoin HELLO with a bumped epoch restarts the sequence space
+    assert m.hello(0, epoch=1) is True
+    assert int(m.epoch[0]) == 1 and int(m.consumed_seq[0]) == 0
+    assert m.fresh_push(0, epoch=1, seq=1) is True    # NOT a duplicate
+    # frames from the dead session are dropped
+    assert m.fresh_push(0, epoch=0, seq=3) is False
+    # a stale re-HELLO does not regress the session
+    assert m.hello(0, epoch=0) is False
+    assert int(m.epoch[0]) == 1
+
+
+def test_membership_epoch_advance_observed_on_any_frame():
+    """A lost rejoin HELLO must not wedge the session: the first push of
+    the new epoch advances the bookkeeping."""
+    m, _ = _members()
+    m.consumed(2, 5)
+    assert m.observe_epoch(2, 1) is True
+    assert int(m.consumed_seq[2]) == 0
+    assert m.fresh_push(2, epoch=1, seq=1) is True
+    assert m.observe_epoch(2, 1) is False    # same epoch: no-op
+
+
+def test_membership_state_dict_round_trip_and_session_reset():
+    m, _ = _members()
+    m.hello(1, epoch=2)
+    m.consumed(1, 7)
+    m.disconnect(0)
+    d = m.state_dict()
+    m2, _ = _members()
+    m2.load_state_dict(d)
+    np.testing.assert_array_equal(m2.epoch, [0, 2, 0])
+    np.testing.assert_array_equal(m2.consumed_seq, [0, 7, 0])
+    np.testing.assert_array_equal(m2.alive, [False, True, True])
+    # a resumed master faces a fresh population: sessions reset
+    m2.reset_sessions()
+    assert m2.epoch.sum() == 0 and m2.consumed_seq.sum() == 0
+    assert m2.alive.all()
+
+
+def test_membership_status_shape():
+    m, clock = _members()
+    clock.t = 2.5
+    rows = m.status()
+    assert [r["worker"] for r in rows] == [0, 1, 2]
+    for r in rows:
+        assert set(r) == {"worker", "alive", "last_seen_age", "epoch",
+                          "consumed_seq"}
+        assert r["last_seen_age"] == pytest.approx(2.5)
+
+
+# ---------------------------------------------------------------------------
+# exact resharding
+# ---------------------------------------------------------------------------
+
+def _state():
+    prob = make_quadratic_problem()      # 4 workers
+    hyper = make_hyper()
+    return prob, hyper, init_state(prob, hyper)
+
+
+def test_make_views_assemble_is_bitwise_identity():
+    prob, hyper, state = _state()
+    # exercise a non-trivial state: a few optimization steps first
+    (sched,) = make_schedules(8, seeds=(0,))
+    state = run_scanned(prob, hyper, sched, metrics_every=4).state
+    for n_shards in (1, 2, 4):
+        views = make_views(state, n_shards)
+        assert [v.index for v in views] == list(range(n_shards))
+        back = assemble_state(state, views)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_reshard_state_is_bitwise_identity():
+    prob, hyper, state = _state()
+    (sched,) = make_schedules(6, seeds=(1,))
+    state = run_scanned(prob, hyper, sched, metrics_every=3).state
+    for n_old, n_new in ((2, 4), (4, 2), (1, 4), (4, 1)):
+        out = reshard_state(state, n_old, n_new)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_views_do_not_partition_raises():
+    _, _, state = _state()
+    with pytest.raises(ValueError, match="partition"):
+        make_views(state, 3)             # 4 workers over 3 shards
+
+
+def test_assemble_rejects_incomplete_shard_set():
+    _, _, state = _state()
+    views = make_views(state, 4)
+    with pytest.raises(ValueError, match="complete"):
+        assemble_state(state, views[:3])
+    with pytest.raises(ValueError, match="complete"):
+        assemble_state(state, [views[0], views[0], views[2], views[3]])
+
+
+def test_resharded_continuation_matches_fixed_membership_run():
+    """The membership-change conformance anchor: run half the
+    trajectory, re-layout the state over a different worker grouping,
+    continue — bit-identical to never having resharded."""
+    prob, hyper, _ = _state()
+    (sched,) = make_schedules(20, seeds=(0,))
+    first = run_scanned(prob, hyper, sched.slice(0, 10), metrics_every=5)
+
+    fixed = run_scanned(prob, hyper, sched.slice(10, 20),
+                        state=first.state, metrics_every=5)
+    resharded = run_scanned(prob, hyper, sched.slice(10, 20),
+                            state=reshard_state(first.state, 2, 4),
+                            metrics_every=5)
+    for a, b in zip(jax.tree.leaves(fixed.state),
+                    jax.tree.leaves(resharded.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(fixed.history["gap_sq"],
+                                  resharded.history["gap_sq"])

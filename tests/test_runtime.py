@@ -35,10 +35,20 @@ def test_message_roundtrip_push():
     m = msg_lib.push(2, 7, g)
     out = decode(encode(m))
     assert out.kind == msg_lib.PUSH
-    assert out.meta == {"worker": 2, "n_pushes": 7}
+    assert out.meta == {"worker": 2, "n_pushes": 7, "epoch": 0}
     got = msg_lib.push_grads(out, g)
     for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(g)):
         np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_message_peek_kind():
+    frame = encode(msg_lib.push(0, 1, (jnp.zeros(2),) * 3))
+    assert msg_lib.peek_kind(frame) == msg_lib.PUSH
+    assert msg_lib.peek_kind(encode(msg_lib.stop())) == msg_lib.STOP
+    # truncated / corrupt frames peek as None, never raise
+    assert msg_lib.peek_kind(frame[: len(frame) // 2]) in (msg_lib.PUSH,
+                                                           None)
+    assert msg_lib.peek_kind(b"\x00\x00\x00\xffjunk") is None
 
 
 def test_message_roundtrip_empty_payload():
@@ -100,6 +110,100 @@ def test_tcp_transport_handshake_and_frames():
     finally:
         for c in conns:
             c.close()
+        me.close()
+
+
+def test_tcp_accept_timeout_names_missing_workers():
+    hub = TcpTransport(2, port=0)
+    me = hub.master_endpoint()
+    try:
+        c0 = TcpTransport.connect("127.0.0.1", hub.port, 0)
+        with pytest.raises(TimeoutError, match=r"missing \[1\]"):
+            me.wait_for_workers(timeout=0.3)
+        c0.close()
+    finally:
+        me.close()
+
+
+def test_tcp_duplicate_hello_rejected():
+    hub = TcpTransport(2, port=0)
+    me = hub.master_endpoint()
+    conns = []
+    try:
+        conns = [TcpTransport.connect("127.0.0.1", hub.port, 0)
+                 for _ in range(2)]    # same worker id twice
+        with pytest.raises(ConnectionError, match="duplicate"):
+            me.wait_for_workers(timeout=5.0)
+    finally:
+        for c in conns:
+            c.close()
+        me.close()
+
+
+def test_tcp_out_of_range_hello_rejected():
+    hub = TcpTransport(2, port=0)
+    me = hub.master_endpoint()
+    try:
+        bad = TcpTransport.connect("127.0.0.1", hub.port, 7)
+        with pytest.raises(ConnectionError, match="out-of-range"):
+            me.wait_for_workers(timeout=5.0)
+        bad.close()
+    finally:
+        me.close()
+
+
+def test_tcp_worker_death_surfaces_disconnect_frame():
+    """A broken worker connection must never be swallowed: the reader
+    thread surfaces a synthetic DISCONNECT frame to the master loop."""
+    hub = TcpTransport(2, port=0)
+    me = hub.master_endpoint()
+    conns = []
+    try:
+        conns = [TcpTransport.connect("127.0.0.1", hub.port, j)
+                 for j in range(2)]
+        me.wait_for_workers()
+        conns[0].close()               # worker 0 dies
+        got = decode(me.recv(timeout=5.0))
+        assert got.kind == msg_lib.DISCONNECT
+        assert got.meta["worker"] == 0
+    finally:
+        for c in conns[1:]:
+            c.close()
+        me.close()
+
+
+def test_tcp_rejoin_replaces_socket_and_surfaces_hello():
+    """A post-launch re-HELLO (bumped epoch) must install the new socket
+    and surface the original HELLO so the master can replay rows."""
+    hub = TcpTransport(1, port=0)
+    me = hub.master_endpoint()
+    try:
+        c0 = TcpTransport.connect("127.0.0.1", hub.port, 0)
+        me.wait_for_workers()
+        c0.close()
+        got = decode(me.recv(timeout=5.0))
+        assert got.kind == msg_lib.DISCONNECT
+        c1 = TcpTransport.connect("127.0.0.1", hub.port, 0, epoch=1)
+        got = decode(me.recv(timeout=5.0))
+        assert got.kind == msg_lib.HELLO and got.meta["epoch"] == 1
+        me.send(0, encode(msg_lib.stop()))   # lands on the NEW socket
+        assert decode(c1.recv(timeout=5.0)).kind == msg_lib.STOP
+        c1.close()
+    finally:
+        me.close()
+
+
+def test_tcp_worker_recv_timeout_returns_none():
+    hub = TcpTransport(1, port=0)
+    me = hub.master_endpoint()
+    try:
+        c0 = TcpTransport.connect("127.0.0.1", hub.port, 0)
+        me.wait_for_workers()
+        assert c0.recv(timeout=0.1) is None    # idle, no desync
+        me.send(0, encode(msg_lib.stop()))
+        assert decode(c0.recv(timeout=5.0)).kind == msg_lib.STOP
+        c0.close()
+    finally:
         me.close()
 
 
@@ -316,6 +420,9 @@ def test_worker_loop_pushes_f1_gradient_rows():
     me.send(0, encode(msg_lib.stop()))
     n = worker_lib.worker_loop(prob, 0, we)
     assert n == 1
+    # the session opens with the worker's HELLO, then the push
+    got = decode(me.recv())
+    assert got.kind == msg_lib.HELLO and got.meta["epoch"] == 0
     got = decode(me.recv())
     assert got.kind == msg_lib.PUSH
     g1, g2, g3 = msg_lib.push_grads(got, rows)

@@ -15,7 +15,9 @@ from repro.launch import serve as serve_lib
 def _fed_args(**overrides):
     base = dict(problem="quadratic", workers=2, dim=3, seed=0, iters=30,
                 metrics_every=10, transport="inproc", port=0,
-                status_port=-1)
+                status_port=-1, accept_timeout=0.0, death_timeout=10.0,
+                min_iter_time=0.0, ckpt_dir=None, ckpt_every=0,
+                resume=False)
     base.update(overrides)
     import argparse
     return argparse.Namespace(**base)
@@ -56,6 +58,35 @@ def test_status_endpoint_serves_master_counters():
     assert seen["status"]["n_iterations"] == 8
     assert seen["status"]["done"] is False
     assert result.history["gap_sq"]
+
+
+def test_status_endpoint_reports_per_worker_liveness():
+    """/status carries the fault-layer's per-worker liveness view:
+    last-heartbeat age, session epoch, staleness and the dead flag."""
+    seen = {}
+
+    def probe(master):
+        srv = serve_lib.start_status_server(master, 0)
+        port = srv.server_address[1]
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/status", timeout=10) as r:
+            seen["status"] = json.loads(r.read())
+        srv.shutdown()
+
+    from repro.fed.runtime import problems as problems_lib
+    from repro.fed.runtime import run_async
+    problem, hyper = problems_lib.build("quadratic", n_workers=3)
+    run_async(problem, hyper, n_iterations=6, metrics_every=3,
+              master_hook=probe)
+    st = seen["status"]
+    workers = st["workers"]
+    assert [w["worker"] for w in workers] == [0, 1, 2]
+    for w in workers:
+        assert w["alive"] is True and w["dead"] is False
+        assert w["last_seen_age"] >= 0.0
+        assert w["epoch"] == 0 and w["staleness"] >= 0
+    assert st["deaths"] == 0 and st["rejoins"] == 0
+    assert st["corrupt_frames"] == 0 and st["resumed_from"] is None
 
 
 def test_fed_cli_gates_on_convergence(capsys):
