@@ -1,9 +1,16 @@
 """Kernel microbenchmarks: oracle (jnp/XLA) wall time on CPU + interpret
 -mode correctness deltas.  On CPU the *oracle* timing is the meaningful
 number (interpret mode executes the kernel body in Python); on TPU the
-same harness times the Mosaic kernels via interpret=False."""
+same harness times the Mosaic kernels via interpret=False.
+
+``--check`` turns the run into the CI kernel-parity gate: every
+``interp_max_err`` column (forward, the hand-written backward, the
+grad-of-grad pass, the fused inner round) must be finite and under
+``CHECK_TOL`` or the process exits nonzero."""
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax
@@ -11,6 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+
+# f32 parity tolerance for the --check gate: the kernel and the oracle
+# accumulate in different orders, so exact zeros only happen on the
+# trivially small shapes.
+CHECK_TOL = 5e-4
 
 
 def _time(fn, *args, iters=20):
@@ -38,6 +50,55 @@ def main():
     got = ops.cut_eval(a, v, c, act, impl="pallas")   # force the kernel
     err = float(jnp.max(jnp.abs(got - oracle(a, v, c, act))))
     rows.append(("kernel_cut_eval_oracle", us,
+                 f"P={p};D={d};interp_max_err={err:.2e}"))
+
+    # backward: the hand-written rank-1 (da) / row-reduction (dv)
+    # kernels behind jax.grad, vs the oracle's autodiff
+    w = jax.random.normal(jax.random.fold_in(key, 8), (p,))
+
+    def loss(impl):
+        return lambda a, v: 0.5 * jnp.sum(
+            ops.cut_eval(a, v, c, act, impl=impl) ** 2 * w)
+
+    bwd_oracle = jax.jit(jax.grad(loss("ref"), argnums=(0, 1)))
+    us = _time(bwd_oracle, a, v)
+    da_k, dv_k = jax.grad(loss("pallas"), argnums=(0, 1))(a, v)
+    da_r, dv_r = bwd_oracle(a, v)
+    err = max(float(jnp.max(jnp.abs(da_k - da_r))),
+              float(jnp.max(jnp.abs(dv_k - dv_r))))
+    rows.append(("kernel_cut_eval_bwd_oracle", us,
+                 f"P={p};D={d};interp_max_err={err:.2e}"))
+
+    # grad-of-grad: the cut-refresh (Eq. 23/24) second-order shape that
+    # used to force impl="ref" — now kernel-backed via cut_ad
+    def gog(impl):
+        inner = lambda v: jnp.sum(
+            jax.grad(loss(impl), argnums=1)(a, v) ** 2)
+        return jax.jit(jax.grad(inner))
+
+    gog_oracle = gog("ref")
+    us = _time(gog_oracle, v)
+    err = float(jnp.max(jnp.abs(gog("pallas")(v) - gog_oracle(v))))
+    scale = float(jnp.max(jnp.abs(gog_oracle(v)))) + 1.0
+    rows.append(("kernel_cut_eval_gog_oracle", us,
+                 f"P={p};D={d};interp_max_err={err / scale:.2e}"))
+
+    # fused inner-ADMM round: two-pass kernel vs the jnp decomposition
+    g = jax.random.normal(jax.random.fold_in(key, 9), (d,))
+    mask = (jnp.arange(d) % 2).astype(jnp.float32)
+    s = jnp.abs(jax.random.normal(jax.random.fold_in(key, 10), (p,)))
+    gam = jnp.abs(jax.random.normal(jax.random.fold_in(key, 11), (p,)))
+    kw = dict(eta_z=0.05, eta_s=0.05, eta_dual=0.05, rho2=1.0)
+    us = _time(lambda *xs: ops.fused_cut_round(*xs, impl="ref", **kw),
+               a, v, g, mask, c, act, s, gam, iters=10)
+    got = ops.fused_cut_round(a, v, g, mask, c, act, s, gam,
+                              impl="pallas", **kw)
+    want = ops.fused_cut_round(a, v, g, mask, c, act, s, gam,
+                               impl="ref", **kw)
+    err = max(
+        float(jnp.max(jnp.abs(x - y)) / (jnp.max(jnp.abs(y)) + 1.0))
+        for x, y in zip(got, want))
+    rows.append(("kernel_fused_round_oracle", us,
                  f"P={p};D={d};interp_max_err={err:.2e}"))
 
     # flash attention oracle vs kernel (small, interpret mode)
@@ -76,6 +137,39 @@ def main():
     return rows
 
 
+def check(rows) -> int:
+    """The CI kernel-parity gate: every interp_max_err must be a finite
+    float under CHECK_TOL.  Returns a shell exit code."""
+    bad = []
+    n_checked = 0
+    for name, _us, derived in rows:
+        for field in derived.split(";"):
+            if not field.startswith("interp_max_err="):
+                continue
+            n_checked += 1
+            err = float(field.split("=", 1)[1])
+            if not np.isfinite(err) or err > CHECK_TOL:
+                bad.append((name, err))
+    if not n_checked:
+        print("kernel parity gate: no interp_max_err rows found", file=sys.stderr)
+        return 1
+    if bad:
+        for name, err in bad:
+            print(f"kernel parity gate FAILED: {name} err={err:.3e} "
+                  f"(tol {CHECK_TOL:.0e})", file=sys.stderr)
+        return 1
+    print(f"kernel parity gate OK: {n_checked} rows under {CHECK_TOL:.0e}")
+    return 0
+
+
 if __name__ == "__main__":
-    for name, us, derived in main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) on any missing/non-finite/"
+                         "out-of-tolerance interp_max_err row")
+    ns = ap.parse_args()
+    out_rows = main()
+    for name, us, derived in out_rows:
         print(f"{name},{us:.1f},{derived}")
+    if ns.check:
+        sys.exit(check(out_rows))

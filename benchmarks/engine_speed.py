@@ -1,7 +1,9 @@
 """Engine benchmarks at quickstart scale (the 4-worker quadratic
 trilevel problem): eager host loop vs compiled-scan trajectory, the
 batched sweep engine vs an equivalent Python loop of scanned runs, the
-Pallas `cut_eval` kernel at paper-scale D, and incremental polytope
+Pallas `cut_eval` kernel at paper-scale D (forward, the hand-written
+backward, one grad-of-grad pass) plus the fused inner-ADMM round
+kernel, and incremental polytope
 maintenance (`add_cut` row writes / `drop_inactive` masks / evictions on
 the canonical `FlatCuts`) at paper-scale (P, D), the worker-mesh sharded
 engine vs the replicated scan (with the analytic per-step bytes the mesh
@@ -116,6 +118,7 @@ def record(n_iterations: int = 200) -> dict:
     out.update(sharded_record(n_iterations))
     out.update(streamed_record(n_iterations))
     out["cut_eval_kernel"] = kernel_record()
+    out["fused_round_kernel"] = fused_round_record()
     out["cut_maintenance"] = cut_update_record()
     # top-level series for easy cross-PR diffing
     out["cut_updates_per_sec"] = out["cut_maintenance"]["updates_per_sec"]
@@ -285,10 +288,25 @@ def sweep_record(n_iterations: int = 200, n_runs: int = SWEEP_RUNS,
     }
 
 
+def _timed_best(fn, iters: int):
+    jax.block_until_ready(fn())            # warm/compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def kernel_record(p: int = KERNEL_P, d: int = KERNEL_D,
                   iters: int = 3) -> dict:
-    """cut_eval mat-vec at paper-scale D: kernel (interpret off-TPU,
-    Mosaic on TPU) vs the jnp reference, with effective bandwidth."""
+    """cut_eval at paper-scale D, forward AND differentiated: kernel
+    (interpret off-TPU, Mosaic on TPU) vs the jnp reference, with
+    effective bandwidth.  The bwd row times the hand-written backward
+    kernels (da = g v^T rank-1, dv = g^T A row-reduction) behind
+    jax.grad; the gog row times one grad-of-grad pass — the cut-refresh
+    (Eq. 23/24) shape that used to force impl="ref" and now stays
+    kernel-backed through the cut_ad primitive closure."""
     from repro.kernels import ops
 
     key = jax.random.PRNGKey(0)
@@ -296,26 +314,88 @@ def kernel_record(p: int = KERNEL_P, d: int = KERNEL_D,
     v = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
     c = jnp.zeros((p,), jnp.float32)
     act = jnp.ones((p,), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 2), (p,), jnp.float32)
 
-    def timed(fn):
-        jax.block_until_ready(fn())            # warm/compile
-        best = float("inf")
-        for _ in range(iters):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn())
-            best = min(best, time.perf_counter() - t0)
-        return best
+    def loss(impl):
+        # quadratic in v, so grad_v depends on v and the grad-of-grad
+        # pass below is a real second-order contraction (a linear loss
+        # would constant-fold the whole gog graph away).
+        return lambda a, v: 0.5 * jnp.sum(
+            ops.cut_eval(a, v, c, act, impl=impl) ** 2 * w)
+
+    def gog(impl):
+        # d/dv of ||d loss/d v||^2: second-order through the mat-vec.
+        inner = lambda v: jnp.sum(jax.grad(loss(impl), argnums=1)(a, v) ** 2)
+        return jax.jit(jax.grad(inner))
 
     # impl forced so the record always captures kernel-vs-ref, even where
     # the auto route would (rightly) pick the jnp mat-vec (interpret-mode
     # streaming off-TPU); on TPU the kernel column is the Mosaic kernel.
-    t_kernel = timed(lambda: ops.cut_eval(a, v, c, act, impl="pallas"))
-    t_ref = timed(lambda: ops.cut_eval(a, v, c, act, impl="ref"))
+    t_kernel = _timed_best(
+        lambda: ops.cut_eval(a, v, c, act, impl="pallas"), iters)
+    t_ref = _timed_best(
+        lambda: ops.cut_eval(a, v, c, act, impl="ref"), iters)
+    bwd_k = jax.jit(jax.grad(loss("pallas"), argnums=(0, 1)))
+    bwd_r = jax.jit(jax.grad(loss("ref"), argnums=(0, 1)))
+    t_bwd_kernel = _timed_best(lambda: bwd_k(a, v), iters)
+    t_bwd_ref = _timed_best(lambda: bwd_r(a, v), iters)
+    gog_k, gog_r = gog("pallas"), gog("ref")
+    t_gog_kernel = _timed_best(lambda: gog_k(v), iters)
+    t_gog_ref = _timed_best(lambda: gog_r(v), iters)
     bytes_touched = (p * d + d + 2 * p) * 4
+    # backward touches A twice (dv = g^T A) and writes da (P, D)
+    bytes_bwd = (2 * p * d + 2 * d + 2 * p) * 4
     return {"p": p, "d": d,
             "kernel_us": t_kernel * 1e6, "ref_us": t_ref * 1e6,
             "kernel_gbps": bytes_touched / t_kernel / 1e9,
-            "ref_gbps": bytes_touched / t_ref / 1e9}
+            "ref_gbps": bytes_touched / t_ref / 1e9,
+            "bwd_kernel_us": t_bwd_kernel * 1e6,
+            "bwd_ref_us": t_bwd_ref * 1e6,
+            "bwd_kernel_gbps": bytes_bwd / t_bwd_kernel / 1e9,
+            "bwd_ref_gbps": bytes_bwd / t_bwd_ref / 1e9,
+            "gog_kernel_us": t_gog_kernel * 1e6,
+            "gog_ref_us": t_gog_ref * 1e6}
+
+
+def fused_round_record(p: int = KERNEL_P, d: int = KERNEL_D,
+                       iters: int = 3) -> dict:
+    """One fused level-2 inner-ADMM cut round at paper-scale (P, D):
+    the two-pass Pallas kernel (A streamed exactly twice) vs the jnp
+    decomposition (three XLA mat-vec passes over A), plus their max
+    output delta — the number `inner.rollout2(use_fused_inner=True)`
+    pays per round per cut polytope."""
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(3)
+    # 1/sqrt(D) scaling keeps the cut values O(1) at paper-scale D, so
+    # the error column reads as a relative f32 accumulation-order delta
+    a = jax.random.normal(key, (p, d), jnp.float32) * (d ** -0.5)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    g = jax.random.normal(jax.random.fold_in(key, 2), (d,), jnp.float32)
+    mask = (jnp.arange(d) % 2).astype(jnp.float32)
+    c = jnp.zeros((p,), jnp.float32)
+    act = jnp.ones((p,), jnp.float32)
+    s = jnp.abs(jax.random.normal(jax.random.fold_in(key, 4), (p,)))
+    gam = jnp.abs(jax.random.normal(jax.random.fold_in(key, 5), (p,)))
+    kw = dict(eta_z=0.05, eta_s=0.05, eta_dual=0.05, rho2=1.0)
+
+    t_kernel = _timed_best(lambda: ops.fused_cut_round(
+        a, v, g, mask, c, act, s, gam, impl="pallas", **kw), iters)
+    t_ref = _timed_best(lambda: ops.fused_cut_round(
+        a, v, g, mask, c, act, s, gam, impl="ref", **kw), iters)
+    got = ops.fused_cut_round(a, v, g, mask, c, act, s, gam,
+                              impl="pallas", **kw)
+    want = ops.fused_cut_round(a, v, g, mask, c, act, s, gam,
+                               impl="ref", **kw)
+    err = max(
+        float(jnp.max(jnp.abs(x - y)) / (jnp.max(jnp.abs(y)) + 1.0))
+        for x, y in zip(got, want))
+    return {"p": p, "d": d,
+            "kernel_us": t_kernel * 1e6, "ref_us": t_ref * 1e6,
+            "kernel_gbps": 2 * p * d * 4 / t_kernel / 1e9,
+            "ref_gbps": 3 * p * d * 4 / t_ref / 1e9,
+            "a_passes_kernel": 2, "a_passes_ref": 3,
+            "max_rel_err": err}
 
 
 def cut_update_record(p: int = KERNEL_P, d: int = KERNEL_D,
@@ -421,6 +501,19 @@ def main(n_iterations: int = 200, record_out: dict = None):
     rows.append(("cut_eval_kernel", ker["kernel_us"],
                  f"d={ker['d']};kernel_gbps={ker['kernel_gbps']:.2f};"
                  f"ref_gbps={ker['ref_gbps']:.2f}"))
+    rows.append(("cut_eval_kernel_bwd", ker["bwd_kernel_us"],
+                 f"d={ker['d']};"
+                 f"bwd_kernel_gbps={ker['bwd_kernel_gbps']:.2f};"
+                 f"bwd_ref_gbps={ker['bwd_ref_gbps']:.2f}"))
+    rows.append(("cut_eval_kernel_gog", ker["gog_kernel_us"],
+                 f"d={ker['d']};gog_ref_us={ker['gog_ref_us']:.1f}"))
+    fr = rec["fused_round_kernel"]
+    rows.append(("fused_round_kernel", fr["kernel_us"],
+                 f"d={fr['d']};a_passes={fr['a_passes_kernel']}"
+                 f"v{fr['a_passes_ref']};"
+                 f"kernel_gbps={fr['kernel_gbps']:.2f};"
+                 f"ref_gbps={fr['ref_gbps']:.2f};"
+                 f"max_rel_err={fr['max_rel_err']:.2e}"))
     cm = rec["cut_maintenance"]
     rows.append(("cut_maintenance", cm["us_per_update"],
                  f"p={cm['p']};d={cm['d']};"

@@ -10,14 +10,94 @@ kernel microbenchmark, and the incremental cut-maintenance series
 ``cut_updates_per_sec`` — interleaved add/drop/evict on the canonical
 ``FlatCuts`` at paper-scale (P, D)) for trajectory tracking across PRs.
 
+``--json`` also drops a timestamped copy of the record as
+``BENCH_<tag>.json`` at the repo root (tag from ``$BENCH_TAG`` or the
+git short rev) — the committed perf-trajectory format future PRs and
+re-anchors diff against; CI uploads it as an artifact and fails if any
+gated series is missing or non-finite.
+
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig1,...]
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import os
+import subprocess
 import sys
 import traceback
+
+# the series a BENCH_*.json must carry with finite values (the CI gate
+# checks these; extend when a new engine/kernel series lands)
+BENCH_REQUIRED = (
+    "scan_warm.iters_per_sec",
+    "runs_per_sec_swept",
+    "iters_per_sec_sharded",
+    "iters_per_sec_streamed",
+    "cut_updates_per_sec",
+    "cut_eval_kernel.kernel_us",
+    "cut_eval_kernel.bwd_kernel_us",
+    "cut_eval_kernel.gog_kernel_us",
+    "fused_round_kernel.kernel_us",
+    "fused_round_kernel.max_rel_err",
+)
+
+
+def _bench_tag() -> str:
+    tag = os.environ.get("BENCH_TAG")
+    if tag:
+        return tag
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True, check=True).stdout.strip()
+    except Exception:
+        return "local"
+
+
+def write_bench_file(rec: dict) -> str:
+    """BENCH_<tag>.json at the repo root: the perf record plus
+    provenance (tag, UTC timestamp, backend/device) in a stable
+    committed format."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    import jax
+    tag = _bench_tag()
+    doc = {
+        "tag": tag,
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "record": rec,
+    }
+    path = os.path.join(root, f"BENCH_{tag}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def _lookup(rec: dict, dotted: str):
+    cur = rec
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def check_bench(doc: dict) -> list:
+    """Missing/non-finite required series in a BENCH doc (CI gate)."""
+    import math
+    rec = doc.get("record", doc)
+    bad = []
+    for key in BENCH_REQUIRED:
+        val = _lookup(rec, key)
+        if not isinstance(val, (int, float)) or not math.isfinite(val):
+            bad.append((key, val))
+    return bad
 
 
 def main() -> None:
@@ -83,6 +163,15 @@ def main() -> None:
             with open(args.json, "w") as f:
                 json.dump(rec, f, indent=2)
             print(f"wrote engine perf record to {args.json}", flush=True)
+            bench_path = write_bench_file(rec)
+            print(f"wrote perf trajectory point to {bench_path}",
+                  flush=True)
+            with open(bench_path) as f:
+                bad = check_bench(json.load(f))
+            for key, val in bad:
+                print(f"bench_gate,{key},MISSING_OR_NONFINITE:{val!r}",
+                      flush=True)
+            failed += len(bad)
         except Exception as e:
             traceback.print_exc()
             print(f"json,nan,ERROR:{e!r}", flush=True)

@@ -464,10 +464,13 @@ def eval_cuts_worker_split(fc: FlatCuts, z1, z2, z3, X2, X3, axis: str):
 
 def eval_cuts_flat(a_flat, v_flat, c, active, impl: str = None):
     """Per-slot cut values from flattened operands: the `cut_eval`
-    mat-vec  (A @ v - c) * active.  impl=None auto-routes (Mosaic kernel
-    on TPU, the identical-math XLA mat-vec off-TPU — see ops.cut_eval)
-    on forward-only hot paths; impl="ref" (plain jnp, transposable to
-    any order) is required on differentiated paths."""
+    mat-vec  (A @ v - c) * active.  impl=None auto-routes (Mosaic
+    kernels on TPU, the identical-math XLA mat-vec off-TPU — see
+    ops.cut_eval).  The kernel route is differentiable to arbitrary
+    order through the `kernels.cut_ad` primitive closure, so the same
+    auto-routing serves forward-only hot paths AND the grad-of-grad'd
+    inner-Lagrangian paths; impl="ref" remains as the jnp test
+    oracle."""
     from repro.kernels import ops
     return ops.cut_eval(a_flat, v_flat, c, active, impl=impl)
 
@@ -476,13 +479,15 @@ def eval_cuts(cuts, z1, z2, z3, X2=None, X3=None):
     """Per-slot cut values  <a,z> + sum_j <b,x_j> - c  (0 for inactive).
 
     Contracts the canonical (P, D) matrix against the flattened point —
-    no cut re-flattening (only the point vector is assembled).  Uses the
-    transposable impl="ref" route because this entry point sits inside
-    the inner Lagrangians, which are differentiated to second order at
-    cut refresh (see ops.cut_eval); the forward-only hot paths
-    (afto_step, the stationarity gap) call `eval_cuts_flat` with the
-    Pallas kernel.  A block-tree `CutSet` argument is DEPRECATED (warns,
-    flattens first; convert with `from_tree` at the boundary instead)."""
+    no cut re-flattening (only the point vector is assembled).  Routes
+    through the auto impl (Mosaic kernels on TPU, jnp elsewhere): this
+    entry point sits inside the inner Lagrangians, which are
+    differentiated to second order at cut refresh, and the
+    `kernels.cut_ad` primitive closure keeps the kernel route
+    transposable/linearizable to any order — the old forced impl="ref"
+    fallback is gone.  A block-tree `CutSet` argument is DEPRECATED
+    (warns, flattens first; convert with `from_tree` at the boundary
+    instead)."""
     if isinstance(cuts, FlatCuts):
         spec, a_flat = cuts.spec, cuts.a
     else:
@@ -490,7 +495,7 @@ def eval_cuts(cuts, z1, z2, z3, X2=None, X3=None):
         spec = flat_spec(cuts)
         a_flat = flatten_cuts(cuts, spec)
     v = flatten_point(spec, z1, z2, z3, X2, X3)
-    return eval_cuts_flat(a_flat, v, cuts.c, cuts.active, impl="ref")
+    return eval_cuts_flat(a_flat, v, cuts.c, cuts.active, impl=None)
 
 
 def cut_weighted_coeff_flat(spec: FlatSpec, a_flat, weights):

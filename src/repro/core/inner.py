@@ -20,6 +20,7 @@ from repro.core import cuts as cuts_lib
 from repro.core import lagrangian as lag
 from repro.core.types import (FlatCuts, Hyper, InnerState2, InnerState3,
                               TrilevelProblem)
+from repro.kernels import ops as kernel_ops
 from repro.utils.tree import (tree_axpy, tree_norm_sq, tree_sub)
 
 
@@ -66,10 +67,75 @@ def h_i(problem: TrilevelProblem, hyper: Hyper,
 # level 2
 # ---------------------------------------------------------------------------
 
+def _rollout2_fused(problem: TrilevelProblem, hyper: Hyper, z1, z3, X3,
+                    cuts_i: FlatCuts, init: InnerState2) -> InnerState2:
+    """The `hyper.use_fused_inner` round body: one fused Pallas round.
+
+    Per round the oracle (`rollout2`'s scan body) launches three passes
+    over the (P, D) cut matrix — the z2 cut-gradient inside grad(l_p2)
+    plus two `eval_cuts` for the slack/dual steps.  Here the whole cut
+    algebra of a round (weight pass, masked z2 descent, re-evaluation,
+    slack + gamma epilogue) runs in `kernels.fused_cut_round`, which
+    streams A exactly twice.  The small cut-free algebra (per-worker f2,
+    consensus terms, phi ascent) stays in XLA via `lag.l_p2_base`; its
+    x2/z2 gradients equal the full-l_p2 ones minus the cut term the
+    kernel applies, so the composed update matches the oracle to f32
+    tolerance (gradient accumulation order differs, not the math).
+    Differentiable to arbitrary order: the fused op carries a JVP built
+    on the `cut_ad` primitive decomposition (see ops.fused_cut_round).
+    """
+    spec = cuts_i.spec
+    # Constant a2-column selector: 1 on z2's columns of the flattened
+    # point, 0 elsewhere (z1/z3/X3 do not move within the inner rollout).
+    mask = cuts_lib.flatten_point(
+        spec, None, jax.tree.map(jnp.ones_like, init.z2), None, None, None)
+
+    def round_fn(st: InnerState2, _):
+        g_x = jax.grad(lambda x2: lag.l_p2_base(
+            problem, hyper, z1, z3, X3,
+            InnerState2(x2=x2, z2=st.z2, phi=st.phi, s=st.s,
+                        gamma=st.gamma)))(st.x2)
+        x2_new = tree_axpy(-hyper.eta_x, g_x, st.x2)
+
+        # Eq. 6 master step, cut-free part only; the cut gradient is
+        # applied inside the fused kernel (masked to the a2 columns).
+        g_z_cons = jax.grad(lambda z2: lag.l_p2_base(
+            problem, hyper, z1, z3, X3,
+            InnerState2(x2=st.x2, z2=z2, phi=st.phi, s=st.s,
+                        gamma=st.gamma)))(st.z2)
+        v_old = cuts_lib.flatten_point(spec, z1, st.z2, z3, None, X3)
+        g_other = cuts_lib.flatten_point(
+            spec, None, g_z_cons, None, None, None)
+        v_new, _cv1, s_new, gamma_new = kernel_ops.fused_cut_round(
+            cuts_i.a, v_old, g_other, mask, cuts_i.c, cuts_i.active,
+            st.s, st.gamma,
+            eta_z=hyper.eta_z, eta_s=hyper.eta_s,
+            eta_dual=hyper.eta_dual_inner, rho2=hyper.rho2)
+        z2_new = cuts_lib.unflatten_coeff(spec, v_new)[1]
+
+        phi_new = jax.tree.map(
+            lambda p, x, z: p + hyper.eta_dual_inner * (
+                x - jnp.broadcast_to(z[None], x.shape)),
+            st.phi, x2_new, z2_new)
+        return InnerState2(x2=x2_new, z2=z2_new, phi=phi_new, s=s_new,
+                           gamma=gamma_new), None
+
+    final, _ = jax.lax.scan(round_fn, init, None, length=hyper.k_inner)
+    return final
+
+
 def rollout2(problem: TrilevelProblem, hyper: Hyper, z1, z3, X3,
              cuts_i: FlatCuts, init: InnerState2) -> InnerState2:
     """K rounds of Jacobi ADMM on Eq. 11 (with slack/cut multipliers);
-    differentiable w.r.t. (z1, z3, X3)."""
+    differentiable w.r.t. (z1, z3, X3).
+
+    With `hyper.use_fused_inner` the per-round cut algebra runs in the
+    fused two-pass Pallas round kernel (`_rollout2_fused`); the default
+    scan-of-jnp body below is the parity oracle
+    (tests/test_inner_fused.py checks the two agree through values,
+    first gradients, and the h_II grad-of-grad)."""
+    if hyper.use_fused_inner:
+        return _rollout2_fused(problem, hyper, z1, z3, X3, cuts_i, init)
 
     def round_fn(st: InnerState2, _):
         g_x = jax.grad(lambda x2: lag.l_p2(

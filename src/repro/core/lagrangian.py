@@ -3,8 +3,11 @@
 The hyper-polyhedral cut terms in `l_p2` / `l_p` contract the canonical
 `FlatCuts` (P, D) matrix directly (`cuts.eval_cuts` assembles only the
 point vector), so they stay one wide mat-vec on the hot path and remain
-differentiable through the inner ADMM rollouts.  The `CutSet` block-tree
-view is accepted too at the compatibility boundary.
+differentiable through the inner ADMM rollouts — including the Eq.
+23/24 grad-of-grad at cut refresh, which since the `kernels.cut_ad`
+primitive closure runs on the Pallas kernels on TPU instead of forcing
+the jnp fallback.  The `CutSet` block-tree view is accepted too at the
+compatibility boundary.
 """
 from __future__ import annotations
 
@@ -36,6 +39,25 @@ def l_p3(problem: TrilevelProblem, hyper: Hyper, z1, z2, st: InnerState3):
 # Level-2 augmented Lagrangian with I-layer cut terms (Eq. 11)
 # ---------------------------------------------------------------------------
 
+def l_p2_base(problem: TrilevelProblem, hyper: Hyper, z1, z3, X3,
+              st: InnerState2):
+    """The cut-free part of Eq. 11: sum_j f2_j + consensus terms.
+
+    Split out so the fused inner round (`inner.rollout2` with
+    `hyper.use_fused_inner`) can take the Eq. 5/6 gradients of the small
+    per-worker/consensus algebra in XLA while the (P, D) cut terms run
+    inside the fused Pallas round kernel.  `l_p2 = l_p2_base + cut
+    terms` exactly (the cut terms are independent of x2, so x2
+    gradients of the two forms are identical)."""
+    def per_worker(data_j, x2_j, phi_j, x3_j):
+        f = problem.f2(data_j, z1, x2_j, x3_j)
+        r = tree_sub(x2_j, st.z2)
+        return f + tree_dot(phi_j, r) + 0.5 * hyper.kappa2 * tree_norm_sq(r)
+
+    vals = jax.vmap(per_worker)(problem.data, st.x2, st.phi, X3)
+    return jnp.sum(vals)
+
+
 def l_p2(problem: TrilevelProblem, hyper: Hyper, z1, z3, X3,
          cuts_i: FlatCuts, st: InnerState2):
     """sum_j f2_j + consensus terms + gamma/rho2 terms over the I-polytope.
@@ -44,13 +66,7 @@ def l_p2(problem: TrilevelProblem, hyper: Hyper, z1, z3, X3,
     a2-block multiplies the *inner* consensus variable z2' while X3/z3 come
     from the outer iteration (see Eq. 11's hat-h_{I,l} arguments).
     """
-    def per_worker(data_j, x2_j, phi_j, x3_j):
-        f = problem.f2(data_j, z1, x2_j, x3_j)
-        r = tree_sub(x2_j, st.z2)
-        return f + tree_dot(phi_j, r) + 0.5 * hyper.kappa2 * tree_norm_sq(r)
-
-    vals = jax.vmap(per_worker)(problem.data, st.x2, st.phi, X3)
-    total = jnp.sum(vals)
+    total = l_p2_base(problem, hyper, z1, z3, X3, st)
 
     cutval = cuts_lib.eval_cuts(cuts_i, z1, st.z2, z3, X2=None, X3=X3)
     viol = (cutval + st.s) * cuts_i.active

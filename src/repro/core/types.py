@@ -69,6 +69,14 @@ class Hyper:
     c1_floor: float = 1e-3
     c2_floor: float = 1e-3
     d1: int = 1                 # dim of x1 (for the theta projection radius)
+    # route the level-2 inner rollout's cut algebra through the fused
+    # two-pass Pallas round kernel (kernels/inner_round.py).  The fused
+    # op auto-routes like cut_eval (Mosaic on TPU, the identical-math
+    # jnp decomposition elsewhere) and stays differentiable to any
+    # order, so h_II / cut-refresh grad-of-grad work through it; False
+    # keeps the scan-of-jnp oracle round body (the default, and the
+    # parity reference in tests/test_inner_fused.py).
+    use_fused_inner: bool = False
 
     def c1(self, t):
         return jnp.maximum(self.c1_floor,

@@ -1,24 +1,29 @@
-"""Pallas TPU kernel: hyper-polyhedral cut evaluation.
+"""Pallas TPU kernels: hyper-polyhedral cut contractions (fwd + bwd).
 
-The paper's per-iteration hot spot (Eqs. 14, 20): evaluate every cutting
-plane against the current variable point,
+The paper's per-iteration hot spot (Eqs. 14, 20) is the wide contraction
+of the canonical (P, D) cut matrix against a flattened variable point.
+On TPU the variable dimension D is huge (the sketched cut space, or a
+flattened paper-scale variable block), so every kernel here streams D in
+VMEM-resident tiles along a sequential grid axis; P is padded to the
+8-sublane boundary and partials accumulate in f32.
 
-    val_l = active_l * ( sum_d A[l, d] * v[d]  -  c_l ),
+Three kernels cover the whole AD closure of the cut path (see
+`kernels.cut_ad` for the primitive registrations that wire them into
+jvp/transpose rules):
 
-where A stacks the |P| cut coefficient rows over the (flattened) variable
-space.  On TPU the variable dimension D is huge (the sketched cut space,
-or a flattened paper-scale variable block), so the kernel streams D in
-VMEM-resident tiles along a sequential grid axis and accumulates the
-(P,) partials in f32; P is padded to the 8-sublane boundary.
+  matvec(a, v)  = A @ v      (P,)    the forward cut contraction
+  vecmat(g, a)  = g^T A      (D,)    the row-reduction backward (dv)
+  rank1(x, y)   = x y^T      (P, D)  the rank-1 backward (da)
+
+`cut_eval` composes matvec with the tiny (P,)-sized epilogue
+`(A v - c) * active` (jnp — O(P) work, fused by XLA around the kernel).
 
 TPU adaptation (vs a GPU cutting-plane loop): one grid step's tile
 (P_pad x block_d) is shaped for the MXU's (8x128) lanes — the row count
-of cuts is tiny, so the kernel is deliberately a wide mat-vec that lives
-in VMEM, not an HBM-bound gather.
+of cuts is tiny, so each kernel is deliberately a wide streaming op that
+lives in VMEM, not an HBM-bound gather.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -28,51 +33,129 @@ P_PAD = 8          # sublane alignment for the cut axis
 BLOCK_D = 2048     # lane-dim tile (multiple of 128)
 
 
-def _cut_eval_kernel(a_ref, v_ref, c_ref, active_ref, out_ref):
+def _clamp_block(d: int, block_d: int) -> int:
+    # never tile wider than the (128-aligned) variable space itself —
+    # quickstart-scale D would otherwise zero-pad to a full 2048 lane
+    # tile and waste the whole MXU row on padding.
+    return min(block_d, max(128, ((d + 127) // 128) * 128))
+
+
+def _pad_mat(a, p_pad: int, d_pad: int):
+    p, d = a.shape
+    return jnp.zeros((p_pad, d_pad), a.dtype).at[:p, :d].set(a)
+
+
+def _pad_row(v, d_pad: int):
+    return jnp.zeros((1, d_pad), v.dtype).at[0, :v.shape[0]].set(v)
+
+
+def _pad_col(x, p_pad: int):
+    return jnp.zeros((p_pad, 1), x.dtype).at[:x.shape[0], 0].set(x)
+
+
+# ---------------------------------------------------------------------------
+# forward: matvec  (P,) = A @ v
+# ---------------------------------------------------------------------------
+
+def _matvec_kernel(a_ref, v_ref, out_ref):
     j = pl.program_id(0)
 
     @pl.when(j == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    a = a_ref[...].astype(jnp.float32)          # (P_pad, BLOCK_D)
-    v = v_ref[...].astype(jnp.float32)          # (1, BLOCK_D)
+    a = a_ref[...].astype(jnp.float32)          # (P_pad, block_d)
+    v = v_ref[...].astype(jnp.float32)          # (1, block_d)
     out_ref[...] += jnp.sum(a * v, axis=1, keepdims=True)  # (P_pad, 1)
 
-    @pl.when(j == pl.num_programs(0) - 1)
-    def _finish():
-        c = c_ref[...].astype(jnp.float32)
-        act = active_ref[...].astype(jnp.float32)
-        out_ref[...] = (out_ref[...] - c) * act
 
-
-def cut_eval(a, v, c, active, *, block_d: int = BLOCK_D,
-             interpret: bool = True):
-    """a: (P, D), v: (D,), c: (P,), active: (P,) -> (P,) cut values."""
+def matvec(a, v, *, block_d: int = BLOCK_D, interpret: bool = True):
+    """a: (P, D), v: (D,) -> (P,) f32 raw contraction A @ v."""
     p, d = a.shape
     p_pad = ((p + P_PAD - 1) // P_PAD) * P_PAD
-    # never tile wider than the (128-aligned) variable space itself —
-    # quickstart-scale D would otherwise zero-pad to a full 2048 lane
-    # tile and waste the whole MXU row on padding.
-    block_d = min(block_d, max(128, ((d + 127) // 128) * 128))
+    block_d = _clamp_block(d, block_d)
     d_pad = ((d + block_d - 1) // block_d) * block_d
-    a_p = jnp.zeros((p_pad, d_pad), a.dtype).at[:p, :d].set(a)
-    v_p = jnp.zeros((1, d_pad), v.dtype).at[0, :d].set(v)
-    c_p = jnp.zeros((p_pad, 1), jnp.float32).at[:p, 0].set(c)
-    act_p = jnp.zeros((p_pad, 1), jnp.float32).at[:p, 0].set(active)
-
-    grid = (d_pad // block_d,)
     out = pl.pallas_call(
-        _cut_eval_kernel,
-        grid=grid,
+        _matvec_kernel,
+        grid=(d_pad // block_d,),
         in_specs=[
             pl.BlockSpec((p_pad, block_d), lambda j: (0, j)),
             pl.BlockSpec((1, block_d), lambda j: (0, j)),
-            pl.BlockSpec((p_pad, 1), lambda j: (0, 0)),
-            pl.BlockSpec((p_pad, 1), lambda j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((p_pad, 1), lambda j: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((p_pad, 1), jnp.float32),
         interpret=interpret,
-    )(a_p, v_p, c_p, act_p)
+    )(_pad_mat(a, p_pad, d_pad), _pad_row(v, d_pad))
     return out[:p, 0]
+
+
+# ---------------------------------------------------------------------------
+# backward (dv): vecmat  (D,) = g^T A — row-reduction over the cut axis
+# ---------------------------------------------------------------------------
+
+def _vecmat_kernel(g_ref, a_ref, out_ref):
+    g = g_ref[...].astype(jnp.float32)          # (P_pad, 1)
+    a = a_ref[...].astype(jnp.float32)          # (P_pad, block_d)
+    out_ref[...] = jnp.sum(g * a, axis=0, keepdims=True)   # (1, block_d)
+
+
+def vecmat(g, a, *, block_d: int = BLOCK_D, interpret: bool = True):
+    """g: (P,), a: (P, D) -> (D,) f32 row-reduction g^T A.
+
+    Each D tile is independent (the reduction runs over the resident P
+    rows), so the grid has no sequential accumulator."""
+    p, d = a.shape
+    p_pad = ((p + P_PAD - 1) // P_PAD) * P_PAD
+    block_d = _clamp_block(d, block_d)
+    d_pad = ((d + block_d - 1) // block_d) * block_d
+    out = pl.pallas_call(
+        _vecmat_kernel,
+        grid=(d_pad // block_d,),
+        in_specs=[
+            pl.BlockSpec((p_pad, 1), lambda j: (0, 0)),
+            pl.BlockSpec((p_pad, block_d), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
+        interpret=interpret,
+    )(_pad_col(g, p_pad), _pad_mat(a, p_pad, d_pad))
+    return out[0, :d]
+
+
+# ---------------------------------------------------------------------------
+# backward (da): rank1  (P, D) = x y^T — the outer-product update
+# ---------------------------------------------------------------------------
+
+def _rank1_kernel(x_ref, y_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)          # (P_pad, 1)
+    y = y_ref[...].astype(jnp.float32)          # (1, block_d)
+    out_ref[...] = x * y                        # (P_pad, block_d)
+
+
+def rank1(x, y, *, block_d: int = BLOCK_D, interpret: bool = True):
+    """x: (P,), y: (D,) -> (P, D) f32 rank-1 outer product x y^T."""
+    p, d = x.shape[0], y.shape[0]
+    p_pad = ((p + P_PAD - 1) // P_PAD) * P_PAD
+    block_d = _clamp_block(d, block_d)
+    d_pad = ((d + block_d - 1) // block_d) * block_d
+    out = pl.pallas_call(
+        _rank1_kernel,
+        grid=(d_pad // block_d,),
+        in_specs=[
+            pl.BlockSpec((p_pad, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, block_d), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((p_pad, block_d), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((p_pad, d_pad), jnp.float32),
+        interpret=interpret,
+    )(_pad_col(x, p_pad), _pad_row(y, d_pad))
+    return out[:p, :d]
+
+
+def cut_eval(a, v, c, active, *, block_d: int = BLOCK_D,
+             interpret: bool = True):
+    """a: (P, D), v: (D,), c: (P,), active: (P,) -> (P,) cut values.
+
+    One streaming `matvec` kernel launch plus the O(P) jnp epilogue
+    (identical math to the previously fused single-kernel form)."""
+    return (matvec(a, v, block_d=block_d, interpret=interpret) - c) * active

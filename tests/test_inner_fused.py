@@ -1,0 +1,143 @@
+"""Fused inner-ADMM round (`hyper.use_fused_inner`) vs the scan-of-jnp
+oracle: values, first gradients, and the h_II grad-of-grad must agree —
+plus the fused op itself in pallas-interpret mode vs its jnp
+decomposition."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cuts as cuts_lib
+from repro.core import inner
+from repro.core.types import (CutSet, Hyper, InnerState2, TrilevelProblem)
+from repro.kernels import ops
+
+
+def _toy(seed=0, n=3, p=5, d2=7, d1=4):
+    """A small trilevel problem + a partially-active layer-I polytope."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 12)
+
+    def f1(dj, x1, x2, x3):
+        return jnp.sum(x1 ** 2)
+
+    def f2(dj, z1, x2, x3):
+        return jnp.sum((x2 - dj) ** 2) \
+            + jnp.sum(z1) * jnp.sum(x2) + 0.1 * jnp.sum(x3) * jnp.sum(x2)
+
+    def f3(dj, z1, z2, x3):
+        return jnp.sum((x3 - z2[:d1]) ** 2)
+
+    data = jax.random.normal(ks[0], (n, d2))
+    prob = TrilevelProblem(f1=f1, f2=f2, f3=f3, data=data, n_workers=n,
+                           x1_init=None, x2_init=None, x3_init=None)
+    z1 = jax.random.normal(ks[1], (d1,))
+    z2 = jax.random.normal(ks[2], (d2,))
+    z3 = jax.random.normal(ks[3], (d1,))
+    X3 = jax.random.normal(ks[4], (n, d1))
+    X2 = jax.random.normal(ks[5], (n, d2))
+    phi = jax.random.normal(ks[6], (n, d2)) * 0.1
+    s = jnp.abs(jax.random.normal(ks[7], (p,)))
+    gamma = jnp.abs(jax.random.normal(ks[8], (p,)))
+    cs = CutSet(a1=jax.random.normal(ks[9], (p, d1)) * 0.1,
+                a2=jax.random.normal(ks[10], (p, d2)) * 0.1,
+                a3=jax.random.normal(ks[11], (p, d1)) * 0.1,
+                b2=jnp.zeros((p, n, d2)),
+                b3=jax.random.normal(ks[0], (p, n, d1)) * 0.1,
+                c=jnp.linspace(-1.0, 1.0, p),
+                active=jnp.array([1.0, 1.0, 0.0, 1.0, 1.0]),
+                age=jnp.zeros((p,)))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        fc = cuts_lib.from_tree(cs)
+    init = InnerState2(x2=X2, z2=z2, phi=phi, s=s, gamma=gamma)
+    return prob, fc, init, z1, z2, z3, X2, X3
+
+
+HYP_REF = Hyper(n_workers=3, k_inner=4)
+HYP_FUSED = dataclasses.replace(HYP_REF, use_fused_inner=True)
+
+
+def test_rollout2_fused_matches_oracle():
+    """Final inner state through the fused round == the oracle scan body
+    (bitwise off-TPU: the fused op auto-routes to the identical-math jnp
+    decomposition there)."""
+    prob, fc, init, z1, _z2, z3, _X2, X3 = _toy()
+    ref = inner.rollout2(prob, HYP_REF, z1, z3, X3, fc, init)
+    fus = inner.rollout2(prob, HYP_FUSED, z1, z3, X3, fc, init)
+    for name in ("x2", "z2", "phi", "s", "gamma"):
+        for a, b in zip(jax.tree.leaves(getattr(ref, name)),
+                        jax.tree.leaves(getattr(fus, name))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6,
+                                       err_msg=name)
+
+
+def test_h_ii_grads_match_through_fused_round():
+    """First gradients of h_II w.r.t. every outer variable flow through
+    the fused round identically to the oracle."""
+    prob, fc, init, z1, z2, z3, X2, X3 = _toy(seed=1)
+
+    def h(hyp, z1, z3, X3):
+        return inner.h_ii(prob, hyp, X2, z2, z1, z3, X3, fc, init)
+
+    g_ref = jax.grad(h, argnums=(1, 2, 3))(HYP_REF, z1, z3, X3)
+    g_fus = jax.grad(h, argnums=(1, 2, 3))(HYP_FUSED, z1, z3, X3)
+    for name, a, b in zip(("z1", "z3", "X3"), g_ref, g_fus):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+def test_h_ii_grad_of_grad_through_fused_round():
+    """The cut-refresh shape: grad of ||grad h_II||^2 (second order
+    through the K-round rollout and the fused op's custom JVP)."""
+    prob, fc, init, z1, z2, z3, X2, X3 = _toy(seed=2)
+
+    def h(hyp, z1, z3, X3):
+        return inner.h_ii(prob, hyp, X2, z2, z1, z3, X3, fc, init)
+
+    def gsum(hyp, z1):
+        return jnp.sum(jax.grad(h, argnums=1)(hyp, z1, z3, X3) ** 2)
+
+    gg_ref = jax.grad(gsum, argnums=1)(HYP_REF, z1)
+    gg_fus = jax.grad(gsum, argnums=1)(HYP_FUSED, z1)
+    assert float(jnp.max(jnp.abs(gg_ref))) > 0.0   # a real second order
+    np.testing.assert_allclose(np.asarray(gg_ref), np.asarray(gg_fus),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("p,d", [(5, 300), (8, 4096)])
+def test_fused_op_pallas_interpret_matches_ref(p, d):
+    """The two-pass Pallas round kernel (interpret mode off-TPU) vs the
+    jnp decomposition, forward and first gradients."""
+    ks = jax.random.split(jax.random.PRNGKey(p + d), 8)
+    a = jax.random.normal(ks[0], (p, d)) * (d ** -0.5)
+    v = jax.random.normal(ks[1], (d,))
+    g = jax.random.normal(ks[2], (d,))
+    mask = (jnp.arange(d) % 2).astype(jnp.float32)
+    c = jax.random.normal(ks[3], (p,))
+    act = (jax.random.uniform(ks[4], (p,)) > 0.3).astype(jnp.float32)
+    s = jnp.abs(jax.random.normal(ks[5], (p,)))
+    gam = jnp.abs(jax.random.normal(ks[6], (p,)))
+    kw = dict(eta_z=0.05, eta_s=0.05, eta_dual=0.05, rho2=1.0)
+
+    got = ops.fused_cut_round(a, v, g, mask, c, act, s, gam,
+                              impl="pallas", **kw)
+    want = ops.fused_cut_round(a, v, g, mask, c, act, s, gam,
+                               impl="ref", **kw)
+    for x, y, name in zip(got, want, ("v_new", "cv", "s_new", "gamma")):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+
+    def loss(impl):
+        return lambda a, v, s, gam: sum(
+            jnp.sum(o ** 2) for o in ops.fused_cut_round(
+                a, v, g, mask, c, act, s, gam, impl=impl, **kw))
+
+    gk = jax.grad(loss("pallas"), argnums=(0, 1, 2, 3))(a, v, s, gam)
+    gr = jax.grad(loss("ref"), argnums=(0, 1, 2, 3))(a, v, s, gam)
+    for x, y, name in zip(gk, gr, ("da", "dv", "ds", "dgamma")):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)

@@ -70,6 +70,144 @@ def test_cut_eval_vmap_batches_kernel():
                                rtol=1e-4, atol=1e-5)
 
 
+def _cut_operands(p, d, seed=0, active=None):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    a = jax.random.normal(ks[0], (p, d)) * (d ** -0.5)
+    v = jax.random.normal(ks[1], (d,))
+    c = jax.random.normal(ks[2], (p,))
+    if active is None:
+        active = (jax.random.uniform(ks[3], (p,)) > 0.3).astype(jnp.float32)
+    w = jax.random.normal(ks[4], (p,))
+    return a, v, c, active, w
+
+
+def _quad_loss(impl, act, w):
+    # quadratic so first grads depend on (a, v) and grad-of-grad is a
+    # real second-order contraction
+    return lambda a, v, c: 0.5 * jnp.sum(
+        ops.cut_eval(a, v, c, act, impl=impl) ** 2 * w)
+
+
+# (5, 300): quickstart-ish; (8, 4096): paper-scale P with two 2048-lane
+# tiles so the grid accumulation carry is exercised
+@pytest.mark.parametrize("p,d", [(5, 300), (8, 4096)])
+def test_cut_eval_bwd_parity(p, d):
+    """jax.grad through the kernel route (the hand-written rank-1 da /
+    row-reduction dv kernels via the cut_ad transposes) == grads of the
+    jnp oracle, for every differentiable operand."""
+    a, v, c, act, w = _cut_operands(p, d)
+    gk = jax.grad(_quad_loss("pallas", act, w), argnums=(0, 1, 2))(a, v, c)
+    gr = jax.grad(_quad_loss("ref", act, w), argnums=(0, 1, 2))(a, v, c)
+    for x, y, name in zip(gk, gr, ["da", "dv", "dc"]):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("p,d", [(5, 300), (8, 4096)])
+def test_cut_eval_jvp_parity(p, d):
+    """Forward-mode through the kernel route: the cut_ad primitives have
+    real JVP rules (no impl="ref" fallback, no custom_vjp error)."""
+    a, v, c, act, _ = _cut_operands(p, d)
+    da = jax.random.normal(jax.random.PRNGKey(9), a.shape) * (d ** -0.5)
+    dv = jax.random.normal(jax.random.PRNGKey(10), v.shape)
+
+    def f(impl):
+        return lambda a, v: ops.cut_eval(a, v, c, act, impl=impl)
+
+    yk, tk = jax.jvp(f("pallas"), (a, v), (da, dv))
+    yr, tr = jax.jvp(f("ref"), (a, v), (da, dv))
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(tk), np.asarray(tr),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("p,d", [(5, 300), (8, 4096)])
+def test_cut_eval_grad_of_grad_parity(p, d):
+    """Second order through the kernel route — the cut-refresh (Eq.
+    23/24) shape that used to force impl="ref" on the inner-Lagrangian
+    paths.  grad(||grad||^2) must match the oracle's."""
+    a, v, c, act, w = _cut_operands(p, d)
+
+    def gog(impl):
+        loss = _quad_loss(impl, act, w)
+        inner = lambda v: jnp.sum(jax.grad(loss, argnums=1)(a, v, c) ** 2)
+        return jax.grad(inner)(v)
+
+    got, want = gog("pallas"), gog("ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cut_eval_bwd_masked_rows_zero_grads():
+    """Evicted/inactive cut slots contribute nothing: their rows of da
+    and their dc entries must be exactly zero through the kernel."""
+    p, d = 6, 512
+    active = jnp.array([1.0, 0.0, 1.0, 0.0, 0.0, 1.0])
+    a, v, c, _, w = _cut_operands(p, d, seed=7, active=active)
+    da, dv, dc = jax.grad(_quad_loss("pallas", active, w),
+                          argnums=(0, 1, 2))(a, v, c)
+    dead = np.asarray(active) == 0.0
+    assert np.all(np.asarray(da)[dead] == 0.0)
+    assert np.all(np.asarray(dc)[dead] == 0.0)
+    # and the live rows match the oracle
+    da_r, dv_r, dc_r = jax.grad(_quad_loss("ref", active, w),
+                                argnums=(0, 1, 2))(a, v, c)
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(dv_r),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(da_r),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_cut_eval_vmap_of_grad_sweep_axis():
+    """The sweep engine differentiates vmapped runs: vmap(grad(kernel))
+    must batch through the cut_ad primitives and match the oracle."""
+    r, p, d = 3, 4, 256
+    key = jax.random.PRNGKey(11)
+    a = jax.random.normal(key, (r, p, d)) * (d ** -0.5)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (r, d))
+    c = jnp.zeros((p,))
+    act = jnp.ones((p,))
+
+    def loss(impl):
+        return lambda a, v: 0.5 * jnp.sum(
+            ops.cut_eval(a, v, c, act, impl=impl) ** 2)
+
+    gk = jax.vmap(jax.grad(loss("pallas"), argnums=(0, 1)))(a, v)
+    gr = jax.vmap(jax.grad(loss("ref"), argnums=(0, 1)))(a, v)
+    for x, y in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_cut_eval_grads_random_active_property():
+    """Property over random active masks (hypothesis when available):
+    for ANY {0,1}^P mask, kernel grads == oracle grads and inactive
+    rows are hard zeros."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    p, d = 7, 384
+
+    @settings(max_examples=20, deadline=None)
+    @given(bits=st.lists(st.booleans(), min_size=p, max_size=p),
+           seed=st.integers(min_value=0, max_value=2 ** 16))
+    def prop(bits, seed):
+        active = jnp.asarray(bits, jnp.float32)
+        a, v, c, _, w = _cut_operands(p, d, seed=seed, active=active)
+        gk = jax.grad(_quad_loss("pallas", active, w),
+                      argnums=(0, 1, 2))(a, v, c)
+        gr = jax.grad(_quad_loss("ref", active, w),
+                      argnums=(0, 1, 2))(a, v, c)
+        for x, y in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-4, atol=1e-5)
+        dead = np.asarray(active) == 0.0
+        assert np.all(np.asarray(gk[0])[dead] == 0.0)
+
+    prop()
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
@@ -93,6 +231,21 @@ def test_flash_attention_sweep(s, h, hkv, hd, blk, window, dtype):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                rtol=tol, atol=tol)
+
+
+def test_flash_attention_noncausal_unaligned_raises():
+    """Non-causal + non-block-aligned used to trip a bare assert; now a
+    ValueError naming the offending shapes and blocks."""
+    b, s, h, hd = 1, 37, 2, 16
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, h, hd))
+    with pytest.raises(ValueError, match=r"non-causal.*37.*block"):
+        ops.flash_attention(q, q, q, causal=False,
+                            block_q=16, block_k=16)
+    # aligned non-causal still works
+    out = ops.flash_attention(q[:, :32], q[:, :32], q[:, :32],
+                              causal=False, block_q=16, block_k=16)
+    assert out.shape == (b, 32, h, hd)
 
 
 def test_flash_attention_unaligned_seq():
@@ -159,3 +312,48 @@ def test_mlstm_sequence_carries_state():
     np.testing.assert_allclose(np.asarray(st_kernel["c"]),
                                np.asarray(st_ref["c"]),
                                rtol=2e-2, atol=2e-2)
+
+
+def _mlstm_seq_inputs(s, seed=3, b=1, h=2, hd=8):
+    from repro.models.xlstm import init_mlstm_state
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    li = jax.random.normal(ks[3], (b, s, h)) * 0.5
+    lf = jnp.asarray(jax.nn.log_sigmoid(
+        jax.random.normal(ks[4], (b, s, h)) + 2.0))
+    return q, k, v, li, lf, init_mlstm_state(b, h, hd)
+
+
+def test_mlstm_sequence_ragged_tail():
+    """S % chunk != 0 must produce ALL S outputs (the old host chunk
+    loop silently dropped the ragged tail) and match the full-sequence
+    oracle."""
+    from repro.models.xlstm import mlstm_chunk_body
+    s = 33
+    q, k, v, li, lf, state = _mlstm_seq_inputs(s)
+    y, st = ops.mlstm_sequence(q, k, v, li, lf, state, chunk=16)
+    assert y.shape[1] == s
+    y_ref, st_ref = mlstm_chunk_body(q, k, v, li, lf, state)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(st["c"]), np.asarray(st_ref["c"]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_mlstm_sequence_trace_count_pinned():
+    """The full chunks run as ONE lax.scan: the kernel body's trace
+    count must not grow with the number of chunks (a host-loop
+    regression multiplies it)."""
+    def traces_for(s):
+        q, k, v, li, lf, state = _mlstm_seq_inputs(s, seed=s)
+        before = ops.TRACE_COUNTS["mlstm_seq_body"]
+        jax.block_until_ready(
+            ops.mlstm_sequence(q, k, v, li, lf, state, chunk=8)[0])
+        return ops.TRACE_COUNTS["mlstm_seq_body"] - before
+
+    # scan may trace its body a small fixed number of times, but the
+    # count must be identical for 2 chunks and 6 chunks
+    t2, t6 = traces_for(16), traces_for(48)
+    assert t6 == t2, (t2, t6)
