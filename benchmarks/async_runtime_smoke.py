@@ -1,6 +1,6 @@
-"""CI async-runtime gate: replay parity + live convergence.
+"""CI async-runtime gate: replay parity + live convergence + streaming.
 
-Two checks, both fatal on failure:
+Three checks, all fatal on failure:
 
   1. PARITY.  The async master/worker runtime over the deterministic
      in-process transport, replaying a seeded arrival Schedule, must
@@ -12,6 +12,14 @@ Two checks, both fatal on failure:
      arrival Schedule must itself replay through run_scanned back to
      the async trajectory (the closed loop that pins the runtime to the
      proven engine).
+  3. STREAMED.  A free run on a `Stream` (each worker synthesizes its
+     own batch at its REFRESH's master iteration) must replay through
+     the runtime itself at EXACTLY 0.0 rel err (`Master(replay=...)`
+     reruns the identical compiled programs), and echo through
+     `run_scanned` within 1e-5 — the scanned engine fuses batch
+     synthesis + grads + step into one XLA program while the runtime
+     decomposes them, so cross-engine agreement is ulp-limited (~1e-7),
+     never bitwise.
 
   PYTHONPATH=src python -m benchmarks.async_runtime_smoke
 """
@@ -61,11 +69,36 @@ def main(n_iterations: int = 40) -> dict:
         / np.maximum(np.abs(np.asarray(echo.history["gap_sq"])), 1e-8)))
     assert echo_err < 2e-5, f"recorded-arrival replay broken: {echo_err}"
 
+    # 3. streamed free-run: workers synthesize their own batches; the
+    #    runtime replay is bitwise (0.0), the scanned echo ulp-limited
+    stream = problems_lib.build_stream("quadratic",
+                                       n_workers=hyper.n_workers)
+    slive = run_async(problem, hyper, n_iterations=n_iterations,
+                      metrics_every=10, data=stream)
+    assert int(slive.arrivals.max_staleness.max()) <= hyper.tau
+    srep = run_async(problem, hyper, replay=slive.arrivals,
+                     metrics_every=10, data=stream)
+    stream_replay_err = float(np.max(np.abs(
+        np.asarray(srep.history["gap_sq"])
+        - np.asarray(slive.history["gap_sq"]))))
+    assert stream_replay_err == 0.0, \
+        f"streamed runtime replay not bitwise: {stream_replay_err}"
+    secho = run_scanned(problem, hyper, slive.arrivals,
+                        metrics_every=10, data=stream)
+    stream_echo_err = float(np.max(np.abs(
+        np.asarray(slive.history["gap_sq"])
+        - np.asarray(secho.history["gap_sq"]))
+        / np.maximum(np.abs(np.asarray(secho.history["gap_sq"])), 1e-8)))
+    assert stream_echo_err < 1e-5, \
+        f"streamed scanned echo broken: {stream_echo_err}"
+
     return {"replay_rel_err": gap_err,
             "live_gap_first": float(gaps[0]),
             "live_gap_last": float(gaps[-1]),
             "live_max_staleness": max_stale,
-            "recorded_replay_rel_err": echo_err}
+            "recorded_replay_rel_err": echo_err,
+            "stream_runtime_replay_rel_err": stream_replay_err,
+            "stream_scanned_echo_rel_err": stream_echo_err}
 
 
 if __name__ == "__main__":

@@ -40,9 +40,10 @@ Both engines also accept `data=`: replacement `problem.data` arrays
 (traced, not closed over — the compiled trajectory is reused across
 datasets of one layout), or a `repro.data.stream.Stream`, in which case
 every iteration's worker batches are SYNTHESIZED INSIDE the scan body
-from fold-in PRNG keys (`stream.batch_at(spec, key, state.t, ...)`).
-The stream's base key rides the donated carry untouched and batches
-fold on the absolute `state.t`, so any chunk partition of a trajectory
+from fold-in PRNG keys (`stream.batch_at(spec, key, state.stale.t_hat,
+...)`).  The stream's base key rides the donated carry untouched and
+each worker's row folds on its absolute consumption time (the carried
+pre-step `state.stale.t_hat`), so any chunk partition of a trajectory
 (state-continued `run_scanned` calls) sees the bit-identical batch
 sequence, and the worker-mesh engines draw each shard's own global
 worker rows locally — streaming adds NO data collectives
@@ -203,9 +204,14 @@ def _make_step_body(problem: TrilevelProblem, hyper: Hyper,
 
     stream_spec: when set, the carry grows a (constant) stream key and
     each iteration's `problem.data` is synthesized in-scan from fold-in
-    keys on the absolute `state.t` — chunk-partition invariant, and on a
-    mesh each shard draws only its own global worker rows
-    (`axis_index * n_local` offset), so streaming adds no collectives.
+    keys on each worker's absolute consumption time (the pre-step
+    `state.stale.t_hat` — worker j's row is folded at the iteration its
+    current local point was handed out, which is what a self-paced
+    async worker can reproduce from its REFRESH frame alone).  Still
+    chunk-partition invariant (t_hat rides the carry), and on a mesh
+    each shard draws only its own global worker rows (t_hat is
+    worker-stacked, so the shard's slice arrives with the state;
+    `axis_index * n_local` offset), so streaming adds no collectives.
 
     The refresh predicate also runs on `state.t` (identical to the old
     xs-iteration form for fresh starts), so state-continued chunked
@@ -224,8 +230,8 @@ def _make_step_body(problem: TrilevelProblem, hyper: Hyper,
             off = 0 if axis is None else jax.lax.axis_index(axis) * n_local
             prob = dataclasses.replace(
                 problem,
-                data=stream_lib.batch_at(stream_spec, key, st.t, off,
-                                         n_local))
+                data=stream_lib.batch_at(stream_spec, key,
+                                         st.stale.t_hat, off, n_local))
         st, step_aux = afto_lib.afto_step_aux(prob, hyper, st, mask,
                                               axis=axis)
         # post-step st.t is the 1-based master iteration count
@@ -417,7 +423,8 @@ def run_chunked(problem: TrilevelProblem, hyper: Hyper, schedule: Schedule,
     (checkpoint it, ship cut rows to a master), pull = splice refreshed
     master state back in before the next dispatch.  Chunking is exact
     for fresh starts by the continuation contract (the refresh predicate
-    and the streamed batches key on the carried absolute `state.t`), so
+    and the streamed batches key on carried absolute counters —
+    `state.t` and the per-worker `state.stale.t_hat`), so
     a hook that returns None reproduces the unchunked trajectory
     bit-for-bit; warm equal-size chunks reuse one compiled trace.
 

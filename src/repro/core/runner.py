@@ -310,10 +310,11 @@ def _run_eager(spec: RunSpec, scheduler_cfg: StragglerConfig,
             mask, sim_t = schedule.active[it], float(schedule.sim_time[it])
         else:
             mask, sim_t = sched.next_active()
-        # same iteration's batch for step / refresh / gap, keyed on the
-        # pre-step state.t — exactly what the streamed scan body does
+        # same iteration's batch for step / refresh / gap, each worker
+        # row keyed on its pre-step consumption time state.stale.t_hat —
+        # exactly what the streamed scan body does
         batch = None if stream is None else \
-            stream_lib.next_batch(stream, state.t)
+            stream_lib.next_batch(stream, state.stale.t_hat)
         state = step(state, jnp.asarray(mask), batch)
         # refresh on the absolute post-step count (== it + 1 for fresh
         # runs), matching the engine — continued states refresh where

@@ -35,6 +35,15 @@ class Schedule:
     # step math, so a degraded schedule replays exactly through
     # `run_scanned`.  None for simulated / pre-fault-era schedules.
     dead: Optional[np.ndarray] = None
+    # Arrival-control audit trail (live runtime): the EFFECTIVE quorum
+    # and forcing horizon the master actually used at each iteration —
+    # fixed (s_active, tau) without a policy, `ArrivalPolicy`'s
+    # per-iteration proposals with one.  Pure bookkeeping: `active`
+    # alone drives the step math, so adapted trajectories replay
+    # exactly; these columns make the adaptation inspectable and ride
+    # slices/checkpoints losslessly.  None for simulated schedules.
+    s_eff: Optional[np.ndarray] = None      # (T,) int64
+    tau_eff: Optional[np.ndarray] = None    # (T,) int64
 
     @property
     def n_iterations(self) -> int:
@@ -51,7 +60,9 @@ class Schedule:
         return dataclasses.replace(
             self, active=self.active[a:b], sim_time=self.sim_time[a:b],
             max_staleness=self.max_staleness[a:b],
-            dead=None if self.dead is None else self.dead[a:b])
+            dead=None if self.dead is None else self.dead[a:b],
+            s_eff=None if self.s_eff is None else self.s_eff[a:b],
+            tau_eff=None if self.tau_eff is None else self.tau_eff[a:b])
 
     def worker_shards(self, n_shards: int) -> np.ndarray:
         """Host-side inspection helper: the arrival masks grouped by
@@ -90,6 +101,10 @@ class ArrivalRecorder:
         self._sim_time: List[float] = []
         self._staleness: List[int] = []
         self._dead: List[np.ndarray] = []
+        # per-iteration effective (quorum, forcing horizon); -1 marks an
+        # iteration recorded without them (pre-policy-era history)
+        self._s_eff: List[int] = []
+        self._tau_eff: List[int] = []
         self.last_active = np.zeros(self.n_workers, dtype=np.int64)
         self.dead = np.zeros(self.n_workers, dtype=bool)
 
@@ -112,14 +127,21 @@ class ArrivalRecorder:
         self.dead[j] = False
         self.last_active[j] = self.t
 
-    def record(self, active_mask, sim_time: float) -> int:
+    def record(self, active_mask, sim_time: float,
+               s_eff: Optional[int] = None,
+               tau_eff: Optional[int] = None) -> int:
         """Append one master iteration's arrival set; returns the max
         staleness after the iteration (the paper's tau diagnostic,
-        computed among live workers only)."""
+        computed among live workers only).  `s_eff`/`tau_eff` are the
+        effective quorum / forcing horizon the master used for this
+        iteration (the `ArrivalPolicy` audit columns); omitted entries
+        record as -1."""
         mask = np.asarray(active_mask, np.float32).reshape(self.n_workers)
         self._active.append(mask)
         self._sim_time.append(float(sim_time))
         self._dead.append(self.dead.astype(np.float32).copy())
+        self._s_eff.append(-1 if s_eff is None else int(s_eff))
+        self._tau_eff.append(-1 if tau_eff is None else int(tau_eff))
         t = self.t
         self.last_active[mask > 0] = t
         live = ~self.dead
@@ -137,15 +159,35 @@ class ArrivalRecorder:
 
     def to_schedule(self) -> Schedule:
         """The recorded process as a `Schedule` (empty recorders yield
-        zero-length schedules)."""
+        zero-length schedules).  The effective-(s, tau) columns are
+        emitted whenever any iteration recorded them (-1 rows mark the
+        ones that didn't); all-unrecorded histories keep them None."""
         n = self.n_workers
+        s_eff = np.asarray(self._s_eff, np.int64)
+        tau_eff = np.asarray(self._tau_eff, np.int64)
+        have_eff = bool((s_eff >= 0).any() or (tau_eff >= 0).any())
         return Schedule(
             active=(np.stack(self._active) if self._active
                     else np.zeros((0, n), np.float32)),
             sim_time=np.asarray(self._sim_time, np.float64),
             max_staleness=np.asarray(self._staleness, np.int64),
             dead=(np.stack(self._dead) if self._dead
-                  else np.zeros((0, n), np.float32)))
+                  else np.zeros((0, n), np.float32)),
+            s_eff=s_eff if have_eff else None,
+            tau_eff=tau_eff if have_eff else None)
+
+    def recent(self, k: int = 8) -> List[dict]:
+        """The last `k` recorded iterations as status rows (the
+        `/status` endpoint's arrival table): per-iteration arrival set,
+        the effective (s, tau) used, and the staleness diagnostic."""
+        t0 = max(0, self.t - int(k))
+        return [{
+            "t": i + 1,
+            "arrived": np.nonzero(self._active[i] > 0)[0].tolist(),
+            "s_eff": int(self._s_eff[i]),
+            "tau_eff": int(self._tau_eff[i]),
+            "max_staleness": int(self._staleness[i]),
+        } for i in range(t0, self.t)]
 
     # -- durable-master support (checkpoint/io.py array dicts) -------------
 
@@ -160,21 +202,50 @@ class ArrivalRecorder:
             "staleness": np.asarray(self._staleness, np.int64),
             "dead_hist": (np.stack(self._dead) if self._dead
                           else np.zeros((0, n), np.float32)),
+            "s_eff": np.asarray(self._s_eff, np.int64),
+            "tau_eff": np.asarray(self._tau_eff, np.int64),
             "last_active": self.last_active.copy(),
             "dead": self.dead.copy(),
         }
 
     def load_state_dict(self, d: dict) -> None:
         """Inverse of `state_dict`: restore the recorded history and the
-        liveness clocks in place."""
+        liveness clocks in place.  Checkpoints written before the
+        effective-(s, tau) columns existed restore with -1 (unrecorded)
+        rows."""
         self._active = [np.asarray(r, np.float32)
                         for r in np.asarray(d["active"])]
         self._sim_time = [float(x) for x in np.asarray(d["sim_time"])]
         self._staleness = [int(x) for x in np.asarray(d["staleness"])]
         self._dead = [np.asarray(r, np.float32)
                       for r in np.asarray(d["dead_hist"])]
+        t = len(self._active)
+        self._s_eff = [int(x) for x in np.asarray(
+            d.get("s_eff", np.full(t, -1, np.int64)))]
+        self._tau_eff = [int(x) for x in np.asarray(
+            d.get("tau_eff", np.full(t, -1, np.int64)))]
         self.last_active = np.asarray(d["last_active"], np.int64).copy()
         self.dead = np.asarray(d["dead"], bool).copy()
+
+
+def validate_arrival_params(s_active: int, tau: int, n_workers: int,
+                            what: str = "arrival config") -> None:
+    """Fail fast on arrival-rule parameters that can never be satisfied.
+
+    `s_active > n_workers` makes the quorum wait a deadlock (the live
+    population can never reach s_eff) and `tau < 1` forces every worker
+    every iteration's entry into an always-violated staleness bound —
+    both used to slip through construction silently and hang the first
+    `_wait_arrivals`/`next_active` instead of raising here."""
+    if not 1 <= int(s_active) <= int(n_workers):
+        raise ValueError(
+            f"{what}: s_active={s_active} must be in "
+            f"[1, n_workers={n_workers}] — the S-of-N quorum can never "
+            f"be met otherwise (deadlocked arrival wait)")
+    if int(tau) < 1:
+        raise ValueError(
+            f"{what}: tau={tau} must be >= 1 — the staleness bound "
+            f"admits no arrival process otherwise")
 
 
 @dataclasses.dataclass
@@ -187,6 +258,86 @@ class StragglerConfig:
     base_latency: float = 1.0     # mean per-iteration worker latency
     jitter: float = 0.2           # lognormal sigma
     seed: int = 0
+
+    def __post_init__(self):
+        validate_arrival_params(self.s_active, self.tau, self.n_workers,
+                                what="StragglerConfig")
+
+
+def quorum(forced: np.ndarray, order, s_active: int) -> np.ndarray:
+    """The paper's arrival quorum, as a pure function: every tau-forced
+    worker, plus the earliest-finishing others (in `order`) until at
+    least `s_active` workers are chosen.  Returns sorted worker ids of
+    size max(n_forced, s_active) (property-tested in
+    tests/test_scheduler.py)."""
+    chosen = set(int(j) for j in np.nonzero(np.asarray(forced))[0])
+    for j in order:
+        if len(chosen) >= s_active:
+            break
+        chosen.add(int(j))
+    return np.array(sorted(chosen), dtype=np.int64)
+
+
+@dataclasses.dataclass
+class ArrivalPolicy:
+    """Closed-loop arrival control from the recorded staleness, within
+    the paper's proven envelope.
+
+    The paper fixes (S, tau) up front; the runtime records the real
+    arrival process (`ArrivalRecorder`), so the master can close the
+    loop: each iteration it feeds the observed per-worker staleness in
+    and gets an EFFECTIVE (s_eff, tau_eff) back.  The proposals never
+    leave the bound the convergence proof needs — 1 <= s_eff (clipped
+    to the live population by the master) and 1 <= tau_eff <= tau, so
+    every forced arrival still happens at or before the paper's tau —
+    and the step math only ever sees arrival masks, so adapted
+    trajectories replay exactly; the per-iteration pair lands on the
+    `Schedule`'s s_eff/tau_eff audit columns.
+
+    The rule (cf. the arrival-rule lineage in *Asynchronous Distributed
+    Bilevel Optimization*): staleness PRESSURE — any live worker within
+    one iteration of the forcing horizon — means the population is
+    heterogeneous enough that tau-forcing is about to serialize the
+    master on the straggler, so wait for MORE workers per iteration
+    (raise s_eff; arrivals stay fresher) and force one iteration
+    earlier (tighten tau_eff, spending slack the bound allows).  After
+    `relax_after` consecutive pressure-free iterations the boost decays
+    one notch back toward the configured (s_active, tau).
+    """
+    s_active: int
+    tau: int
+    relax_after: int = 4
+    max_boost: Optional[int] = None   # default: tau - 1 (keeps tau_eff >= 1)
+    _boost: int = dataclasses.field(default=0, repr=False)
+    _calm: int = dataclasses.field(default=0, repr=False)
+
+    def __post_init__(self):
+        if self.tau < 1 or self.s_active < 1:
+            raise ValueError(
+                f"ArrivalPolicy needs s_active >= 1 and tau >= 1; got "
+                f"s_active={self.s_active}, tau={self.tau}")
+        if self.max_boost is None:
+            self.max_boost = max(0, int(self.tau) - 1)
+
+    def propose(self, staleness, alive) -> Tuple[int, int]:
+        """One iteration of feedback: observed per-worker staleness (the
+        recorder's `staleness()`) + liveness mask in, effective
+        (s_eff, tau_eff) out.  Call once per master iteration."""
+        alive = np.asarray(alive, bool)
+        live_stale = np.asarray(staleness)[alive]
+        worst = int(live_stale.max()) if live_stale.size else 0
+        tau_now = max(1, self.tau - self._boost)
+        if worst >= tau_now - 1:
+            self._boost = min(self._boost + 1, self.max_boost)
+            self._calm = 0
+        else:
+            self._calm += 1
+            if self._calm >= self.relax_after and self._boost > 0:
+                self._boost -= 1
+                self._calm = 0
+        s_eff = max(1, self.s_active + self._boost)
+        tau_eff = max(1, self.tau - self._boost)
+        return s_eff, tau_eff
 
 
 class StragglerScheduler:
@@ -225,13 +376,7 @@ class StragglerScheduler:
         staleness = self.t - self.last_active
         forced = staleness >= c.tau                    # must arrive now
 
-        order = np.argsort(self.ready)
-        chosen = set(np.nonzero(forced)[0].tolist())
-        for j in order:
-            if len(chosen) >= max(c.s_active, len(chosen)):
-                break
-            chosen.add(int(j))
-        chosen_idx = np.array(sorted(chosen), dtype=np.int64)
+        chosen_idx = quorum(forced, np.argsort(self.ready), c.s_active)
 
         # master waits for the slowest chosen worker
         t_done = float(np.max(self.ready[chosen_idx]))

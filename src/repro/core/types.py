@@ -78,6 +78,18 @@ class Hyper:
     # parity reference in tests/test_inner_fused.py).
     use_fused_inner: bool = False
 
+    def __post_init__(self):
+        # Fail fast on arrival-rule parameters the runtime can never
+        # satisfy (s_active > n_workers deadlocks the quorum wait;
+        # tau < 1 admits no arrival process).  Swept hypers rebuild this
+        # dataclass with traced field values — only concrete ints are
+        # judged (shape-determining fields are static and always are).
+        if all(isinstance(v, int) for v in
+               (self.n_workers, self.s_active, self.tau)):
+            from repro.core.scheduler import validate_arrival_params
+            validate_arrival_params(self.s_active, self.tau,
+                                    self.n_workers, what="Hyper")
+
     def c1(self, t):
         return jnp.maximum(self.c1_floor,
                            1.0 / (self.eta_lambda * (t + 1.0) ** 0.25))

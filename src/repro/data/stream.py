@@ -18,11 +18,17 @@ suite `tests/test_stream.py` checks follows from these three rules):
     scan carry untouched (so chunked dispatches keep their buffers
     donated end-to-end) but batches are derived by `fold_in`, not by
     iterating/splitting the carried key forward.
-  * the iteration key is `fold_in(key, t)` with the ABSOLUTE master
-    iteration (`state.t`, which the engine carries), so ANY chunk
-    partition of a trajectory sees the bit-identical batch sequence
-    (chunking invariance), and a fixed seed reproduces it across
-    processes.
+  * worker j's iteration key is `fold_in(key, t_hat_j)` with j's
+    ABSOLUTE consumption time — `state.stale.t_hat[j]`, the master
+    iteration at which j's current local point was handed out (== the
+    global `state.t` whenever every worker is active every iteration,
+    the synchronous SFTO case).  Folding on the consumption time rather
+    than the global counter keeps ANY chunk partition of a trajectory
+    bit-identical (t_hat rides the carry), keeps a fixed seed
+    reproducible across processes, AND lets a self-paced async worker
+    synthesize its own batch from nothing but the `t` already riding
+    its REFRESH frame (`fed/runtime/worker.py`) — the worker's fold is
+    bitwise the engine's.
   * worker j's key is `fold_in(iteration_key, j)` with the GLOBAL
     worker index, so a worker-mesh shard generates exactly its own
     workers' rows shard-locally (`worker_offset = axis_index * n_local`)
@@ -87,16 +93,24 @@ def worker_key(key, it, j):
 
 def batch_at(spec: StreamSpec, key, it, worker_offset=0,
              n_local: int = None):
-    """The (n_local, ...)-stacked batch for master iteration `it`.
+    """The (n_local, ...)-stacked batch for iteration(s) `it`.
+
+    `it` is a scalar (one master iteration for the whole block) or a
+    per-worker vector of length n_local (each row folded at its own
+    consumption time — the engines pass `state.stale.t_hat`).  A scalar
+    broadcasts to the same per-lane fold-ins, so both forms are
+    bit-identical where they overlap.
 
     worker_offset / n_local select a contiguous global-worker block —
     the sharded engines pass `axis_index * n_local` so each shard draws
     only its own rows; the defaults give the full (N, ...) batch.  Rows
-    depend only on (key, it, global worker index), never on the layout.
+    depend only on (key, it_row, global worker index), never on the
+    layout (`tests/test_stream.py` pins block/offset independence).
     """
     n = spec.n_workers if n_local is None else n_local
     js = worker_offset + jnp.arange(n, dtype=jnp.int32)
-    keys = jax.vmap(lambda j: worker_key(key, it, j))(js)
+    its = jnp.broadcast_to(jnp.asarray(it, jnp.int32), js.shape)
+    keys = jax.vmap(lambda t, j: worker_key(key, t, j))(its, js)
     return jax.vmap(spec.sample)(keys)
 
 

@@ -16,8 +16,12 @@ outgoing frames:
 Every decision is a pure function of (seed, role, worker, frame index)
 through an independent counter-keyed PRNG stream, so a chaos run's
 fault sequence is exactly reproducible — every failure path is a
-replayable test, not a flake.  STOP frames are never faulted (chaos
-targets the run, not the shutdown handshake).
+replayable test, not a flake.  STOP frames are exempt from the run
+faults (chaos targets the run, not the shutdown handshake) but get
+their own seeded stream: `stop_cut_p` truncates the master's n-th STOP
+to a given worker mid-frame — the fault that pins the master's
+STOP-resend shutdown drain (a worker whose only STOP is lost would
+otherwise spin forever; STOP has no worker-side retransmit to heal it).
 
 `run_chaos_async` is the harness: an in-process master/worker
 population where every endpoint is chaos-wrapped and each worker runs
@@ -51,7 +55,7 @@ class ChaosCrash(RuntimeError):
         self.worker, self.push_seq = worker, push_seq
 
 
-_ROLE_MASTER, _ROLE_WORKER = 0, 1
+_ROLE_MASTER, _ROLE_WORKER, _ROLE_STOP = 0, 1, 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +72,7 @@ class ChaosScript:
     delay_p: float = 0.0
     delay_s: float = 0.005
     cut_p: float = 0.0
+    stop_cut_p: float = 0.0     # per-STOP mid-frame truncation
     crash_at_push: Tuple[Tuple[int, int], ...] = ()
 
     def crash_point(self, worker: int) -> Optional[int]:
@@ -85,6 +90,12 @@ class ChaosScript:
                 "dup": bool(u[1] < self.dup_p),
                 "delay": bool(u[2] < self.delay_p),
                 "cut": bool(u[3] < self.cut_p)}
+
+    def stop_cut(self, worker: int, k: int) -> bool:
+        """Deterministic: is the master's k-th STOP to `worker` cut?"""
+        u = np.random.default_rng(
+            (self.seed, _ROLE_STOP, int(worker), int(k))).random(1)
+        return bool(u[0] < self.stop_cut_p)
 
 
 def _apply_faults(deliver, frame: bytes, faults: Dict[str, bool],
@@ -110,13 +121,19 @@ class ChaosMasterEndpoint(transport_lib.MasterEndpoint):
                  script: ChaosScript):
         self.inner, self.script = inner, script
         self._sent: Dict[int, int] = {}
+        self._stops: Dict[int, int] = {}
 
     def recv(self, timeout: Optional[float] = None) -> Optional[bytes]:
         return self.inner.recv(timeout)
 
     def send(self, worker: int, frame: bytes) -> None:
         if msg_lib.peek_kind(frame) == msg_lib.STOP:
-            self.inner.send(worker, frame)
+            k = self._stops.get(worker, 0)
+            self._stops[worker] = k + 1
+            if self.script.stop_cut(worker, k):
+                self.inner.send(worker, frame[:max(1, len(frame) // 2)])
+            else:
+                self.inner.send(worker, frame)
             return
         k = self._sent.get(worker, 0)
         self._sent[worker] = k + 1
@@ -214,14 +231,19 @@ def run_chaos_async(problem, hyper, script: ChaosScript,
                     fault=fault)
     if master_hook is not None:
         master_hook(master)
+    ok = False
     try:
         result = master.run()
+        ok = True
     finally:
         stop_flag.set()
-        # unfaulted STOPs straight into the mailboxes so supervised
-        # workers exit even when the master errored out mid-run
-        for j in range(n):
-            hub.to_worker[j].put(msg_lib.encode(msg_lib.stop()))
+        if not ok:
+            # unfaulted STOPs straight into the mailboxes so supervised
+            # workers exit even when the master errored out mid-run (a
+            # CLEAN run must not get this rescue — the master's own
+            # STOP-resend shutdown drain is the tested dismissal path)
+            for j in range(n):
+                hub.to_worker[j].put(msg_lib.encode(msg_lib.stop()))
         endpoint.close()
     for t in threads:
         t.join(timeout=30.0)

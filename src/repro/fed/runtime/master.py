@@ -63,9 +63,11 @@ import numpy as np
 from repro.checkpoint import io as ckpt_io
 from repro.core import afto as afto_lib
 from repro.core import stationarity as stat_lib
-from repro.core.engine import RunResult
-from repro.core.scheduler import ArrivalRecorder, Schedule
+from repro.core.engine import RunResult, _check_stream
+from repro.core.scheduler import (ArrivalPolicy, ArrivalRecorder, Schedule,
+                                  validate_arrival_params)
 from repro.core.types import AFTOState, Hyper, TrilevelProblem
+from repro.data import stream as stream_lib
 from repro.data.stream import Stream
 from repro.fed.runtime import messages as msg_lib
 from repro.fed.runtime import transport as transport_lib
@@ -102,12 +104,22 @@ class Master:
                  replay: Optional[Schedule] = None,
                  fault: Optional[FaultConfig] = None,
                  ckpt_dir: Optional[str] = None,
-                 ckpt_every: int = 0):
+                 ckpt_every: int = 0,
+                 stream: Optional[Stream] = None,
+                 policy: Optional[ArrivalPolicy] = None):
         if replay is not None and replay.n_workers != hyper.n_workers:
             raise ValueError(
                 f"replay schedule has {replay.n_workers} workers; hyper "
                 f"has {hyper.n_workers}")
+        # Hyper validates at construction too, but the master is the
+        # component that actually deadlocks on a bad quorum — re-check
+        # here so hand-built/legacy hypers fail before the first wait.
+        validate_arrival_params(hyper.s_active, hyper.tau,
+                                hyper.n_workers, what="Master")
+        if stream is not None:
+            _check_stream(stream, hyper)
         self.problem, self.hyper = problem, hyper
+        self.stream, self.policy = stream, policy
         self.endpoint = endpoint
         self.n_iterations = (replay.n_iterations if replay is not None
                              else n_iterations)
@@ -120,6 +132,7 @@ class Master:
         n = hyper.n_workers
         self.recorder = ArrivalRecorder(n)
         self.members = Membership(n, self.fault)
+        self._eff = (None, None)   # this iteration's effective (s, tau)
         self.pending: Dict[int, tuple] = {}   # worker -> (seq, grads)
         self.last_refresh_t = np.zeros(n, dtype=np.int64)
         self._last_tx = np.zeros(n, dtype=np.float64)  # refresh send times
@@ -131,13 +144,26 @@ class Master:
                              "rejoins": 0, "corrupt_frames": 0,
                              "resumed_from": None,
                              "workers": self.members.status()}
+        # `afto_step_from_grads` never touches problem.data (the workers
+        # already differentiated at their shards); cut_refresh and the
+        # gap DO — in stream mode they take the batch synthesized at the
+        # consumption-time fold (`_batch` mirrors the streamed scan
+        # body's `batch_at(spec, key, state.stale.t_hat)` bitwise).
+        def _with(d):
+            return problem if d is None else dataclasses.replace(
+                problem, data=d)
         self._step = jax.jit(
             lambda s, m, g: afto_lib.afto_step_from_grads(
                 problem, hyper, s, m, g)[0])
         self._cut_refresh = jax.jit(
-            lambda s: afto_lib.cut_refresh(problem, hyper, s))
+            lambda s, d: afto_lib.cut_refresh(_with(d), hyper, s))
         self._gap = jax.jit(
-            lambda s: stat_lib.stationarity_gap_sq(problem, hyper, s))
+            lambda s, d: stat_lib.stationarity_gap_sq(_with(d), hyper, s))
+        if stream is not None:
+            spec = stream.spec
+            self._batch = jax.jit(
+                lambda key, t_hat: stream_lib.batch_at(spec, key, t_hat))
+            self._stream_key = jnp.asarray(stream.key)
         self._row_templates = (problem.x1_init, problem.x2_init,
                                problem.x3_init)
         self._update_worker_status()
@@ -243,12 +269,25 @@ class Master:
         the sorted worker ids to consume."""
         poll = self.fault.poll_interval
         if self.replay is not None:
+            # echo the source schedule's effective-(s, tau) audit
+            # columns (if any) so a replayed recorder reproduces them
+            rp = self.replay
+            self._eff = (
+                None if rp.s_eff is None else int(rp.s_eff[it]),
+                None if rp.tau_eff is None else int(rp.tau_eff[it]))
             target = np.nonzero(self.replay.active[it] > 0)[0]
             while not all(j in self.pending for j in target):
                 self._consume_frame(self.endpoint.recv(timeout=poll))
                 self._heal_stalled()
             return target
         forced_rule, s_active = self.hyper.tau, self.hyper.s_active
+        if self.policy is not None:
+            # one feedback step per master iteration: the policy sees
+            # the recorded staleness and proposes this iteration's
+            # effective (quorum, forcing horizon) within the tau bound
+            s_active, forced_rule = self.policy.propose(
+                self.recorder.staleness(), self.members.alive)
+        self._eff = (s_active, forced_rule)
         dead_deadline = None
         while True:
             # drain everything already in flight BEFORE judging
@@ -280,6 +319,7 @@ class Master:
                 pend_live = sum(1 for j in self.pending if alive[j])
                 if (pend_live >= s_eff
                         and all(j in self.pending for j in forced)):
+                    self._eff = (s_eff, forced_rule)
                     break
             self._consume_frame(self.endpoint.recv(timeout=poll))
             self._heal_stalled()
@@ -392,7 +432,8 @@ class Master:
             row["staleness"] = int(stale[j])
             row["dead"] = bool(self.recorder.dead[j])
         self.status.update(workers=rows, deaths=self.members.deaths,
-                           rejoins=self.members.rejoins)
+                           rejoins=self.members.rejoins,
+                           arrivals=self.recorder.recent())
 
     def run(self) -> RunResult:
         hyper = self.hyper
@@ -434,15 +475,30 @@ class Master:
                 _set_row(grads[1], int(j), g2)
                 _set_row(grads[2], int(j), g3)
 
+            # streamed data: cut_refresh and the gap consume the same
+            # batch the workers differentiated against — each row folded
+            # at its PRE-step consumption time, captured before _step
+            # advances t_hat (exactly the streamed scan body's fold)
+            t_hat_pre = (self.state.stale.t_hat
+                         if self.stream is not None else None)
             self.state = self._step(self.state, jnp.asarray(mask), grads)
             elapsed = time.perf_counter() - t_start
             sim_t = (float(self.replay.sim_time[it])
                      if self.replay is not None else elapsed)
-            stale = self.recorder.record(mask, sim_t)
+            stale = self.recorder.record(mask, sim_t,
+                                         s_eff=self._eff[0],
+                                         tau_eff=self._eff[1])
 
             t_post = t0_abs + it + 1
-            if t_post % hyper.t_pre == 0 and t_post - 1 < hyper.t1:
-                self.state = self._cut_refresh(self.state)
+            record_now = ((it + 1) % self.metrics_every == 0
+                          or it == self.n_iterations - 1)
+            do_refresh = (t_post % hyper.t_pre == 0
+                          and t_post - 1 < hyper.t1)
+            batch = (self._batch(self._stream_key, t_hat_pre)
+                     if self.stream is not None
+                     and (do_refresh or record_now) else None)
+            if do_refresh:
+                self.state = self._cut_refresh(self.state, batch)
 
             for j in active_ids:
                 self._send_rows(int(j), t_post)
@@ -450,9 +506,8 @@ class Master:
             self.status.update(t=it + 1, max_staleness=stale,
                                pending=len(self.pending))
             self._update_worker_status()
-            if (it + 1) % self.metrics_every == 0 \
-                    or it == self.n_iterations - 1:
-                gap = float(self._gap(self.state))
+            if record_now:
+                gap = float(self._gap(self.state, batch))
                 hist["t"].append(it + 1)
                 hist["sim_time"].append(sim_t)
                 hist["host_time"].append(time.perf_counter() - t_start)
@@ -475,11 +530,48 @@ class Master:
                 if left > 0:
                     time.sleep(left)
 
-        for j in range(n):
-            self._send(j, msg_lib.encode(msg_lib.stop()))
+        self._shutdown()
         self.status.update(done=True)
         return RunResult(state=self.state, history=hist,
                          arrivals=self.recorder.to_schedule())
+
+    def _shutdown(self) -> None:
+        """Reliable dismissal: resend STOP until every session closes.
+
+        STOP is the one frame with no worker-side retransmit to heal it
+        (a stopped worker is gone — there is nobody left to notice the
+        loss), so the MASTER owns shutdown reliability: send STOP to
+        every live worker, then keep draining frames — any frame from a
+        still-talking worker proves its STOP was lost (chaos cut, dead
+        socket write) and triggers a resend — until each session closes
+        (its DISCONNECT arrives; both transports surface one: TCP via
+        the reader thread, in-proc via `WorkerEndpoint.close`) or
+        `FaultConfig.stop_timeout` expires.  Workers declared dead
+        count as already closed."""
+        n = self.hyper.n_workers
+        stop = msg_lib.encode(msg_lib.stop())
+        closed = {j for j in range(n) if not self.members.alive[j]}
+        for j in range(n):
+            if j not in closed:
+                self._send(j, stop)
+        deadline = time.monotonic() + self.fault.stop_timeout
+        while len(closed) < n and time.monotonic() < deadline:
+            frame = self.endpoint.recv(timeout=self.fault.poll_interval)
+            if frame is None:
+                continue
+            meta = msg_lib.peek_meta(frame)
+            j = -1 if meta is None else int(meta.get("worker", -1))
+            if not 0 <= j < n:
+                # corrupt frame after shutdown began: the sender is
+                # unknowable, so re-dismiss everyone still open
+                for k in range(n):
+                    if k not in closed:
+                        self._send(k, stop)
+                continue
+            if msg_lib.peek_kind(frame) == msg_lib.DISCONNECT:
+                closed.add(j)
+            elif j not in closed:
+                self._send(j, stop)
 
 
 def run_async(problem: TrilevelProblem, hyper: Hyper,
@@ -494,7 +586,8 @@ def run_async(problem: TrilevelProblem, hyper: Hyper,
               ckpt_dir: Optional[str] = None,
               ckpt_every: int = 0,
               resume: bool = False,
-              accept_timeout: Optional[float] = None) -> RunResult:
+              accept_timeout: Optional[float] = None,
+              policy: Optional[ArrivalPolicy] = None) -> RunResult:
     """Run the async runtime end to end and return a `RunResult` (with
     `.arrivals` carrying the recorded live Schedule).
 
@@ -509,17 +602,21 @@ def run_async(problem: TrilevelProblem, hyper: Hyper,
     (liveness deadlines, durable state); `resume=True` restores the
     latest checkpoint from `ckpt_dir` before the loop and continues the
     interrupted trajectory.
+
+    data may be a `Stream`: each worker then synthesizes its own batch
+    at the master iteration its REFRESH frame carries (the fold is on
+    the worker's consumption time t_hat_j, which IS that `t`), and the
+    master folds the same keys for cut refresh and the gap — so the
+    recorded Schedule replays bit-exactly through `run_scanned` with
+    the same Stream.  `policy` (live runs only) adapts the effective
+    quorum / forcing horizon from observed staleness each iteration.
     """
     import threading
 
     from repro.fed.runtime import worker as worker_lib
 
-    if isinstance(data, Stream):
-        raise NotImplementedError(
-            "the async runtime consumes static problem.data; streamed "
-            "batch synthesis folds on consumption-time state.t, which a "
-            "self-paced worker cannot know ahead of its push")
-    if data is not None:
+    stream = data if isinstance(data, Stream) else None
+    if data is not None and stream is None:
         problem = dataclasses.replace(
             problem, data=jax.tree.map(jnp.asarray, data))
 
@@ -531,7 +628,7 @@ def run_async(problem: TrilevelProblem, hyper: Hyper,
             t = threading.Thread(
                 target=worker_lib.worker_loop,
                 args=(problem, j, transport.worker_endpoint(j)),
-                kwargs={"fault": fault},
+                kwargs={"fault": fault, "stream": stream},
                 daemon=True)
             t.start()
             threads.append(t)
@@ -543,7 +640,8 @@ def run_async(problem: TrilevelProblem, hyper: Hyper,
     master = Master(problem, hyper, endpoint, n_iterations,
                     metrics_fn=metrics_fn, metrics_every=metrics_every,
                     state=state, replay=replay, fault=fault,
-                    ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
+                    ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                    stream=stream, policy=policy)
     try:
         if resume:
             master.restore()

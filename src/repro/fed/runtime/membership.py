@@ -56,6 +56,7 @@ class FaultConfig:
     death_timeout: float = 10.0     # silence before a worker is declared dead
     poll_interval: float = 0.02     # master recv poll while blocked
     all_dead_timeout: float = 30.0  # blocked with zero live workers -> error
+    stop_timeout: float = 10.0      # STOP-resend shutdown drain deadline
     min_iter_time: float = 0.0      # master pacing floor (chaos smoke)
     backoff_base: float = 0.05      # worker reconnect backoff (seconds)
     backoff_cap: float = 2.0

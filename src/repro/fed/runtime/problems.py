@@ -8,6 +8,13 @@ a worker's gradients land in exactly the rows the master expects.
 
 Register new problems with `@register("name")`; a builder returns
 `(problem, hyper)` for a given (n_workers, dim, seed).
+
+Streamed data shares the same contract: `Stream` closures (the sampler)
+don't cross process boundaries either, so `STREAMS` registers a sampler
+builder under the SAME name and both the serving master and every
+subprocess worker rebuild the identical `Stream` via
+`build_stream(name, ...)` — same spec, same base key, so a worker's
+locally synthesized batch row is bitwise the row the master folds.
 """
 from __future__ import annotations
 
@@ -17,13 +24,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import Hyper, TrilevelProblem
+from repro.data import stream as stream_lib
+from repro.data.stream import Stream
 
 REGISTRY: Dict[str, Callable] = {}
+STREAMS: Dict[str, Callable] = {}
 
 
 def register(name: str):
     def deco(fn):
         REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def register_stream(name: str):
+    """Register a per-worker batch sampler `sample(key) -> data_row`
+    builder under problem name `name`; the builder takes (dim, seed)."""
+    def deco(fn):
+        STREAMS[name] = fn
         return fn
     return deco
 
@@ -35,6 +54,22 @@ def build(name: str, n_workers: int = 4, dim: int = 3,
         raise KeyError(
             f"unknown problem {name!r}; registered: {sorted(REGISTRY)}")
     return REGISTRY[name](n_workers=n_workers, dim=dim, seed=seed)
+
+
+def build_stream(name: str, n_workers: int = 4, dim: int = 3,
+                 seed: int = 0) -> Stream:
+    """Rebuild problem `name`'s `Stream` deterministically from the same
+    knobs as `build` — the cross-process agreement point for `--stream`
+    runs (master and subprocess workers each call this)."""
+    if name not in STREAMS:
+        raise KeyError(
+            f"problem {name!r} has no registered stream; "
+            f"streamed: {sorted(STREAMS)}")
+    sample = STREAMS[name](dim=dim, seed=seed)
+    # decouple the stream's key sequence from the static data key (which
+    # uses raw PRNGKey(seed) and fold_in(key, 1) above)
+    base_key = jax.random.fold_in(jax.random.PRNGKey(seed), 1000)
+    return stream_lib.make_stream(sample, n_workers, base_key)
 
 
 @register("quadratic")
@@ -64,3 +99,17 @@ def quadratic(n_workers: int = 4, dim: int = 3,
                   tau=5, k_inner=3, p_max=6, t_pre=5, t1=100,
                   eta_x=0.05, eta_z=0.05, d1=dim)
     return problem, hyper
+
+
+@register_stream("quadratic")
+def quadratic_stream(dim: int = 3, seed: int = 0) -> Callable:
+    """Fresh per-iteration (A, b) draws with the static problem's scale
+    — the smoke stream for `serve fed --stream` and the CI replay gate."""
+    del seed  # the base key is owned by build_stream; samplers are pure
+
+    def sample(key):
+        ka, kb = jax.random.split(key)
+        return {"A": jax.random.normal(ka, (dim, dim)) * 0.3,
+                "b": jax.random.normal(kb, (dim,))}
+
+    return sample

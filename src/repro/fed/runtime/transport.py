@@ -95,6 +95,13 @@ class _InProcWorker(WorkerEndpoint):
     def send(self, frame: bytes) -> None:
         self._hub.to_master.put(frame)
 
+    def close(self) -> None:
+        # mirror the TCP reader's hangup surfacing: a closing worker
+        # session enqueues its own DISCONNECT so the master's shutdown
+        # drain (and death detection) sees in-proc departures too
+        self._hub.to_master.put(msg_lib.encode(
+            msg_lib.disconnect(self._worker)))
+
 
 class InProcTransport:
     """Queue-pair transport for same-process (threaded) runs.

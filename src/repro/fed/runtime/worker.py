@@ -22,9 +22,20 @@ Fault tolerance (the worker half of the ISSUE 7 protocol):
   - Refreshes are deduplicated by master iteration `t`: a retransmitted
     refresh for an already-computed point triggers an immediate push
     retransmit instead of recomputation (the rows are bitwise the same,
-    so recomputing would be exact too — just wasted).
+    so recomputing would be exact too — just wasted).  A REFRESH whose
+    meta lacks `t` is a PROTOCOL ERROR and raises immediately: the dedup
+    rule would otherwise read it as t=0 <= last_t — a silent duplicate —
+    and wedge the worker into an infinite push-retransmit loop.
   - Corrupt frames (a connection cut mid-write, a chaos `cut` fault)
     are skipped; the retransmit protocol recovers the payload.
+
+Streamed data (`stream=`): the worker synthesizes its own batch at the
+master iteration its REFRESH carries.  That `t` IS the worker's
+consumption time t_hat_j at the moment the master will consume the
+resulting push (the master stamps refreshes with post-step t+1, exactly
+what `afto_step_from_grads` writes into t_hat for active workers), so
+`batch_at(spec, key, t, worker_offset=j, n_local=1)` reproduces the
+streamed scan body's row j bitwise — no batch bytes cross the wire.
 
 `main()` is the multi-process entry (`python -m repro.fed.runtime.worker
 --problem quadratic --worker 0 --port P`): problem closures aren't
@@ -44,6 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import TrilevelProblem
+from repro.data import stream as stream_lib
+from repro.data.stream import Stream
 from repro.fed.runtime import messages as msg_lib
 from repro.fed.runtime import transport as transport_lib
 from repro.fed.runtime.membership import FaultConfig
@@ -53,21 +66,45 @@ def worker_loop(problem: TrilevelProblem, worker: int,
                 endpoint: transport_lib.WorkerEndpoint,
                 max_pushes: Optional[int] = None,
                 epoch: int = 0,
-                fault: Optional[FaultConfig] = None) -> int:
+                fault: Optional[FaultConfig] = None,
+                stream: Optional[Stream] = None) -> int:
     """Run worker `worker`'s compute loop until STOP (or `max_pushes`);
     returns the number of gradients pushed.  `epoch` is the session
     counter announced in the opening HELLO (bumped by reconnect loops).
+    With `stream`, each refresh's batch row is synthesized locally at
+    the frame's master iteration `t` (see module docstring).
 
     Raises `ConnectionError` if the transport breaks mid-session — the
     caller (supervisor thread / CLI reconnect loop) owns the retry."""
     fault = fault or FaultConfig()
-    data_j = jax.tree.map(lambda d: jnp.asarray(d)[worker], problem.data)
     templates = (problem.x1_init, problem.x2_init, problem.x3_init)
 
+    if stream is None:
+        data_j = jax.tree.map(lambda d: jnp.asarray(d)[worker],
+                              problem.data)
+
+        def batch_row(t):
+            return data_j
+    else:
+        spec, base_key = stream.spec, jnp.asarray(stream.key)
+
+        # the vmapped n_local=1 path, row 0 — bitwise the sharded
+        # engines' layout (test_worker_blocks_are_layout_independent);
+        # `t` traces, so every iteration reuses one compiled fold
+        @jax.jit
+        def _row(t):
+            return jax.tree.map(
+                lambda x: x[0],
+                stream_lib.batch_at(spec, base_key, t,
+                                    worker_offset=worker, n_local=1))
+
+        def batch_row(t):
+            return _row(jnp.asarray(t, jnp.int32))
+
     @jax.jit
-    def grad_fn(x1, x2, x3):
+    def grad_fn(data, x1, x2, x3):
         return jax.grad(
-            lambda a, b, c: problem.f1(data_j, a, b, c),
+            lambda a, b, c: problem.f1(data, a, b, c),
             argnums=(0, 1, 2))(x1, x2, x3)
 
     endpoint.send(msg_lib.encode(msg_lib.hello(worker, epoch)))
@@ -102,7 +139,15 @@ def worker_loop(problem: TrilevelProblem, worker: int,
             break
         if m.kind != msg_lib.REFRESH:
             raise ValueError(f"worker got unexpected {m.kind!r} message")
-        t = int(m.meta.get("t", 0))
+        if "t" not in m.meta:
+            # protocol error, NOT a duplicate: defaulting a missing `t`
+            # to 0 would read as t <= last_t and wedge this worker into
+            # retransmitting a stale push forever — surface it instead
+            raise ValueError(
+                f"worker {worker} got a REFRESH without a master "
+                f"iteration 't' in its meta {m.meta!r}; refusing to "
+                "treat an unstamped frame as a duplicate")
+        t = int(m.meta["t"])
         if t <= last_t:
             # duplicate refresh: our push for this point was lost in
             # flight — the rows are unchanged, so retransmit instead of
@@ -112,7 +157,7 @@ def worker_loop(problem: TrilevelProblem, worker: int,
         last_t = t
         x1, x2, x3 = (jax.tree.map(jnp.asarray, r) for r in
                       msg_lib.refresh_rows(m, templates))
-        grads = grad_fn(x1, x2, x3)
+        grads = grad_fn(batch_row(t), x1, x2, x3)
         n_pushes += 1
         last_push_frame = msg_lib.encode(
             msg_lib.push(worker, n_pushes, grads, epoch=epoch))
@@ -140,11 +185,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--epoch", type=int, default=0,
                    help="starting session epoch (respawned workers pass "
                         "their previous epoch + 1)")
+    p.add_argument("--stream", action="store_true",
+                   help="synthesize batches locally from the problem's "
+                        "registered stream (problems.py STREAMS) instead "
+                        "of using its static data")
     args = p.parse_args(argv)
 
     problem, _ = problems_lib.build(
         args.problem, n_workers=args.n_workers, dim=args.dim,
         seed=args.seed)
+    stream = (problems_lib.build_stream(
+        args.problem, n_workers=args.n_workers, dim=args.dim,
+        seed=args.seed) if args.stream else None)
     fault = FaultConfig()
     rng = np.random.default_rng((args.seed, args.worker))
     epoch = args.epoch
@@ -164,7 +216,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         tries = 0
         try:
             worker_loop(problem, args.worker, endpoint,
-                        epoch=epoch, fault=fault)
+                        epoch=epoch, fault=fault, stream=stream)
             return 0
         except (ConnectionError, OSError):
             # the session was established and then broke: the master saw

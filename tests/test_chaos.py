@@ -92,6 +92,54 @@ def test_chaos_lossy_network_completes_and_replays():
 
 
 # ---------------------------------------------------------------------------
+# cut STOP frames: the shutdown handshake's own fault
+# ---------------------------------------------------------------------------
+
+def test_cut_stop_frames_are_resent_until_workers_dismiss():
+    """The unstoppable-worker regression: a STOP corrupted in flight is
+    dropped by the worker's decode (and STOP has no worker-side
+    retransmit to heal it), so before the resend fix the worker would
+    spin in its push-retransmit loop forever.  The master must now
+    resend STOP until every session closes.  Seeded so the FIRST STOP
+    to every worker is cut."""
+    import dataclasses
+    import threading
+
+    from repro.fed.runtime import transport as transport_lib
+    from repro.fed.runtime import worker as worker_lib
+    from repro.fed.runtime.chaos import ChaosMasterEndpoint
+    from repro.fed.runtime.master import Master
+
+    prob, hyper = _tiny()
+    n = hyper.n_workers
+    script = ChaosScript(seed=0, stop_cut_p=0.7)
+    # preconditions: the fault is real (every worker's first STOP is
+    # cut — exactly the frame the pre-fix shutdown sent exactly once)
+    # and survivable (some retransmit gets through within 30 tries)
+    assert all(script.stop_cut(j, 0) for j in range(n))
+    assert all(any(not script.stop_cut(j, k) for k in range(1, 30))
+               for j in range(n))
+
+    hub = transport_lib.InProcTransport(n)
+    fault = dataclasses.replace(FAST, stop_timeout=30.0)
+    threads = [threading.Thread(
+        target=worker_lib.worker_loop,
+        args=(prob, j, hub.worker_endpoint(j)),
+        kwargs={"fault": fault}, daemon=True) for j in range(n)]
+    for t in threads:
+        t.start()
+    master = Master(prob, hyper,
+                    ChaosMasterEndpoint(hub.master_endpoint(), script),
+                    n_iterations=8, metrics_every=4, fault=fault)
+    res = master.run()
+    for t in threads:
+        t.join(timeout=20.0)
+    # the resend drain dismissed every worker despite the cut STOPs
+    assert not any(t.is_alive() for t in threads)
+    assert res.arrivals.n_iterations == 8
+
+
+# ---------------------------------------------------------------------------
 # scripted crash + rejoin
 # ---------------------------------------------------------------------------
 

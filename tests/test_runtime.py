@@ -270,12 +270,130 @@ def test_async_free_run_arrivals_replay_through_scanned_engine():
     assert gaps[-1] < gaps[0]
 
 
-def test_async_rejects_stream_data():
-    from repro.data.stream import Stream
+def _tiny_stream(hyper):
+    return problems_lib.build_stream("quadratic",
+                                     n_workers=hyper.n_workers,
+                                     dim=3, seed=0)
+
+
+def test_async_streamed_free_run_replays_through_scanned_engine():
+    """TENTPOLE acceptance: data may be a Stream — each worker
+    synthesizes its own batch at its REFRESH's master iteration — and
+    the live run's recorded Schedule replays through `run_scanned` with
+    the same Stream.  Cross-engine agreement is ulp-limited (the scan
+    fuses batch synthesis + grads + step into one XLA program, the
+    runtime decomposes them into separate jits; same math, ~1e-7
+    context-dependent rounding — the same floor as the static-data
+    async contract), so the gate here is 1e-5; the EXACT 0.0 replay is
+    through the runtime itself, pinned below."""
     prob, hyper = _tiny()
-    with pytest.raises(NotImplementedError):
-        run_async(prob, hyper, n_iterations=2,
-                  data=Stream(key=jax.random.PRNGKey(0)))
+    strm = _tiny_stream(hyper)
+    res = run_async(prob, hyper, n_iterations=25, metrics_every=5,
+                    data=strm)
+    assert res.arrivals.n_iterations == 25
+    assert int(res.arrivals.max_staleness.max()) <= hyper.tau
+    ref = run_scanned(prob, hyper, res.arrivals, metrics_every=5,
+                      data=strm)
+    np.testing.assert_allclose(res.history["gap_sq"],
+                               ref.history["gap_sq"], rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(res.state),
+                    jax.tree.leaves(ref.state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=1e-6)
+
+
+def test_async_streamed_live_run_replays_bitwise_through_runtime():
+    """The exact-replay contract under streaming: a live streamed run's
+    recorded Schedule, replayed through a fresh `Master(replay=...)`
+    with the same Stream, reproduces the trajectory BITWISE (identical
+    compiled programs on a deterministic transport — 0.0 rel err)."""
+    prob, hyper = _tiny()
+    strm = _tiny_stream(hyper)
+    live = run_async(prob, hyper, n_iterations=25, metrics_every=5,
+                     data=strm)
+    echo = run_async(prob, hyper, replay=live.arrivals, metrics_every=5,
+                     data=strm)
+    np.testing.assert_array_equal(echo.history["gap_sq"],
+                                  live.history["gap_sq"])
+    for a, b in zip(jax.tree.leaves(echo.state),
+                    jax.tree.leaves(live.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(echo.arrivals.active,
+                                  live.arrivals.active)
+
+
+def test_async_streamed_replay_matches_run_scanned():
+    """Replay mode under streamed data: a precomputed Schedule driven
+    through the runtime equals the scanned engine with the Stream (to
+    the cross-engine ulp floor, see above)."""
+    prob, hyper = _tiny()
+    strm = _tiny_stream(hyper)
+    (schedule,) = make_schedules(20, seeds=(0,))
+    ref = run_scanned(prob, hyper, schedule, metrics_every=5, data=strm)
+    res = run_async(prob, hyper, replay=schedule, metrics_every=5,
+                    data=strm)
+    np.testing.assert_allclose(res.history["gap_sq"],
+                               ref.history["gap_sq"], rtol=1e-5)
+    np.testing.assert_array_equal(res.arrivals.active, schedule.active)
+
+
+def test_async_policy_adapted_run_replays_bitwise():
+    """A live run under an `ArrivalPolicy` records its per-iteration
+    effective (s, tau) as Schedule audit columns, and the adapted
+    trajectory replays BITWISE through a fresh `Master(replay=...)` —
+    the policy only shapes who arrives when; the masks determine the
+    math.  The replayed recorder echoes the audit columns."""
+    from repro.core.scheduler import ArrivalPolicy
+    prob, hyper = _tiny()
+    live = run_async(prob, hyper, n_iterations=20, metrics_every=5,
+                     policy=ArrivalPolicy(s_active=hyper.s_active,
+                                          tau=hyper.tau))
+    sched = live.arrivals
+    assert sched.s_eff is not None and sched.tau_eff is not None
+    assert (sched.s_eff >= 1).all()
+    assert (1 <= sched.tau_eff).all() and (sched.tau_eff
+                                           <= hyper.tau).all()
+    assert int(sched.max_staleness.max()) <= hyper.tau
+
+    echo = run_async(prob, hyper, replay=sched, metrics_every=5)
+    np.testing.assert_array_equal(echo.history["gap_sq"],
+                                  live.history["gap_sq"])
+    for a, b in zip(jax.tree.leaves(echo.state),
+                    jax.tree.leaves(live.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(echo.arrivals.s_eff, sched.s_eff)
+    np.testing.assert_array_equal(echo.arrivals.tau_eff, sched.tau_eff)
+
+
+def test_async_stream_worker_count_mismatch_fails_loudly():
+    from repro.data import stream as stream_lib
+    prob, hyper = _tiny()
+    bad = stream_lib.problem_stream(prob.data, hyper.n_workers + 1)
+    with pytest.raises(ValueError, match="workers"):
+        run_async(prob, hyper, n_iterations=2, data=bad)
+
+
+def test_worker_rejects_refresh_without_iteration_stamp():
+    """Regression: a REFRESH whose meta lacks `t` used to default to
+    t=0 <= last_t and read as a duplicate — wedging the worker into an
+    infinite push-retransmit loop.  It must surface as a protocol
+    error instead."""
+    prob, hyper = _tiny()
+    hub = InProcTransport(hyper.n_workers)
+    me = hub.master_endpoint()
+    we = hub.worker_endpoint(0)
+    state = init_state(prob, hyper)
+    rows = (jax.tree.map(lambda x: x[0], state.X1),
+            jax.tree.map(lambda x: x[0], state.X2),
+            jax.tree.map(lambda x: x[0], state.X3))
+    good = msg_lib.refresh(0, 0, rows)
+    me.send(0, encode(good))                      # consumed: last_t = 0
+    bad = msg_lib.Message(msg_lib.REFRESH,
+                          {"worker": 0},          # no "t" stamp
+                          dict(good.arrays))
+    me.send(0, encode(bad))
+    with pytest.raises(ValueError, match="REFRESH without"):
+        worker_lib.worker_loop(prob, 0, we)
 
 
 def test_run_spec_async_engine_routes_to_runtime():

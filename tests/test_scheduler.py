@@ -1,0 +1,221 @@
+"""Host-side arrival machinery: validation, the quorum rule, the
+closed-loop `ArrivalPolicy`, and the `ArrivalRecorder`'s durable state.
+
+The quorum sweep is a seeded randomized property check (no hypothesis
+dependency): for any forced set and finish order, the chosen set must
+contain every tau-forced worker and have size max(|forced|, s_active).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler import (ArrivalPolicy, ArrivalRecorder, Schedule,
+                                  StragglerConfig, quorum,
+                                  validate_arrival_params)
+
+from conftest import make_hyper
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation (the silent-misconfiguration bugfix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s_active,tau", [(0, 5), (-1, 5), (5, 5), (9, 5),
+                                          (3, 0), (3, -2)])
+def test_validate_arrival_params_rejects_unsatisfiable(s_active, tau):
+    with pytest.raises(ValueError):
+        validate_arrival_params(s_active, tau, n_workers=4)
+
+
+def test_validate_arrival_params_accepts_boundaries():
+    validate_arrival_params(1, 1, n_workers=4)
+    validate_arrival_params(4, 1, n_workers=4)
+
+
+@pytest.mark.parametrize("bad", [dict(s_active=0), dict(s_active=5),
+                                 dict(tau=0)])
+def test_straggler_config_validates_at_construction(bad):
+    kw = dict(n_workers=4, s_active=3, tau=5)
+    kw.update(bad)
+    with pytest.raises(ValueError, match="StragglerConfig"):
+        StragglerConfig(**kw)
+
+
+@pytest.mark.parametrize("bad", [dict(s_active=0), dict(s_active=9),
+                                 dict(tau=0)])
+def test_hyper_validates_at_construction(bad):
+    with pytest.raises(ValueError, match="Hyper"):
+        make_hyper(**bad)
+
+
+def test_hyper_skips_validation_for_traced_fields():
+    """Swept hypers rebuild the dataclass with non-int (traced) field
+    values — those must pass through construction unjudged."""
+    import jax.numpy as jnp
+    make_hyper(s_active=jnp.asarray(9))   # would raise if judged
+
+
+# ---------------------------------------------------------------------------
+# the quorum rule (seeded randomized property sweep)
+# ---------------------------------------------------------------------------
+
+def test_quorum_property_sweep():
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        n = int(rng.integers(1, 9))
+        s_active = int(rng.integers(1, n + 1))
+        forced = rng.random(n) < rng.random()
+        order = rng.permutation(n)
+        chosen = quorum(forced, order, s_active)
+        chosen_set = set(chosen.tolist())
+        forced_set = set(np.nonzero(forced)[0].tolist())
+        # every tau-forced worker is chosen, nobody is chosen twice,
+        # and the size is exactly max(|forced|, s_active)
+        assert forced_set <= chosen_set
+        assert len(chosen) == len(chosen_set)
+        assert len(chosen) == max(len(forced_set), s_active)
+        assert list(chosen) == sorted(chosen_set)
+        # the fill-up picks the earliest finishers: any non-forced
+        # chosen worker beats every non-forced excluded one in `order`
+        rank = {int(j): i for i, j in enumerate(order)}
+        extra = chosen_set - forced_set
+        skipped = set(range(n)) - chosen_set
+        if extra and skipped:
+            assert max(rank[j] for j in extra) < \
+                min(rank[j] for j in skipped)
+
+
+def test_quorum_forced_superset_of_s_active():
+    chosen = quorum(np.array([1, 1, 1, 0]), np.array([3, 2, 1, 0]), 1)
+    np.testing.assert_array_equal(chosen, [0, 1, 2])
+
+
+# ---------------------------------------------------------------------------
+# ArrivalPolicy: the closed arrival loop
+# ---------------------------------------------------------------------------
+
+def test_arrival_policy_rejects_bad_params():
+    with pytest.raises(ValueError):
+        ArrivalPolicy(s_active=0, tau=5)
+    with pytest.raises(ValueError):
+        ArrivalPolicy(s_active=3, tau=0)
+
+
+def test_arrival_policy_boosts_under_pressure_and_relaxes():
+    pol = ArrivalPolicy(s_active=2, tau=4, relax_after=2)
+    alive = np.ones(4, bool)
+    # a worker one step from the forcing horizon is pressure
+    s_eff, tau_eff = pol.propose(np.array([0, 0, 0, 3]), alive)
+    assert (s_eff, tau_eff) == (3, 3)
+    # calm iterations decay the boost back after relax_after
+    assert pol.propose(np.zeros(4), alive) == (3, 3)
+    assert pol.propose(np.zeros(4), alive) == (2, 4)
+
+
+def test_arrival_policy_stays_inside_tau_bound():
+    """1 <= tau_eff <= tau and s_eff >= 1 under any staleness stream."""
+    pol = ArrivalPolicy(s_active=3, tau=3)
+    rng = np.random.default_rng(1)
+    alive = np.ones(4, bool)
+    for _ in range(200):
+        s_eff, tau_eff = pol.propose(rng.integers(0, 10, size=4), alive)
+        assert 1 <= tau_eff <= 3
+        assert s_eff >= 1
+
+
+def test_arrival_policy_ignores_dead_workers():
+    pol = ArrivalPolicy(s_active=2, tau=4)
+    alive = np.array([True, True, True, False])
+    # the only pressure is on the dead worker: no boost
+    assert pol.propose(np.array([0, 0, 0, 99]), alive) == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# ArrivalRecorder: durable state + status rows
+# ---------------------------------------------------------------------------
+
+def _record_with_deaths(rec):
+    rec.record([1, 1, 0, 1], 0.1, s_eff=3, tau_eff=5)
+    rec.mark_dead(2)
+    rec.record([1, 1, 0, 0], 0.2, s_eff=4, tau_eff=4)
+    rec.record([0, 1, 0, 1], 0.3, s_eff=4, tau_eff=4)
+    rec.mark_alive(2)
+    rec.record([1, 0, 1, 1], 0.4, s_eff=3, tau_eff=5)
+
+
+def test_recorder_state_dict_round_trip_with_deaths_and_rejoins():
+    rec = ArrivalRecorder(4)
+    _record_with_deaths(rec)
+    d = rec.state_dict()
+    rec2 = ArrivalRecorder(4)
+    rec2.load_state_dict(d)
+    for k, v in rec2.state_dict().items():
+        np.testing.assert_array_equal(v, d[k])
+    np.testing.assert_array_equal(rec2.staleness(), rec.staleness())
+    a, b = rec.to_schedule(), rec2.to_schedule()
+    np.testing.assert_array_equal(a.active, b.active)
+    np.testing.assert_array_equal(a.dead, b.dead)
+    np.testing.assert_array_equal(a.s_eff, b.s_eff)
+    np.testing.assert_array_equal(a.tau_eff, b.tau_eff)
+    # the restored recorder keeps recording seamlessly
+    rec2.record([1, 1, 1, 1], 0.5)
+    assert rec2.t == 5
+
+
+def test_recorder_state_dict_round_trip_empty_history():
+    rec = ArrivalRecorder(3)
+    rec2 = ArrivalRecorder(3)
+    rec2.load_state_dict(rec.state_dict())
+    assert rec2.t == 0
+    sched = rec2.to_schedule()
+    assert sched.n_iterations == 0 and sched.s_eff is None
+    rec2.record([1, 0, 1], 0.1)
+    assert rec2.t == 1
+
+
+def test_recorder_loads_pre_policy_era_checkpoints():
+    """Checkpoints written before the effective-(s, tau) columns existed
+    restore with -1 (unrecorded) rows and a column-free Schedule."""
+    rec = ArrivalRecorder(2)
+    rec.record([1, 1], 0.1, s_eff=2, tau_eff=3)
+    d = rec.state_dict()
+    del d["s_eff"], d["tau_eff"]
+    rec2 = ArrivalRecorder(2)
+    rec2.load_state_dict(d)
+    assert rec2._s_eff == [-1] and rec2._tau_eff == [-1]
+    assert rec2.to_schedule().s_eff is None
+
+
+def test_recorder_recent_rows():
+    rec = ArrivalRecorder(4)
+    _record_with_deaths(rec)
+    rows = rec.recent(k=2)
+    assert [r["t"] for r in rows] == [3, 4]
+    assert rows[-1] == {"t": 4, "arrived": [0, 2, 3], "s_eff": 3,
+                        "tau_eff": 5, "max_staleness": rec.to_schedule()
+                        .max_staleness[-1]}
+
+
+# ---------------------------------------------------------------------------
+# Schedule.slice carries the audit columns
+# ---------------------------------------------------------------------------
+
+def test_schedule_slice_preserves_effective_columns():
+    rec = ArrivalRecorder(4)
+    _record_with_deaths(rec)
+    sched = rec.to_schedule()
+    part = sched.slice(1, 3)
+    np.testing.assert_array_equal(part.active, sched.active[1:3])
+    np.testing.assert_array_equal(part.s_eff, [4, 4])
+    np.testing.assert_array_equal(part.tau_eff, [4, 4])
+    np.testing.assert_array_equal(part.dead, sched.dead[1:3])
+
+
+def test_schedule_slice_keeps_absent_columns_none():
+    sched = Schedule(active=np.ones((4, 2), np.float32),
+                     sim_time=np.arange(4, dtype=np.float64),
+                     max_staleness=np.zeros(4, np.int64))
+    part = sched.slice(0, 2)
+    assert part.dead is None and part.s_eff is None \
+        and part.tau_eff is None

@@ -17,7 +17,7 @@ def _fed_args(**overrides):
                 metrics_every=10, transport="inproc", port=0,
                 status_port=-1, accept_timeout=0.0, death_timeout=10.0,
                 min_iter_time=0.0, ckpt_dir=None, ckpt_every=0,
-                resume=False)
+                resume=False, stream=False, adapt_arrivals=False)
     base.update(overrides)
     import argparse
     return argparse.Namespace(**base)
@@ -87,6 +87,47 @@ def test_status_endpoint_reports_per_worker_liveness():
         assert w["epoch"] == 0 and w["staleness"] >= 0
     assert st["deaths"] == 0 and st["rejoins"] == 0
     assert st["corrupt_frames"] == 0 and st["resumed_from"] is None
+
+
+def test_run_fed_streamed_inproc_round_trip():
+    """`--stream` end to end over the serve API: workers synthesize
+    their own batches and the recorded schedule carries the effective
+    (s, tau) audit columns."""
+    result, _ = serve_lib.run_fed(_fed_args(stream=True,
+                                            adapt_arrivals=True))
+    sched = result.arrivals
+    assert sched.n_iterations == 30
+    assert sched.s_eff is not None and sched.tau_eff is not None
+    assert (sched.tau_eff >= 1).all()
+
+
+def test_fed_cli_streamed_run_gates_on_replay(capsys):
+    """The streamed CLI path exits 0 only through the replay gate."""
+    rc = serve_lib.main(["fed", "--workers", "2", "--iters", "20",
+                         "--metrics-every", "5", "--stream"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "streamed replay gate" in out
+    assert "EXCEEDS" not in out
+
+
+def test_status_carries_recent_arrival_rows():
+    """The master's status dict (the /status payload) includes the
+    recorder's recent arrival rows with the effective-(s, tau) pair."""
+    held = {}
+
+    from repro.fed.runtime import problems as problems_lib
+    from repro.fed.runtime import run_async
+    problem, hyper = problems_lib.build("quadratic", n_workers=2)
+    run_async(problem, hyper, n_iterations=6, metrics_every=3,
+              master_hook=lambda m: held.setdefault("master", m))
+    rows = held["master"].status["arrivals"]
+    assert rows and rows[-1]["t"] == 6
+    for r in rows:
+        assert set(r) == {"t", "arrived", "s_eff", "tau_eff",
+                          "max_staleness"}
+        assert r["s_eff"] == hyper.s_active
+        assert r["tau_eff"] == hyper.tau
 
 
 def test_fed_cli_gates_on_convergence(capsys):

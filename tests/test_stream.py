@@ -1,9 +1,11 @@
 """Device-resident stream conformance harness (the PR-5 contract).
 
 Three rules define `repro.data.stream` (see its docstring): the base key
-is never advanced, iteration keys fold on the ABSOLUTE master iteration,
-worker keys fold on the GLOBAL worker index.  Everything here follows
-from them and guards them:
+is never advanced, each worker's iteration key folds on its ABSOLUTE
+consumption time (the pre-step `state.stale.t_hat` row — the master
+iteration its current local point was handed out, == the global
+iteration under full participation), worker keys fold on the GLOBAL
+worker index.  Everything here follows from them and guards them:
 
   * chunking invariance — any chunk partition of a trajectory (batch
     sequence AND state-continued engine dispatches, refreshes included)
@@ -193,11 +195,15 @@ def test_streamed_matches_host_fed_reference():
     """Independent host-fed reference: materialize every iteration's
     batch on the host (numpy round-trip) and drive jitted afto_step /
     cut_refresh with `problem.data` replaced per iteration — the
-    pre-stream architecture.  The streamed scan must reproduce it to
-    f32 tolerance."""
+    pre-stream architecture.  Worker j's row folds at its CONSUMPTION
+    time t_hat_j (tracked host-side here: the iteration j's current
+    local point was handed out), matching the async runtime's
+    fold-at-refresh-`t` contract.  The streamed scan must reproduce it
+    to f32 tolerance."""
     prob = make_quadratic_problem()
     hyper = make_hyper(t_pre=5)
     T = 25
+    n = hyper.n_workers
     sched = _schedule(T)
     strm = _stream()
 
@@ -207,11 +213,14 @@ def test_streamed_matches_host_fed_reference():
         dataclasses.replace(prob, data=d), hyper, s))
 
     state = afto_lib.init_state(prob, hyper)
+    t_hat = np.zeros(n, np.int32)           # pre-step consumption times
     for it in range(T):
         batch = jax.tree.map(
             lambda x: jnp.asarray(np.asarray(x)),       # host round-trip
-            stream_lib.next_batch(strm, it))
+            stream_lib.next_batch(strm, t_hat))
         state = step(state, jnp.asarray(sched.active[it]), batch)
+        t_hat = np.where(sched.active[it] > 0, it + 1, t_hat) \
+            .astype(np.int32)
         if (it + 1) % hyper.t_pre == 0 and it < hyper.t1:
             state = refresh(state, batch)
 
