@@ -410,6 +410,55 @@ def shard_cuts(fc: FlatCuts, n_shards: int) -> FlatCuts:
                     active=fc.active, age=fc.age, spec=lspec)
 
 
+def grow_spec(spec: FlatSpec, n_new: int) -> FlatSpec:
+    """The column layout after growing the worker axis to `n_new`:
+    a-leaves unchanged, each b-leaf's leading worker dimension widened.
+    Growth only — shrinking would discard live b-columns."""
+    na = n_a_leaves(spec)
+    shapes = []
+    for i, shp in enumerate(spec.shapes):
+        if i < na:
+            shapes.append(shp)
+        else:
+            if int(shp[0]) > int(n_new):
+                raise ValueError(
+                    f"grow_spec: worker axis {shp[0]} > target {n_new} "
+                    "(membership only grows)")
+            shapes.append((int(n_new),) + shp[1:])
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    offsets = tuple(np.concatenate([[0], np.cumsum(sizes)[:-1]])
+                    .astype(int)) if sizes else ()
+    return FlatSpec(tdefs=spec.tdefs, nleaves=spec.nleaves,
+                    shapes=tuple(shapes), dtypes=spec.dtypes,
+                    sizes=sizes, offsets=offsets, d_total=sum(sizes))
+
+
+def grow_cuts(fc: FlatCuts, n_new: int) -> FlatCuts:
+    """Widen the polytope's worker axis to `n_new` workers: a-columns
+    and `c`/`active`/`age` are copied, existing workers' b-columns keep
+    their coefficients, and the admitted workers' b-columns are zero —
+    exact, because a zero coefficient contributes nothing to any cut
+    contraction (the newcomers' rows enter every <b_j, x_j> term with
+    weight 0 until a refresh writes real coefficients)."""
+    spec = fc.spec
+    gspec = grow_spec(spec, n_new)
+    p = fc.a.shape[0]
+    na = n_a_leaves(spec)
+    parts = []
+    for i in range(len(spec.sizes)):
+        col = fc.a[:, spec.offsets[i]:spec.offsets[i] + spec.sizes[i]]
+        if i < na:
+            parts.append(col)
+        else:
+            n_old = spec.shapes[i][0]
+            per = spec.sizes[i] // max(1, n_old)
+            wide = jnp.zeros((p, int(n_new), per), fc.a.dtype)
+            wide = wide.at[:, :n_old].set(col.reshape(p, n_old, per))
+            parts.append(wide.reshape(p, gspec.sizes[i]))
+    return FlatCuts(a=jnp.concatenate(parts, axis=-1), c=fc.c,
+                    active=fc.active, age=fc.age, spec=gspec)
+
+
 def unshard_cuts(fc: FlatCuts, spec: FlatSpec) -> FlatCuts:
     """Inverse of `shard_cuts`: reassemble the canonical (P, D) matrix
     from the (n_shards, P, D_loc) per-shard column groups (`spec` is the

@@ -44,6 +44,16 @@ class Schedule:
     # slices/checkpoints losslessly.  None for simulated schedules.
     s_eff: Optional[np.ndarray] = None      # (T,) int64
     tau_eff: Optional[np.ndarray] = None    # (T,) int64
+    # Elastic-membership marker (live admission): the worker-population
+    # width at each iteration.  A schedule recorded through a mid-run
+    # admission keeps FULL-width columns (historical rows of `active`
+    # are zero-padded, `dead` one-padded — a worker that did not exist
+    # yet is recorded dead), and `width` says where the population grew,
+    # so the trajectory replays exactly as per-width segments (run at
+    # width[0], `membership.grow_state` at each increase, continue).
+    # None for fixed-membership schedules — a run that never admits is
+    # structurally (and bitwise) unchanged by the elastic code paths.
+    width: Optional[np.ndarray] = None      # (T,) int64
 
     @property
     def n_iterations(self) -> int:
@@ -62,7 +72,8 @@ class Schedule:
             max_staleness=self.max_staleness[a:b],
             dead=None if self.dead is None else self.dead[a:b],
             s_eff=None if self.s_eff is None else self.s_eff[a:b],
-            tau_eff=None if self.tau_eff is None else self.tau_eff[a:b])
+            tau_eff=None if self.tau_eff is None else self.tau_eff[a:b],
+            width=None if self.width is None else self.width[a:b])
 
     def worker_shards(self, n_shards: int) -> np.ndarray:
         """Host-side inspection helper: the arrival masks grouped by
@@ -105,6 +116,9 @@ class ArrivalRecorder:
         # iteration recorded without them (pre-policy-era history)
         self._s_eff: List[int] = []
         self._tau_eff: List[int] = []
+        # per-iteration population width (elastic membership); the
+        # schedule's `width` column is emitted only if it ever changed
+        self._width: List[int] = []
         self.last_active = np.zeros(self.n_workers, dtype=np.int64)
         self.dead = np.zeros(self.n_workers, dtype=bool)
 
@@ -127,6 +141,32 @@ class ArrivalRecorder:
         self.dead[j] = False
         self.last_active[j] = self.t
 
+    def widen(self, n_new: int) -> None:
+        """Grow the worker axis to `n_new` (elastic admission).  The
+        recorded history keeps full-width columns: historical `active`
+        rows are zero-padded and `dead` rows one-padded — a worker that
+        did not exist yet never arrived and is recorded dead — so the
+        widened schedule's pre-admission segment, truncated back to the
+        old width, is bitwise the schedule the narrow run recorded.
+        Admitted workers start dead (the master's `mark_alive` on the
+        ADMIT boundary resurrects them) with a fresh staleness clock."""
+        n_new = int(n_new)
+        if n_new < self.n_workers:
+            raise ValueError(
+                f"widen: {n_new} < current width {self.n_workers} "
+                "(membership only grows)")
+        if n_new == self.n_workers:
+            return
+        add = n_new - self.n_workers
+        self._active = [np.concatenate([r, np.zeros(add, np.float32)])
+                        for r in self._active]
+        self._dead = [np.concatenate([r, np.ones(add, np.float32)])
+                      for r in self._dead]
+        self.last_active = np.concatenate(
+            [self.last_active, np.full(add, self.t, np.int64)])
+        self.dead = np.concatenate([self.dead, np.ones(add, bool)])
+        self.n_workers = n_new
+
     def record(self, active_mask, sim_time: float,
                s_eff: Optional[int] = None,
                tau_eff: Optional[int] = None) -> int:
@@ -142,6 +182,7 @@ class ArrivalRecorder:
         self._dead.append(self.dead.astype(np.float32).copy())
         self._s_eff.append(-1 if s_eff is None else int(s_eff))
         self._tau_eff.append(-1 if tau_eff is None else int(tau_eff))
+        self._width.append(self.n_workers)
         t = self.t
         self.last_active[mask > 0] = t
         live = ~self.dead
@@ -166,6 +207,8 @@ class ArrivalRecorder:
         s_eff = np.asarray(self._s_eff, np.int64)
         tau_eff = np.asarray(self._tau_eff, np.int64)
         have_eff = bool((s_eff >= 0).any() or (tau_eff >= 0).any())
+        width = np.asarray(self._width, np.int64)
+        widened = bool(width.size and (width != width[0]).any())
         return Schedule(
             active=(np.stack(self._active) if self._active
                     else np.zeros((0, n), np.float32)),
@@ -174,7 +217,8 @@ class ArrivalRecorder:
             dead=(np.stack(self._dead) if self._dead
                   else np.zeros((0, n), np.float32)),
             s_eff=s_eff if have_eff else None,
-            tau_eff=tau_eff if have_eff else None)
+            tau_eff=tau_eff if have_eff else None,
+            width=width if widened else None)
 
     def recent(self, k: int = 8) -> List[dict]:
         """The last `k` recorded iterations as status rows (the
@@ -204,6 +248,7 @@ class ArrivalRecorder:
                           else np.zeros((0, n), np.float32)),
             "s_eff": np.asarray(self._s_eff, np.int64),
             "tau_eff": np.asarray(self._tau_eff, np.int64),
+            "width": np.asarray(self._width, np.int64),
             "last_active": self.last_active.copy(),
             "dead": self.dead.copy(),
         }
@@ -226,6 +271,11 @@ class ArrivalRecorder:
             d.get("tau_eff", np.full(t, -1, np.int64)))]
         self.last_active = np.asarray(d["last_active"], np.int64).copy()
         self.dead = np.asarray(d["dead"], bool).copy()
+        # a checkpointed GROWN recorder restores at its grown width;
+        # pre-elastic checkpoints default to a constant-width history
+        self.n_workers = int(self.last_active.shape[0])
+        self._width = [int(x) for x in np.asarray(
+            d.get("width", np.full(t, self.n_workers, np.int64)))]
 
 
 def validate_arrival_params(s_active: int, tau: int, n_workers: int,

@@ -185,12 +185,21 @@ def run_chaos_async(problem, hyper, script: ChaosScript,
                     restart_delay: float = 0.1,
                     metrics_every: int = 10,
                     replay=None,
-                    master_hook=None):
+                    master_hook=None,
+                    elastic=None,
+                    admit_at: Tuple[Tuple[int, float], ...] = ()):
     """Run the async runtime with every endpoint chaos-wrapped and
     crashed workers supervised back to life (bumped resume epoch).
 
+    `elastic` (an `ElasticConfig`) + `admit_at` — pairs of
+    (worker id, spawn delay seconds) — additionally inject LATE workers:
+    each is spawned after its delay in admit mode against a problem
+    built at (id + 1) workers, goes through the real ADMIT/WELCOME
+    boundary, and is supervised like any other worker (a crashed
+    newcomer re-ADMITs with a bumped epoch).
+
     Returns the master's `RunResult`; `result.arrivals` carries the
-    degraded Schedule (with its `dead` mask) that must replay exactly
+    degraded (and possibly widened) Schedule that must replay exactly
     through `run_scanned` / `Master(replay=...)`.
     """
     from repro.fed.runtime import worker as worker_lib
@@ -203,14 +212,18 @@ def run_chaos_async(problem, hyper, script: ChaosScript,
     hub = transport_lib.InProcTransport(n)
     stop_flag = threading.Event()
 
-    def supervise(j: int) -> None:
+    def supervise(j: int, wp=None, admit: bool = False,
+                  delay: float = 0.0) -> None:
+        if delay > 0:
+            time.sleep(delay)
         epoch = 0
         while not stop_flag.is_set():
             ep = ChaosWorkerEndpoint(hub.worker_endpoint(j), j, script,
                                      armed=(epoch == 0))
             try:
-                worker_lib.worker_loop(problem, j, ep, epoch=epoch,
-                                       fault=fault)
+                worker_lib.worker_loop(wp if wp is not None else problem,
+                                       j, ep, epoch=epoch,
+                                       fault=fault, admit=admit)
                 return                     # clean STOP
             except ChaosCrash:
                 # the crash kills the session: surface a DISCONNECT the
@@ -222,13 +235,21 @@ def run_chaos_async(problem, hyper, script: ChaosScript,
 
     threads = [threading.Thread(target=supervise, args=(j,), daemon=True)
                for j in range(n)]
+    worker_ids = list(range(n))
+    for j, delay in admit_at:
+        assert elastic is not None, "admit_at needs an ElasticConfig"
+        wp, _ = elastic.build(int(j) + 1)
+        threads.append(threading.Thread(
+            target=supervise, args=(int(j), wp, True, float(delay)),
+            daemon=True))
+        worker_ids.append(int(j))
     for t in threads:
         t.start()
 
     endpoint = ChaosMasterEndpoint(hub.master_endpoint(), script)
     master = Master(problem, hyper, endpoint, n_iterations,
                     metrics_every=metrics_every, replay=replay,
-                    fault=fault)
+                    fault=fault, elastic=elastic)
     if master_hook is not None:
         master_hook(master)
     ok = False
@@ -242,7 +263,8 @@ def run_chaos_async(problem, hyper, script: ChaosScript,
             # workers exit even when the master errored out mid-run (a
             # CLEAN run must not get this rescue — the master's own
             # STOP-resend shutdown drain is the tested dismissal path)
-            for j in range(n):
+            for j in worker_ids:
+                hub._ensure_queue(j)
                 hub.to_worker[j].put(msg_lib.encode(msg_lib.stop()))
         endpoint.close()
     for t in threads:

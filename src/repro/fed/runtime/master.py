@@ -71,7 +71,8 @@ from repro.data import stream as stream_lib
 from repro.data.stream import Stream
 from repro.fed.runtime import messages as msg_lib
 from repro.fed.runtime import transport as transport_lib
-from repro.fed.runtime.membership import FaultConfig, Membership
+from repro.fed.runtime.membership import (ElasticConfig, FaultConfig,
+                                          Membership, grow_state)
 
 
 def _row(tree, j: int):
@@ -106,11 +107,19 @@ class Master:
                  ckpt_dir: Optional[str] = None,
                  ckpt_every: int = 0,
                  stream: Optional[Stream] = None,
-                 policy: Optional[ArrivalPolicy] = None):
+                 policy: Optional[ArrivalPolicy] = None,
+                 elastic: Optional[ElasticConfig] = None):
         if replay is not None and replay.n_workers != hyper.n_workers:
-            raise ValueError(
-                f"replay schedule has {replay.n_workers} workers; hyper "
-                f"has {hyper.n_workers}")
+            # a WIDENING schedule replays from its initial width with
+            # the elastic machinery growing the run at the recorded
+            # boundaries; anything else is a plain mismatch
+            widening = (replay.width is not None and elastic is not None
+                        and int(replay.width[0]) == hyper.n_workers
+                        and replay.n_workers <= elastic.max_workers)
+            if not widening:
+                raise ValueError(
+                    f"replay schedule has {replay.n_workers} workers; "
+                    f"hyper has {hyper.n_workers}")
         # Hyper validates at construction too, but the master is the
         # component that actually deadlocks on a bad quorum — re-check
         # here so hand-built/legacy hypers fail before the first wait.
@@ -120,6 +129,8 @@ class Master:
             _check_stream(stream, hyper)
         self.problem, self.hyper = problem, hyper
         self.stream, self.policy = stream, policy
+        self.elastic = elastic
+        self._admit: Dict[int, int] = {}   # pending ADMITs: worker -> epoch
         self.endpoint = endpoint
         self.n_iterations = (replay.n_iterations if replay is not None
                              else n_iterations)
@@ -144,6 +155,18 @@ class Master:
                              "rejoins": 0, "corrupt_frames": 0,
                              "resumed_from": None,
                              "workers": self.members.status()}
+        self._build_jits()
+        self._row_templates = (problem.x1_init, problem.x2_init,
+                               problem.x3_init)
+        self._update_worker_status()
+
+    def _build_jits(self) -> None:
+        """(Re)build the jitted step/refresh/gap closures over the
+        CURRENT (problem, hyper, stream) — called at construction and
+        again after every elastic growth (the closures are width-static:
+        a grown run is a different XLA program)."""
+        problem, hyper, stream = self.problem, self.hyper, self.stream
+
         # `afto_step_from_grads` never touches problem.data (the workers
         # already differentiated at their shards); cut_refresh and the
         # gap DO — in stream mode they take the batch synthesized at the
@@ -164,9 +187,6 @@ class Master:
             self._batch = jax.jit(
                 lambda key, t_hat: stream_lib.batch_at(spec, key, t_hat))
             self._stream_key = jnp.asarray(stream.key)
-        self._row_templates = (problem.x1_init, problem.x2_init,
-                               problem.x3_init)
-        self._update_worker_status()
 
     # -- message plumbing ---------------------------------------------------
 
@@ -182,7 +202,30 @@ class Master:
             return
         n = self.hyper.n_workers
         j = int(m.meta.get("worker", -1))
+        if m.kind == msg_lib.ADMIT:
+            epoch = int(m.meta.get("epoch", 0))
+            if 0 <= j < n:
+                # an already-admitted worker reconnecting: the ADMIT is
+                # its rejoin HELLO — replay its rows immediately
+                if self.members.hello(j, epoch):
+                    self.recorder.mark_alive(j)
+                    self._resend_last(j)
+            elif (self.elastic is not None
+                    and n <= j < self.elastic.max_workers):
+                # queue for the next iteration boundary (latest epoch
+                # wins if the newcomer retries its ADMIT)
+                self._admit[j] = max(epoch, self._admit.get(j, epoch))
+            else:
+                self.status["corrupt_frames"] += 1
+            return
         if not 0 <= j < n:
+            if (self.elastic is not None
+                    and 0 <= j < self.elastic.max_workers):
+                # pending-admission chatter (heartbeats) is not corrupt;
+                # a newcomer dying before its boundary just dequeues
+                if m.kind == msg_lib.DISCONNECT:
+                    self._admit.pop(j, None)
+                return
             self.status["corrupt_frames"] += 1
             return
         if m.kind == msg_lib.DISCONNECT:
@@ -261,6 +304,94 @@ class Master:
                     and now - self._last_tx[j]
                     > self.fault.refresh_resend_every):
                 self._resend_last(j)
+
+    # -- elastic admission (the boundary barrier) ---------------------------
+
+    def _grow_to(self, n_new: int) -> None:
+        """Grow the run to `n_new` workers at an iteration boundary:
+        widen the canonical state (`grow_state` — zero rows, exact),
+        rebuild (problem, hyper, stream) at the new width via the
+        elastic builders, recompile the width-static jits, and widen
+        every per-worker bookkeeping array.  The arrival rule is stated
+        over the CURRENT live set, so the grown hyper's (s_active, tau)
+        govern from the next iteration on (a configured `ArrivalPolicy`
+        adopts them as its new baseline)."""
+        assert self.elastic is not None
+        n_new = int(n_new)
+        problem, hyper = self.elastic.build(n_new)
+        validate_arrival_params(hyper.s_active, hyper.tau,
+                                hyper.n_workers, what="Master (grown)")
+        self.state = grow_state(self.state, n_new)
+        add = n_new - self.hyper.n_workers
+        self.problem, self.hyper = problem, hyper
+        if self.stream is not None:
+            if self.elastic.build_stream is None:
+                raise ValueError(
+                    "a streamed elastic run needs "
+                    "ElasticConfig.build_stream to widen the Stream")
+            self.stream = self.elastic.build_stream(n_new)
+            _check_stream(self.stream, hyper)
+        self._build_jits()
+        self.members.grow(n_new)
+        self.recorder.widen(n_new)
+        self.last_refresh_t = np.concatenate(
+            [self.last_refresh_t, np.zeros(add, np.int64)])
+        self._last_tx = np.concatenate(
+            [self._last_tx, np.zeros(add, np.float64)])
+        if self.policy is not None:
+            self.policy.s_active = hyper.s_active
+            self.policy.tau = hyper.tau
+        self.status["n_workers"] = n_new
+
+    def _welcome(self, j: int, epoch: int, t_bnd: int) -> None:
+        """Open an admitted worker's session at boundary `t_bnd`: grant
+        (WELCOME), then its initial rows stamped with the boundary —
+        the newcomer's first consumption clock, so its locally folded
+        stream batch agrees with the master's bitwise."""
+        self.members.admit(j, epoch)
+        self.recorder.mark_alive(j)
+        self._send(j, msg_lib.encode(msg_lib.welcome(
+            j, t_bnd, self.hyper.n_workers)))
+        self._send_rows(j, t_bnd)
+
+    def _process_admissions(self) -> None:
+        """LIVE boundary: grow to cover every queued ADMIT and open the
+        newcomers' sessions.  Ids between the old width and the highest
+        admitted id that never said ADMIT stay dead (excluded from the
+        tau-forced set like any crashed worker)."""
+        if not self._admit:
+            return
+        n_new = max(self._admit) + 1
+        if n_new > self.hyper.n_workers:
+            self._grow_to(n_new)
+        t_bnd = int(self.state.t)
+        for j in sorted(self._admit):
+            self._welcome(j, self._admit[j], t_bnd)
+        self._admit.clear()
+        self._update_worker_status()
+
+    def _admit_for_replay(self, it: int) -> None:
+        """REPLAY boundary: at the recorded widening iteration, block
+        until every recorded newcomer's ADMIT is queued, then grow to
+        exactly the recorded width — the widened trajectory replays
+        bit-exactly because the growth happens at the same boundary
+        with the same zero rows."""
+        rp = self.replay
+        if rp.width is None:
+            return
+        w = int(rp.width[it])
+        n = self.hyper.n_workers
+        if w <= n:
+            return
+        newcomers = list(range(n, w))
+        poll = self.fault.poll_interval
+        while not all(j in self._admit for j in newcomers):
+            self._consume_frame(self.endpoint.recv(timeout=poll))
+        self._grow_to(w)
+        t_bnd = int(self.state.t)
+        for j in newcomers:
+            self._welcome(j, self._admit.pop(j), t_bnd)
+        self._update_worker_status()
 
     # -- the arrival rule ---------------------------------------------------
 
@@ -342,6 +473,7 @@ class Master:
         Restoring it reproduces the loop bitwise from the same point."""
         out: Dict[str, np.ndarray] = {
             "it": np.asarray(self.start_it, np.int64),
+            "n_workers": np.asarray(self.hyper.n_workers, np.int64),
             "last_refresh_t": self.last_refresh_t.copy(),
         }
         for i, leaf in enumerate(jax.tree.leaves(self.state)):
@@ -382,6 +514,22 @@ class Master:
         local point instead of the initial rows."""
         assert self.ckpt_dir, "Master has no ckpt_dir configured"
         d = ckpt_io.load_array_dict(self.ckpt_dir, step=step)
+        # a checkpoint written after an elastic growth is WIDER than the
+        # launch width: grow this master to the recorded population
+        # first, then restore the leaves against the grown templates
+        n_ckpt = int(d.get("n_workers", self.hyper.n_workers))
+        if n_ckpt > self.hyper.n_workers:
+            if self.elastic is None or n_ckpt > self.elastic.max_workers:
+                raise ckpt_io.CheckpointError(
+                    f"checkpoint was written at {n_ckpt} workers; this "
+                    f"master launched at {self.hyper.n_workers} with no "
+                    "elastic config able to grow that far")
+            self._grow_to(n_ckpt)
+        elif n_ckpt < self.hyper.n_workers:
+            raise ckpt_io.CheckpointError(
+                f"checkpoint was written at {n_ckpt} workers; this "
+                f"master has {self.hyper.n_workers} (membership only "
+                "grows)")
         leaves, treedef = jax.tree_util.tree_flatten(self.state)
         restored = []
         for i, tpl in enumerate(leaves):
@@ -436,8 +584,6 @@ class Master:
                            arrivals=self.recorder.recent())
 
     def run(self) -> RunResult:
-        hyper = self.hyper
-        n = hyper.n_workers
         hist = self.hist
         # absolute-iteration origin: state.t advances one per consumed
         # iteration, so subtracting the resume point recovers t0
@@ -446,22 +592,29 @@ class Master:
 
         if self.start_it == 0:
             # every worker starts from the master's initial rows
-            for j in range(n):
+            for j in range(self.hyper.n_workers):
                 self._send_rows(j, t0_abs)
         else:
             # resumed master, fresh workers: replay each live worker's
             # last consumed local point (rows unchanged since — a
             # rejoined population is bit-identical to one that never
             # saw the crash)
-            for j in range(n):
+            for j in range(self.hyper.n_workers):
                 if self.members.alive[j]:
                     self._resend_last(j)
         self._update_worker_status()
 
         for it in range(self.start_it, self.n_iterations):
             iter_t0 = time.monotonic()
+            # elastic admissions happen ONLY here, at the iteration
+            # boundary — the width is constant within an iteration
+            if self.replay is not None:
+                self._admit_for_replay(it)
+            else:
+                self._process_admissions()
             active_ids = self._wait_arrivals(it)
-            mask = np.zeros((n,), np.float32)
+            hyper = self.hyper   # fixed for this iteration
+            mask = np.zeros((hyper.n_workers,), np.float32)
             mask[active_ids] = 1.0
 
             # zero-filled inactive rows are exact: Eq. 16 multiplies
@@ -547,30 +700,31 @@ class Master:
         (its DISCONNECT arrives; both transports surface one: TCP via
         the reader thread, in-proc via `WorkerEndpoint.close`) or
         `FaultConfig.stop_timeout` expires.  Workers declared dead
-        count as already closed."""
+        count as already closed; a newcomer still queued for admission
+        (its boundary never came) is dismissed too — it is parked in
+        its WELCOME wait and must not outlive the run."""
         n = self.hyper.n_workers
         stop = msg_lib.encode(msg_lib.stop())
-        closed = {j for j in range(n) if not self.members.alive[j]}
-        for j in range(n):
-            if j not in closed:
-                self._send(j, stop)
+        open_set = {j for j in range(n) if self.members.alive[j]}
+        open_set.update(self._admit)
+        for j in sorted(open_set):
+            self._send(j, stop)
         deadline = time.monotonic() + self.fault.stop_timeout
-        while len(closed) < n and time.monotonic() < deadline:
+        while open_set and time.monotonic() < deadline:
             frame = self.endpoint.recv(timeout=self.fault.poll_interval)
             if frame is None:
                 continue
             meta = msg_lib.peek_meta(frame)
             j = -1 if meta is None else int(meta.get("worker", -1))
-            if not 0 <= j < n:
+            if j < 0:
                 # corrupt frame after shutdown began: the sender is
                 # unknowable, so re-dismiss everyone still open
-                for k in range(n):
-                    if k not in closed:
-                        self._send(k, stop)
+                for k in sorted(open_set):
+                    self._send(k, stop)
                 continue
             if msg_lib.peek_kind(frame) == msg_lib.DISCONNECT:
-                closed.add(j)
-            elif j not in closed:
+                open_set.discard(j)
+            else:
                 self._send(j, stop)
 
 
@@ -587,7 +741,8 @@ def run_async(problem: TrilevelProblem, hyper: Hyper,
               ckpt_every: int = 0,
               resume: bool = False,
               accept_timeout: Optional[float] = None,
-              policy: Optional[ArrivalPolicy] = None) -> RunResult:
+              policy: Optional[ArrivalPolicy] = None,
+              elastic: Optional[ElasticConfig] = None) -> RunResult:
     """Run the async runtime end to end and return a `RunResult` (with
     `.arrivals` carrying the recorded live Schedule).
 
@@ -610,6 +765,13 @@ def run_async(problem: TrilevelProblem, hyper: Hyper,
     recorded Schedule replays bit-exactly through `run_scanned` with
     the same Stream.  `policy` (live runs only) adapts the effective
     quorum / forcing horizon from observed staleness each iteration.
+
+    `elastic` enables mid-run admission of workers beyond the launch
+    width (see `membership.ElasticConfig`).  Replaying a WIDENING
+    Schedule over the in-process transport additionally spawns the
+    recorded newcomers up front in admit mode — each is held at the
+    recorded boundary by the master, so the widened trajectory replays
+    bit-exactly.
     """
     import threading
 
@@ -632,6 +794,25 @@ def run_async(problem: TrilevelProblem, hyper: Hyper,
                 daemon=True)
             t.start()
             threads.append(t)
+        if (replay is not None and replay.width is not None
+                and elastic is not None
+                and replay.n_workers > hyper.n_workers):
+            # the recorded newcomers: spawn each in admit mode against a
+            # problem built at (its id + 1) — the elastic builders are
+            # per-worker-row stable, so row j is identical at any build
+            # width >= j + 1
+            for j in range(hyper.n_workers, replay.n_workers):
+                wp, _ = elastic.build(j + 1)
+                ws = (None if stream is None
+                      else elastic.build_stream(j + 1))
+                t = threading.Thread(
+                    target=worker_lib.worker_loop,
+                    args=(wp, j, transport.worker_endpoint(j)),
+                    kwargs={"fault": fault, "stream": ws,
+                            "admit": True},
+                    daemon=True)
+                t.start()
+                threads.append(t)
         endpoint = transport.master_endpoint()
     else:
         endpoint = transport.master_endpoint()
@@ -641,7 +822,7 @@ def run_async(problem: TrilevelProblem, hyper: Hyper,
                     metrics_fn=metrics_fn, metrics_every=metrics_every,
                     state=state, replay=replay, fault=fault,
                     ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
-                    stream=stream, policy=policy)
+                    stream=stream, policy=policy, elastic=elastic)
     try:
         if resume:
             master.restore()
@@ -650,8 +831,10 @@ def run_async(problem: TrilevelProblem, hyper: Hyper,
         result = master.run()
     except BaseException:
         # don't leak worker threads: a failed master still dismisses
-        # its population before propagating
-        for j in range(hyper.n_workers):
+        # its population (including any spawned newcomers) before
+        # propagating
+        n_spawned = max(hyper.n_workers, len(threads))
+        for j in range(n_spawned):
             try:
                 endpoint.send(j, msg_lib.encode(msg_lib.stop()))
             except Exception:

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -96,18 +96,25 @@ class Membership:
 
     def hello(self, j: int, epoch: int) -> bool:
         """Process a HELLO; returns True if the master must replay the
-        worker's last consumed local point (a rejoin: the worker was
-        dead, or announces a new session epoch)."""
+        worker's last consumed local point.
+
+        Any post-launch HELLO is a session restart: the worker's push
+        sequence restarts at 1 regardless of whether it remembered to
+        bump its epoch, so the consumed counter resets whenever the
+        announced epoch is current-or-newer and the rows are replayed
+        unconditionally.  (The old rule replayed only on death or an
+        epoch advance — an externally supervised restart that forgot
+        `--epoch` kept its socket but never got its rows back, and its
+        seq-1 pushes read as consumed duplicates: wedged until
+        death_timeout.)  A STALE epoch still never regresses the
+        session — rows are replayed but the live session's (epoch,
+        consumed_seq) dedup state is untouched."""
         j = int(j)
-        was_dead = self.saw(j)
-        if int(epoch) > int(self.epoch[j]):
-            # new session: the worker restarted, its push sequence
-            # restarts at 1 — reset the consumed counter so its fresh
-            # pushes aren't discarded as duplicates
+        self.saw(j)
+        if int(epoch) >= int(self.epoch[j]):
             self.epoch[j] = int(epoch)
             self.consumed_seq[j] = 0
-            return True
-        return was_dead
+        return True
 
     def disconnect(self, j: int) -> bool:
         """Transport surfaced a broken connection; returns True if the
@@ -135,6 +142,42 @@ class Membership:
     @property
     def n_live(self) -> int:
         return int(self.alive.sum())
+
+    # -- elastic admission (ISSUE 10) ---------------------------------------
+
+    def grow(self, n_new: int) -> None:
+        """Widen the population to `n_new` workers.  New slots start
+        DEAD with fresh session bookkeeping — `admit` (or a gap id's
+        later ADMIT) resurrects them.  Growth is monotone; ids between
+        the old width and the highest admitted id that never said ADMIT
+        simply stay dead (they are excluded from the tau-forced set the
+        same way a crashed worker is)."""
+        n_new = int(n_new)
+        if n_new < self.n:
+            raise ValueError(
+                f"grow: {n_new} < current population {self.n} "
+                "(membership only grows)")
+        if n_new == self.n:
+            return
+        add = n_new - self.n
+        now = self.clock()
+        self.alive = np.concatenate([self.alive, np.zeros(add, bool)])
+        self.last_seen = np.concatenate(
+            [self.last_seen, np.full(add, now, np.float64)])
+        self.epoch = np.concatenate(
+            [self.epoch, np.zeros(add, np.int64)])
+        self.consumed_seq = np.concatenate(
+            [self.consumed_seq, np.zeros(add, np.int64)])
+        self.n = n_new
+
+    def admit(self, j: int, epoch: int = 0) -> None:
+        """Open an admitted worker's first session: alive, at the
+        announced epoch, with a clean consumed counter."""
+        j = int(j)
+        self.alive[j] = True
+        self.epoch[j] = int(epoch)
+        self.consumed_seq[j] = 0
+        self.last_seen[j] = self.clock()
 
     def observe_epoch(self, j: int, epoch: int) -> bool:
         """Adopt a newer session epoch seen on any frame (covers a lost
@@ -190,7 +233,9 @@ class Membership:
         self.epoch = np.asarray(d["epoch"], np.int64).copy()
         self.consumed_seq = np.asarray(d["consumed_seq"], np.int64).copy()
         self.alive = np.asarray(d["alive"], bool).copy()
-        self.last_seen[:] = self.clock()
+        # a grown snapshot restores at its grown width
+        self.n = int(self.epoch.shape[0])
+        self.last_seen = np.full(self.n, self.clock(), np.float64)
 
 
 # ---------------------------------------------------------------------------
@@ -317,3 +362,149 @@ def reshard_state(state: AFTOState, n_old: int, n_new: int) -> AFTOState:
     fixed-membership run bitwise."""
     canonical = assemble_state(state, make_views(state, n_old))
     return assemble_state(canonical, make_views(canonical, n_new))
+
+
+# ---------------------------------------------------------------------------
+# elastic admission: growing the canonical state mid-run (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def grow_state(state: AFTOState, n_new: int) -> AFTOState:
+    """Widen the canonical state's worker axis to `n_new` workers.
+
+    Every worker-stacked piece gains zero-filled rows and both cut
+    polytopes gain zero b-columns (`cuts.grow_cuts`) — exact, because
+    an admitted worker's row stays arrival-masked out of every Eq. 16
+    update until its first push is consumed, and a zero cut coefficient
+    contributes nothing to any contraction.  The newcomers' stale
+    consumption clocks `t_hat` start at the CURRENT master iteration
+    `state.t` (the admission boundary): the master stamps their first
+    rows with that t, so a streamed worker's locally folded batch
+    agrees bitwise with the master's `batch_at` fold at its first
+    consumption.  Master-replicated fields (z's, lam, gamma_k, inner
+    consensus/slack pieces, t) are untouched."""
+    import jax.numpy as jnp
+
+    n_old = _n_workers_of(state)
+    n_new = int(n_new)
+    if n_new < n_old:
+        raise ValueError(
+            f"grow_state: {n_new} < current width {n_old} "
+            "(membership only grows)")
+    if n_new == n_old:
+        return state
+    add = n_new - n_old
+
+    def pad(x):
+        x = jnp.asarray(x)
+        return jnp.pad(x, [(0, add)] + [(0, 0)] * (x.ndim - 1))
+
+    def pad_tree(tree):
+        return jax.tree.map(pad, tree)
+
+    t_hat = jnp.concatenate([
+        jnp.asarray(state.stale.t_hat),
+        jnp.broadcast_to(
+            jnp.asarray(state.t, state.stale.t_hat.dtype), (add,))])
+    return dataclasses.replace(
+        state,
+        X1=pad_tree(state.X1), X2=pad_tree(state.X2),
+        X3=pad_tree(state.X3), theta=pad_tree(state.theta),
+        stale=StaleView(
+            z1=pad_tree(state.stale.z1), z2=pad_tree(state.stale.z2),
+            z3=pad_tree(state.stale.z3), lam=pad(state.stale.lam),
+            theta=pad_tree(state.stale.theta), t_hat=t_hat),
+        inner3=InnerState3(x3=pad_tree(state.inner3.x3),
+                           z3=state.inner3.z3,
+                           phi=pad_tree(state.inner3.phi)),
+        inner2=InnerState2(x2=pad_tree(state.inner2.x2),
+                           z2=state.inner2.z2,
+                           phi=pad_tree(state.inner2.phi),
+                           s=state.inner2.s,
+                           gamma=state.inner2.gamma),
+        cuts_i=cuts_lib.grow_cuts(state.cuts_i, n_new),
+        cuts_ii=cuts_lib.grow_cuts(state.cuts_ii, n_new))
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    """Elastic-admission wiring for the async master.
+
+    `build(n) -> (problem, hyper)` rebuilds the problem at population
+    width `n` — it MUST be per-worker-row stable: worker j's data row
+    (and stream fold) is identical at every width that contains j, so
+    an already-running worker's locally built problem agrees bitwise
+    with the master's grown one (`problems.py` registry builders keep
+    this contract).  `build_stream(n)` is the streamed-data analogue.
+    `max_workers` bounds the admissible population: an ADMIT beyond it
+    is dropped as corrupt."""
+    build: Callable[[int], tuple]
+    max_workers: int
+    build_stream: Optional[Callable] = None
+
+
+def run_scanned_elastic(build: Callable[[int], tuple], schedule,
+                        metrics_fn=None, metrics_every: int = 10,
+                        build_stream: Optional[Callable] = None,
+                        state: Optional[AFTOState] = None):
+    """Replay a (possibly widening) recorded Schedule through
+    `run_scanned`, segment by population width.
+
+    A widened schedule cannot replay at full width from t=0 — the theta
+    consensus update is unmasked, so a not-yet-admitted worker's dual
+    would drift away from the zero row the live run actually held.
+    Instead each constant-width segment runs at its own width (columns
+    truncated — the padded history is zero there, so truncation is
+    exact), with `grow_state` applied at every admission boundary:
+    bitwise the live elastic master's trajectory.  Fixed-membership
+    schedules (width=None) take the plain `run_scanned` path
+    untouched."""
+    from repro.core.engine import RunResult, run_scanned
+
+    if schedule.width is None:
+        problem, hyper = build(schedule.n_workers)
+        data = (build_stream(schedule.n_workers)
+                if build_stream is not None else None)
+        return run_scanned(problem, hyper, schedule,
+                           metrics_fn=metrics_fn,
+                           metrics_every=metrics_every,
+                           state=state, data=data)
+
+    width = np.asarray(schedule.width, np.int64)
+    bounds = [0] + [int(i) for i in
+                    (np.nonzero(np.diff(width))[0] + 1)] \
+        + [schedule.n_iterations]
+    # segments record EVERY iteration (metrics_every=1; recording is
+    # read-only, the gap is a pure function of the carry) and the
+    # global `metrics_every` stride is subsampled afterwards — a
+    # segment-local stride would shift the record points off the
+    # unsegmented run's whenever a boundary isn't stride-aligned
+    history: Dict[str, list] = {}
+    host_offset = 0.0
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        w = int(width[a])
+        if state is not None and _n_workers_of(state) < w:
+            state = grow_state(state, w)
+        seg = schedule.slice(a, b)
+        seg = dataclasses.replace(
+            seg, active=seg.active[:, :w],
+            dead=None if seg.dead is None else seg.dead[:, :w],
+            width=None)
+        problem, hyper = build(w)
+        data = build_stream(w) if build_stream is not None else None
+        res = run_scanned(problem, hyper, seg, metrics_fn=metrics_fn,
+                          metrics_every=1, state=state, data=data)
+        state = res.state
+        for k, v in res.history.items():
+            col = np.asarray(v)
+            if k == "t":
+                col = col + a
+            elif k == "host_time":
+                col = col + host_offset
+            history.setdefault(k, []).extend(list(col))
+        host_offset = float(history["host_time"][-1])
+    n_total = schedule.n_iterations
+    keep = np.array([it for it in range(n_total)
+                     if (it + 1) % metrics_every == 0
+                     or it == n_total - 1], dtype=np.int64)
+    return RunResult(state=state, history={
+        k: np.asarray(v)[keep] for k, v in history.items()})

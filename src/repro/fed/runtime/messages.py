@@ -33,6 +33,12 @@ HELLO, PUSH, REFRESH, STOP = "hello", "push", "refresh", "stop"
 # — it is synthesized LOCALLY (by a transport reader thread or a chaos
 # supervisor) so the master loop can distinguish "slow" from "gone".
 HEARTBEAT, DISCONNECT = "heartbeat", "disconnect"
+# elastic-admission surface: a worker with an id BEYOND the launch
+# population opens with ADMIT instead of HELLO; the master queues it,
+# grows the canonical state at the next iteration boundary, and replies
+# WELCOME (carrying the grown population width and the boundary
+# iteration) followed by the newcomer's initial rows.
+ADMIT, WELCOME = "admit", "welcome"
 
 
 @dataclasses.dataclass
@@ -124,6 +130,23 @@ def hello(worker: int, epoch: int = 0) -> Message:
     every reconnect, so the master can replay the worker's last consumed
     local point and discard frames from dead sessions."""
     return Message(HELLO, {"worker": int(worker), "epoch": int(epoch)}, {})
+
+
+def admit(worker: int, epoch: int = 0) -> Message:
+    """Worker -> master: request admission into the population for an
+    id at-or-beyond the launch width.  `epoch` follows the HELLO
+    session-counter contract — an admitted worker that reconnects sends
+    ADMIT again with a bumped epoch and is treated like any rejoin."""
+    return Message(ADMIT, {"worker": int(worker), "epoch": int(epoch)}, {})
+
+
+def welcome(worker: int, t_master: int, n_workers: int) -> Message:
+    """Master -> worker: the admission grant, sent at the iteration
+    boundary where the population grew to `n_workers`; the newcomer's
+    initial rows (a REFRESH stamped with the same boundary `t_master`)
+    follow immediately."""
+    return Message(WELCOME, {"worker": int(worker), "t": int(t_master),
+                             "n_workers": int(n_workers)}, {})
 
 
 def heartbeat(worker: int, epoch: int = 0) -> Message:

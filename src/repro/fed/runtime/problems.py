@@ -15,6 +15,15 @@ builder under the SAME name and both the serving master and every
 subprocess worker rebuild the identical `Stream` via
 `build_stream(name, ...)` — same spec, same base key, so a worker's
 locally synthesized batch row is bitwise the row the master folds.
+
+Elastic admission adds a third clause to the contract: builders must be
+PER-WORKER-ROW STABLE — worker j's data row is a function of (seed, j)
+alone, identical at any build width > j.  A late worker builds the
+problem at `j + 1` workers and must own exactly the row the master's
+grown problem holds at index j (streams already satisfy this: the fold
+is on the global worker index).  Drawing `normal(key, (n_workers, ...))`
+in one shot VIOLATES it — the whole tensor reshuffles when n_workers
+changes — so seed rows with `fold_in(key, j)` instead.
 """
 from __future__ import annotations
 
@@ -72,15 +81,40 @@ def build_stream(name: str, n_workers: int = 4, dim: int = 3,
     return stream_lib.make_stream(sample, n_workers, base_key)
 
 
+def elastic_config(name: str, max_workers: int, dim: int = 3,
+                   seed: int = 0, stream: bool = False):
+    """An `ElasticConfig` whose builders rebuild registry problem
+    `name` at any width from the same knobs — the standard wiring for
+    `Master(elastic=...)` / `serve fed --max-workers` (registry builders
+    are per-worker-row stable by contract, see module docstring)."""
+    from repro.fed.runtime.membership import ElasticConfig
+
+    return ElasticConfig(
+        build=lambda n: build(name, n_workers=n, dim=dim, seed=seed),
+        max_workers=int(max_workers),
+        build_stream=((lambda n: build_stream(
+            name, n_workers=n, dim=dim, seed=seed)) if stream else None))
+
+
 @register("quadratic")
 def quadratic(n_workers: int = 4, dim: int = 3,
               seed: int = 0) -> Tuple[TrilevelProblem, Hyper]:
     """The tiny seeded quadratic trilevel problem used across the test
-    suite and the quickstart — the canonical smoke problem."""
+    suite and the quickstart — the canonical smoke problem.
+
+    The data is seeded PER WORKER ROW (`fold_in(key, j)`), so row j is
+    bitwise identical at every build width > j — the row-stability
+    contract elastic admission relies on (module docstring)."""
     key = jax.random.PRNGKey(seed)
-    data = {"A": jax.random.normal(key, (n_workers, dim, dim)) * 0.3,
-            "b": jax.random.normal(jax.random.fold_in(key, 1),
-                                   (n_workers, dim))}
+    row_keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        key, jnp.arange(n_workers))
+    data = {
+        "A": jax.vmap(
+            lambda k: jax.random.normal(k, (dim, dim)))(row_keys) * 0.3,
+        "b": jax.vmap(
+            lambda k: jax.random.normal(jax.random.fold_in(k, 1),
+                                        (dim,)))(row_keys),
+    }
 
     def f1(d, x1, x2, x3):
         return jnp.sum((x1 - d["A"] @ x3 - d["b"]) ** 2)

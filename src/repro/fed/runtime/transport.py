@@ -77,6 +77,7 @@ class _InProcMaster(MasterEndpoint):
             return None
 
     def send(self, worker: int, frame: bytes) -> None:
+        self._hub._ensure_queue(int(worker))
         self._hub.to_worker[worker].put(frame)
 
 
@@ -109,19 +110,32 @@ class InProcTransport:
     Frames still round-trip through `messages.encode`/`decode`, so every
     test on this transport exercises the real wire format.  A rejoining
     worker simply requests `worker_endpoint(j)` again — the queues
-    persist across worker sessions, like a master-side mailbox."""
+    persist across worker sessions, like a master-side mailbox.  The
+    mailbox list grows on demand: an elastic late-joiner with an id
+    beyond the launch population registers its queue by asking for its
+    endpoint (and the master's reply send registers it too, whichever
+    side arrives first)."""
 
     def __init__(self, n_workers: int):
         self.n_workers = int(n_workers)
         self.to_master: "queue.Queue[bytes]" = queue.Queue()
         self.to_worker: List["queue.Queue[bytes]"] = [
             queue.Queue() for _ in range(self.n_workers)]
+        self._grow_lock = threading.Lock()
+
+    def _ensure_queue(self, worker: int) -> None:
+        if worker < len(self.to_worker):
+            return
+        with self._grow_lock:
+            while len(self.to_worker) <= worker:
+                self.to_worker.append(queue.Queue())
 
     def master_endpoint(self) -> MasterEndpoint:
         return _InProcMaster(self)
 
     def worker_endpoint(self, worker: int) -> WorkerEndpoint:
-        return _InProcWorker(self, worker)
+        self._ensure_queue(int(worker))
+        return _InProcWorker(self, int(worker))
 
 
 # ---------------------------------------------------------------------------
@@ -155,8 +169,11 @@ class _TcpMaster(MasterEndpoint):
     the worker's socket and the HELLO frame is surfaced to the master
     loop (which owns the resume protocol)."""
 
-    def __init__(self, host: str, port: int, n_workers: int):
+    def __init__(self, host: str, port: int, n_workers: int,
+                 max_workers: Optional[int] = None):
         self.n_workers = n_workers
+        self.max_workers = (n_workers if max_workers is None
+                            else max(int(max_workers), n_workers))
         self._server = socket.create_server((host, port))
         self.port = self._server.getsockname()[1]
         self._socks: Dict[int, socket.socket] = {}
@@ -166,32 +183,55 @@ class _TcpMaster(MasterEndpoint):
         self._closed = False
 
     def _handshake(self, conn: socket.socket):
-        """Read + validate one HELLO; returns (worker id, raw frame).
-        The frame is NOT enqueued — callers decide."""
+        """Read + validate one opening frame; returns (worker id, raw
+        frame).  HELLO ids must be inside the launch population; ADMIT
+        ids (elastic late-joiners) must be inside [n_workers,
+        max_workers).  The frame is NOT enqueued — callers decide.
+        Every malformed-opening failure surfaces as `ConnectionError`
+        so callers can close the probe socket and keep accepting."""
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         raw = _recv_frame(conn)
-        m = msg_lib.decode(raw)
-        if m.kind != msg_lib.HELLO:
+        try:
+            m = msg_lib.decode(raw)
+        except Exception as e:
             raise ConnectionError(
-                f"expected hello handshake, got {m.kind!r}")
+                f"undecodable handshake frame: {e}") from e
+        if m.kind not in (msg_lib.HELLO, msg_lib.ADMIT):
+            raise ConnectionError(
+                f"expected hello/admit handshake, got {m.kind!r}")
         j = int(m.meta["worker"])
-        if not 0 <= j < self.n_workers:
+        if m.kind == msg_lib.HELLO and not 0 <= j < self.n_workers:
             raise ConnectionError(
                 f"hello from out-of-range worker id {j} "
                 f"(expected 0..{self.n_workers - 1})")
+        if m.kind == msg_lib.ADMIT and \
+                not self.n_workers <= j < self.max_workers:
+            raise ConnectionError(
+                f"admit from out-of-range worker id {j} "
+                f"(expected {self.n_workers}..{self.max_workers - 1})")
         return j, raw
 
     def wait_for_workers(self, timeout: Optional[float] = None) -> None:
         """Block until every worker has completed the HELLO handshake.
 
-        Rejects duplicate and out-of-range worker ids loudly (a
-        duplicate id would silently adopt another worker's row
-        assignment), and fails the launch with `TimeoutError` if the
-        full population hasn't arrived within `timeout` seconds.  On
+        Rejects duplicate worker ids loudly (a duplicate id would
+        silently adopt another worker's row assignment), and fails the
+        launch with `TimeoutError` if the full population hasn't
+        arrived within `timeout` seconds.  A MALFORMED opening (garbled
+        frame, non-HELLO bytes, out-of-range id — e.g. a port-scanner
+        probe) closes that socket and keeps accepting: a stray packet
+        must not kill a healthy launch, and must not leak the accepted
+        connection.  An eager ADMIT arriving during launch is installed
+        and queued for the master's admission barrier; only ids inside
+        the launch population count toward the handshake quorum.  On
         success, starts the reconnect accept loop."""
         import time as _time
         deadline = None if timeout is None else _time.monotonic() + timeout
-        while len(self._socks) < self.n_workers:
+
+        def _population():
+            return {k for k in self._socks if k < self.n_workers}
+
+        while len(_population()) < self.n_workers:
             if deadline is not None:
                 self._server.settimeout(max(0.0,
                                             deadline - _time.monotonic()))
@@ -200,15 +240,28 @@ class _TcpMaster(MasterEndpoint):
             except (socket.timeout, TimeoutError):
                 raise TimeoutError(
                     f"timed out waiting for workers: "
-                    f"{len(self._socks)}/{self.n_workers} connected "
-                    f"(missing {sorted(set(range(self.n_workers)) - set(self._socks))})")
-            j, _ = self._handshake(conn)
+                    f"{len(_population())}/{self.n_workers} connected "
+                    f"(missing {sorted(set(range(self.n_workers)) - _population())})")
+            try:
+                conn.settimeout(10.0)
+                j, raw = self._handshake(conn)
+                conn.settimeout(None)
+            except (ConnectionError, OSError, TimeoutError):
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                continue
             if j in self._socks:
                 conn.close()
                 raise ConnectionError(
                     f"duplicate hello for worker id {j}; its socket is "
                     f"already registered")
             self._install(j, conn)
+            if j >= self.n_workers:
+                # an elastic late-joiner beat the launch: surface its
+                # ADMIT so the running master can process the admission
+                self._inbound.put(raw)
         self._server.settimeout(None)
         self._start_accept_loop()
 
@@ -224,6 +277,10 @@ class _TcpMaster(MasterEndpoint):
         t = threading.Thread(target=self._reader, args=(conn, j),
                              daemon=True)
         t.start()
+        # prune finished reader threads (replaced sessions) so a
+        # long-lived elastic serve process doesn't retain one dead
+        # Thread object per rejoin forever
+        self._threads = [th for th in self._threads if th.is_alive()]
         self._threads.append(t)
 
     def _start_accept_loop(self) -> None:
@@ -300,11 +357,13 @@ class _TcpMaster(MasterEndpoint):
 
 
 class _TcpWorker(WorkerEndpoint):
-    def __init__(self, host: str, port: int, worker: int, epoch: int = 0):
+    def __init__(self, host: str, port: int, worker: int, epoch: int = 0,
+                 admit: bool = False):
         self._sock = socket.create_connection((host, port))
         self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        _send_frame(self._sock, msg_lib.encode(
-            msg_lib.hello(worker, epoch)))
+        opening = (msg_lib.admit(worker, epoch) if admit
+                   else msg_lib.hello(worker, epoch))
+        _send_frame(self._sock, msg_lib.encode(opening))
 
     def recv(self, timeout: Optional[float] = None) -> Optional[bytes]:
         if timeout is None:
@@ -348,18 +407,21 @@ class TcpTransport:
     """
 
     def __init__(self, n_workers: int, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, max_workers: Optional[int] = None):
         self.n_workers = int(n_workers)
+        self.max_workers = max_workers
         self.host, self.port = host, port
         self._master: Optional[_TcpMaster] = None
 
     def master_endpoint(self) -> _TcpMaster:
         if self._master is None:
-            self._master = _TcpMaster(self.host, self.port, self.n_workers)
+            self._master = _TcpMaster(self.host, self.port,
+                                      self.n_workers,
+                                      max_workers=self.max_workers)
             self.port = self._master.port
         return self._master
 
     @staticmethod
-    def connect(host: str, port: int, worker: int,
-                epoch: int = 0) -> WorkerEndpoint:
-        return _TcpWorker(host, port, worker, epoch)
+    def connect(host: str, port: int, worker: int, epoch: int = 0,
+                admit: bool = False) -> WorkerEndpoint:
+        return _TcpWorker(host, port, worker, epoch, admit=admit)

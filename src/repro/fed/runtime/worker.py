@@ -67,12 +67,18 @@ def worker_loop(problem: TrilevelProblem, worker: int,
                 max_pushes: Optional[int] = None,
                 epoch: int = 0,
                 fault: Optional[FaultConfig] = None,
-                stream: Optional[Stream] = None) -> int:
+                stream: Optional[Stream] = None,
+                admit: bool = False) -> int:
     """Run worker `worker`'s compute loop until STOP (or `max_pushes`);
     returns the number of gradients pushed.  `epoch` is the session
     counter announced in the opening HELLO (bumped by reconnect loops).
     With `stream`, each refresh's batch row is synthesized locally at
     the frame's master iteration `t` (see module docstring).
+
+    `admit=True` opens with ADMIT instead of HELLO — the elastic
+    protocol for an id beyond the launch population.  The worker then
+    idles (heartbeating) until the master's boundary WELCOME + initial
+    rows arrive; an admitted worker keeps using ADMIT on reconnect.
 
     Raises `ConnectionError` if the transport breaks mid-session — the
     caller (supervisor thread / CLI reconnect loop) owns the retry."""
@@ -107,7 +113,9 @@ def worker_loop(problem: TrilevelProblem, worker: int,
             lambda a, b, c: problem.f1(data, a, b, c),
             argnums=(0, 1, 2))(x1, x2, x3)
 
-    endpoint.send(msg_lib.encode(msg_lib.hello(worker, epoch)))
+    opening = (msg_lib.admit(worker, epoch) if admit
+               else msg_lib.hello(worker, epoch))
+    endpoint.send(msg_lib.encode(opening))
     n_pushes = 0
     last_t = -1                 # newest master iteration acted on
     last_push_frame: Optional[bytes] = None   # unacked push, for resends
@@ -137,6 +145,10 @@ def worker_loop(problem: TrilevelProblem, worker: int,
             continue            # corrupt frame; retransmits recover it
         if m.kind == msg_lib.STOP:
             break
+        if m.kind == msg_lib.WELCOME:
+            # the admission grant; the initial rows (a REFRESH stamped
+            # with the same boundary t) follow on the same connection
+            continue
         if m.kind != msg_lib.REFRESH:
             raise ValueError(f"worker got unexpected {m.kind!r} message")
         if "t" not in m.meta:
@@ -191,11 +203,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                         "of using its static data")
     args = p.parse_args(argv)
 
+    # an id at-or-beyond the launch width is a LATE worker: it builds
+    # the problem wide enough to contain its own row (registry problems
+    # are per-worker-row stable, so row j is identical at any build
+    # width >= j + 1) and opens with ADMIT instead of HELLO
+    admit = args.worker >= args.n_workers
+    build_n = max(args.n_workers, args.worker + 1)
     problem, _ = problems_lib.build(
-        args.problem, n_workers=args.n_workers, dim=args.dim,
+        args.problem, n_workers=build_n, dim=args.dim,
         seed=args.seed)
     stream = (problems_lib.build_stream(
-        args.problem, n_workers=args.n_workers, dim=args.dim,
+        args.problem, n_workers=build_n, dim=args.dim,
         seed=args.seed) if args.stream else None)
     fault = FaultConfig()
     rng = np.random.default_rng((args.seed, args.worker))
@@ -204,7 +222,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     while True:
         try:
             endpoint = transport_lib.TcpTransport.connect(
-                args.host, args.port, args.worker, epoch=epoch)
+                args.host, args.port, args.worker, epoch=epoch,
+                admit=admit)
         except OSError:
             tries += 1
             if tries > fault.backoff_tries:
@@ -216,7 +235,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         tries = 0
         try:
             worker_loop(problem, args.worker, endpoint,
-                        epoch=epoch, fault=fault, stream=stream)
+                        epoch=epoch, fault=fault, stream=stream,
+                        admit=admit)
             return 0
         except (ConnectionError, OSError):
             # the session was established and then broke: the master saw

@@ -175,10 +175,21 @@ def run_fed(args):
     policy = None
     if args.adapt_arrivals:
         policy = ArrivalPolicy(s_active=hyper.s_active, tau=hyper.tau)
+    elastic = None
+    max_workers = getattr(args, "max_workers", 0)
+    if max_workers > args.workers:
+        # accept ADMITs from ids [workers, max_workers): a late worker
+        # (`--worker J` with J >= --workers) joins mid-run at the next
+        # iteration boundary
+        elastic = problems_lib.elastic_config(
+            args.problem, max_workers, dim=args.dim, seed=args.seed,
+            stream=bool(args.stream))
 
     transport, procs = None, []
     if args.transport == "tcp":
-        transport = TcpTransport(args.workers, port=args.port)
+        transport = TcpTransport(args.workers, port=args.port,
+                                 max_workers=max(max_workers,
+                                                 args.workers))
         transport.master_endpoint()          # bind before spawning
         print(f"master listening on 127.0.0.1:{transport.port}")
         procs = spawn_tcp_workers(args, transport.port)
@@ -202,7 +213,7 @@ def run_fed(args):
             data=stream, policy=policy,
             master_hook=hook, fault=fault,
             ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-            resume=args.resume,
+            resume=args.resume, elastic=elastic,
             accept_timeout=(args.accept_timeout
                             if args.accept_timeout > 0 else None))
     finally:
@@ -221,6 +232,12 @@ def main_fed(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--metrics-every", type=int, default=10)
     ap.add_argument("--transport", choices=("inproc", "tcp"),
                     default="inproc")
+    ap.add_argument("--max-workers", type=int, default=0,
+                    help="accept elastic ADMITs for worker ids up to "
+                         "this population cap (0 = fixed membership); "
+                         "late workers connect with --worker >= "
+                         "--workers and join at the next iteration "
+                         "boundary")
     ap.add_argument("--port", type=int, default=0,
                     help="TCP master port (0 = ephemeral)")
     ap.add_argument("--status-port", type=int, default=-1,
@@ -291,15 +308,26 @@ def _streamed_replay_gate(args, result) -> bool:
     pinned in tests/test_runtime.py."""
     from repro.core.engine import run_scanned
     from repro.fed.runtime import problems as problems_lib
+    from repro.fed.runtime.membership import run_scanned_elastic
 
-    problem, hyper = problems_lib.build(
-        args.problem, n_workers=args.workers, dim=args.dim,
-        seed=args.seed)
-    stream = problems_lib.build_stream(
-        args.problem, n_workers=args.workers, dim=args.dim,
-        seed=args.seed)
-    ref = run_scanned(problem, hyper, result.arrivals,
-                      metrics_every=args.metrics_every, data=stream)
+    if result.arrivals.width is not None:
+        # a widened (elastic) run echoes through the segmented replay:
+        # the engine runs each constant-width segment at its own width
+        ref = run_scanned_elastic(
+            lambda n: problems_lib.build(
+                args.problem, n_workers=n, dim=args.dim, seed=args.seed),
+            result.arrivals, metrics_every=args.metrics_every,
+            build_stream=lambda n: problems_lib.build_stream(
+                args.problem, n_workers=n, dim=args.dim, seed=args.seed))
+    else:
+        problem, hyper = problems_lib.build(
+            args.problem, n_workers=args.workers, dim=args.dim,
+            seed=args.seed)
+        stream = problems_lib.build_stream(
+            args.problem, n_workers=args.workers, dim=args.dim,
+            seed=args.seed)
+        ref = run_scanned(problem, hyper, result.arrivals,
+                          metrics_every=args.metrics_every, data=stream)
     live = np.asarray(result.history["gap_sq"], np.float64)
     echo = np.asarray(ref.history["gap_sq"], np.float64)
     if live.shape != echo.shape:

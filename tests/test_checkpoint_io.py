@@ -159,6 +159,51 @@ def test_master_runtime_carry_round_trip(tmp_path):
     assert m2.members.alive.all()
 
 
+def test_master_grown_carry_round_trip(tmp_path):
+    """ISSUE 10: a checkpoint written AFTER an elastic growth records
+    the grown width; restoring it into a master launched at the
+    ORIGINAL width (with elastic headroom) grows first, then restores
+    the leaves bitwise.  Without headroom the widened checkpoint is
+    refused, and a narrow checkpoint never shrinks a wider master."""
+    from repro.fed.runtime import problems as problems_lib
+    from repro.fed.runtime.master import Master
+    from repro.fed.runtime.transport import InProcTransport
+
+    d = os.fspath(tmp_path / "master_ck")
+    elastic = problems_lib.elastic_config("quadratic", 5)
+
+    def fresh(ckpt_dir, n_workers=3, elastic_cfg=elastic):
+        prob, hyper = problems_lib.build("quadratic", n_workers=n_workers)
+        hub = InProcTransport(n_workers)
+        return Master(prob, hyper, hub.master_endpoint(),
+                      n_iterations=10, ckpt_dir=ckpt_dir,
+                      elastic=elastic_cfg)
+
+    m = fresh(d)
+    m._grow_to(5)
+    m.recorder.record(np.array([1, 0, 1, 1, 1], np.float32), 0.5)
+    m.save(step=4)
+
+    m2 = fresh(d)                       # launched at width 3
+    assert m2.restore() == 4
+    assert m2.hyper.n_workers == 5      # grew before restoring leaves
+    for a, b in zip(jax.tree.leaves(m.state), jax.tree.leaves(m2.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k, v in m.recorder.state_dict().items():
+        np.testing.assert_array_equal(m2.recorder.state_dict()[k], v)
+    assert m2.members.n == 5
+
+    # no elastic headroom: the widened checkpoint must be refused
+    with pytest.raises(CheckpointError, match="elastic"):
+        fresh(d, elastic_cfg=None).restore()
+
+    # membership only grows: a narrow checkpoint never shrinks a master
+    d2 = os.fspath(tmp_path / "narrow_ck")
+    fresh(d2).save(step=1)
+    with pytest.raises(CheckpointError, match="grows"):
+        fresh(d2, n_workers=4).restore()
+
+
 def test_master_restore_rejects_shape_mismatch(tmp_path):
     from repro.fed.runtime.master import Master
     from repro.fed.runtime.transport import InProcTransport

@@ -4,15 +4,23 @@ The resharding conformance contract (ISSUE 7): partitioning the
 canonical `AFTOState` into per-shard worker views and reassembling it is
 bitwise lossless, and a mid-trajectory membership re-layout leaves the
 continuation bit-identical to the fixed-membership run.
+
+The elastic-growth contract (ISSUE 10): `grow_state` widens the worker
+axis with zero rows exactly — at t=0 a grown state is bitwise a fresh
+init at the larger width, and mid-run the widened trajectory replays
+through the segmented engine (`run_scanned_elastic`); the `Membership`
+state machine upholds its session invariants under ANY interleaving of
+hello/saw/disconnect/observe_epoch/fresh_push (property-tested).
 """
 import jax
 import numpy as np
 import pytest
 
 from repro.core import init_state, run_scanned
+from repro.core import cuts as cuts_lib
 from repro.fed.runtime.membership import (FaultConfig, Membership,
-                                          assemble_state, make_views,
-                                          reshard_state)
+                                          assemble_state, grow_state,
+                                          make_views, reshard_state)
 
 from conftest import make_hyper, make_quadratic_problem, make_schedules
 
@@ -73,9 +81,55 @@ def test_membership_epoch_and_seq_dedup():
     assert m.fresh_push(0, epoch=1, seq=1) is True    # NOT a duplicate
     # frames from the dead session are dropped
     assert m.fresh_push(0, epoch=0, seq=3) is False
-    # a stale re-HELLO does not regress the session
-    assert m.hello(0, epoch=0) is False
+    m.consumed(0, 1)
+    # EVERY re-HELLO requests a row replay (the same-epoch-restart fix:
+    # a restarted worker that reuses its epoch must still get its rows),
+    # but a STALE epoch never regresses the session bookkeeping
+    assert m.hello(0, epoch=0) is True
     assert int(m.epoch[0]) == 1
+    assert int(m.consumed_seq[0]) == 1   # stale hello didn't reset seqs
+
+
+def test_membership_same_epoch_restart_resets_consumed_seq():
+    """The same-epoch-restart wedge (regression): a worker that dies and
+    restarts WITHOUT bumping its epoch resets its own push counter to 1,
+    but the master's consumed_seq was already past it — before the fix
+    its re-HELLO returned False (no row replay) and every fresh push was
+    dropped as a duplicate until the death timeout fired."""
+    m, _ = _members()
+    m.hello(1, epoch=0)
+    m.consumed(1, 1)
+    m.consumed(1, 2)
+    assert m.fresh_push(1, epoch=0, seq=1) is False   # the wedge, pre-fix
+    # the restarted worker re-HELLOs at the SAME epoch: rows must replay
+    # and its restarted sequence space must be accepted again
+    assert m.hello(1, epoch=0) is True
+    assert int(m.consumed_seq[1]) == 0
+    assert m.fresh_push(1, epoch=0, seq=1) is True
+
+
+def test_membership_grow_and_admit():
+    m, clock = _members(n=3)
+    with pytest.raises(ValueError, match="grow"):
+        m.grow(2)
+    m.grow(3)                            # no-op at the same width
+    assert m.n == 3
+    m.grow(5)
+    assert m.n == 5 and len(m.alive) == 5
+    # grown slots are NOT alive until their ADMIT is processed (a gap id
+    # that never said ADMIT stays dead, like a crashed worker)
+    assert not m.alive[3] and not m.alive[4]
+    assert m.n_live == 3
+    clock.t = 1.0
+    m.admit(3, epoch=2)
+    assert m.alive[3] and int(m.epoch[3]) == 2
+    assert int(m.consumed_seq[3]) == 0 and m.n_live == 4
+    # state-dict round trip at the grown width restores the grown n
+    d = m.state_dict()
+    m2, _ = _members(n=3)
+    m2.load_state_dict(d)
+    assert m2.n == 5 and len(m2.last_seen) == 5
+    np.testing.assert_array_equal(m2.alive, m.alive)
 
 
 def test_membership_epoch_advance_observed_on_any_frame():
@@ -115,6 +169,114 @@ def test_membership_status_shape():
         assert set(r) == {"worker", "alive", "last_seen_age", "epoch",
                           "consumed_seq"}
         assert r["last_seen_age"] == pytest.approx(2.5)
+
+
+# ---------------------------------------------------------------------------
+# session-invariant property: any op interleaving, model-checked
+# ---------------------------------------------------------------------------
+
+def _check_op_sequence(ops):
+    """Apply `ops` to a Membership next to an independent reference
+    model and assert after EVERY op: epochs are monotone, the dedup
+    bookkeeping matches the model, n_live is consistent, and the
+    death/rejoin counters agree."""
+    n = 3
+    m, _ = _members(n=n)
+    epoch = np.zeros(n, np.int64)
+    consumed = np.zeros(n, np.int64)
+    alive = np.ones(n, bool)
+    deaths = rejoins = 0
+    for kind, j, arg in ops:
+        prev_epoch = m.epoch.copy()
+        if kind == "hello":
+            assert m.hello(j, arg) is True   # rows ALWAYS replay
+            if not alive[j]:
+                alive[j] = True
+                rejoins += 1
+            if arg >= epoch[j]:
+                epoch[j] = arg
+                consumed[j] = 0
+        elif kind == "saw":
+            r = m.saw(j)
+            assert r == (not alive[j])
+            if not alive[j]:
+                alive[j] = True
+                rejoins += 1
+        elif kind == "disconnect":
+            r = m.disconnect(j)
+            assert r == bool(alive[j])
+            if alive[j]:
+                alive[j] = False
+                deaths += 1
+        elif kind == "observe":
+            r = m.observe_epoch(j, arg)
+            assert r == (arg > epoch[j])
+            if arg > epoch[j]:
+                epoch[j] = arg
+                consumed[j] = 0
+        elif kind == "push":
+            e, s = arg
+            r = m.fresh_push(j, e, s)
+            assert r == (e == epoch[j] and s > consumed[j])
+            if r:
+                m.consumed(j, s)
+                consumed[j] = s
+        else:  # pragma: no cover
+            raise AssertionError(kind)
+        assert (m.epoch >= prev_epoch).all(), "session epoch regressed"
+        np.testing.assert_array_equal(m.epoch, epoch)
+        np.testing.assert_array_equal(m.consumed_seq, consumed)
+        np.testing.assert_array_equal(m.alive, alive)
+        assert m.n_live == int(alive.sum())
+        assert m.deaths == deaths and m.rejoins == rejoins
+
+
+_OP_KINDS = ("hello", "saw", "disconnect", "observe", "push")
+
+
+def _random_ops(rng, length):
+    ops = []
+    for _ in range(length):
+        kind = _OP_KINDS[int(rng.integers(len(_OP_KINDS)))]
+        j = int(rng.integers(3))
+        if kind == "push":
+            arg = (int(rng.integers(4)), int(rng.integers(1, 6)))
+        elif kind in ("hello", "observe"):
+            arg = int(rng.integers(4))
+        else:
+            arg = None
+        ops.append((kind, j, arg))
+    return ops
+
+
+def test_membership_op_sequence_invariants_seeded():
+    """Always-on fallback for the hypothesis property below: 200 seeded
+    random interleavings through the same model checker."""
+    for seed in range(200):
+        rng = np.random.default_rng(seed)
+        _check_op_sequence(_random_ops(rng, int(rng.integers(1, 40))))
+
+
+def test_membership_op_sequence_invariants_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    worker = st.integers(0, 2)
+    epoch = st.integers(0, 3)
+    op = st.one_of(
+        st.tuples(st.just("hello"), worker, epoch),
+        st.tuples(st.just("saw"), worker, st.none()),
+        st.tuples(st.just("disconnect"), worker, st.none()),
+        st.tuples(st.just("observe"), worker, epoch),
+        st.tuples(st.just("push"), worker,
+                  st.tuples(epoch, st.integers(1, 5))))
+
+    @hyp.given(st.lists(op, min_size=1, max_size=60))
+    @hyp.settings(max_examples=200, deadline=None)
+    def prop(ops):
+        _check_op_sequence(ops)
+
+    prop()
 
 
 # ---------------------------------------------------------------------------
@@ -183,3 +345,91 @@ def test_resharded_continuation_matches_fixed_membership_run():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     np.testing.assert_array_equal(fixed.history["gap_sq"],
                                   resharded.history["gap_sq"])
+
+
+# ---------------------------------------------------------------------------
+# elastic growth (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def _registry(n):
+    from repro.fed.runtime import problems as problems_lib
+    return problems_lib.build("quadratic", n_workers=n)
+
+
+def test_grow_state_rejects_shrink_and_is_idempotent_at_width():
+    prob, hyper = _registry(3)
+    state = init_state(prob, hyper)
+    with pytest.raises(ValueError, match="grows"):
+        grow_state(state, 2)
+    assert grow_state(state, 3) is state
+
+
+def test_grow_then_continue_matches_run_started_at_larger_width():
+    """The grow-then-reshard conformance anchor: growing a fresh state
+    is bitwise a fresh init at the larger width (zero rows, zero cut
+    columns, t_hat at the boundary), so the continuation under any
+    width-5 schedule is the width-5 run itself, bit for bit.  Relies on
+    the registry's per-worker-row data stability."""
+    p3, h3 = _registry(3)
+    p5, h5 = _registry(5)
+    grown = grow_state(init_state(p3, h3), 5)
+    fresh = init_state(p5, h5)
+    assert grown.cuts_i.spec == fresh.cuts_i.spec
+    assert grown.cuts_ii.spec == fresh.cuts_ii.spec
+    for a, b in zip(jax.tree.leaves(grown), jax.tree.leaves(fresh)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # registry data rows shared between the widths are identical too
+    # (the contract that lets a late worker build its own problem)
+    np.testing.assert_array_equal(np.asarray(p3.data["A"]),
+                                  np.asarray(p5.data["A"])[:3])
+    np.testing.assert_array_equal(np.asarray(p3.data["b"]),
+                                  np.asarray(p5.data["b"])[:3])
+
+    (sched,) = make_schedules(10, seeds=(3,), n_workers=5)
+    cont = run_scanned(p5, h5, sched, state=grown, metrics_every=5)
+    ref = run_scanned(p5, h5, sched, state=fresh, metrics_every=5)
+    for a, b in zip(jax.tree.leaves(cont.state),
+                    jax.tree.leaves(ref.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grow_cuts_pads_b_columns_and_preserves_a_columns():
+    """Mid-run growth of a POPULATED polytope: the replicated a-columns
+    and every old worker's b-columns are byte-identical, the new
+    workers' b-columns are zero, and t_hat of the grown rows starts at
+    the admission boundary `state.t`."""
+    prob, hyper = _registry(3)
+    (sched,) = make_schedules(12, seeds=(2,), n_workers=3)
+    state = run_scanned(prob, hyper, sched, metrics_every=6).state
+    assert float(np.sum(np.asarray(state.cuts_ii.active))) > 0
+    grown = grow_state(state, 5)
+    assert int(np.shape(grown.X1)[0]) == 5
+    np.testing.assert_array_equal(np.asarray(grown.X1)[:3],
+                                  np.asarray(state.X1))
+    np.testing.assert_array_equal(np.asarray(grown.X1)[3:], 0.0)
+    t_hat = np.asarray(grown.stale.t_hat)
+    np.testing.assert_array_equal(t_hat[:3], np.asarray(state.stale.t_hat))
+    np.testing.assert_array_equal(t_hat[3:], int(state.t))
+    for fc, gc in ((state.cuts_i, grown.cuts_i),
+                   (state.cuts_ii, grown.cuts_ii)):
+        old_spec, new_spec = fc.spec, gc.spec
+        np.testing.assert_array_equal(np.asarray(fc.c), np.asarray(gc.c))
+        np.testing.assert_array_equal(np.asarray(fc.active),
+                                      np.asarray(gc.active))
+        na = cuts_lib.n_a_leaves(old_spec)
+        p = np.asarray(fc.a).shape[0]
+        for i in range(len(old_spec.sizes)):
+            old_col = np.asarray(fc.a)[:, old_spec.offsets[i]:
+                                       old_spec.offsets[i]
+                                       + old_spec.sizes[i]]
+            new_col = np.asarray(gc.a)[:, new_spec.offsets[i]:
+                                       new_spec.offsets[i]
+                                       + new_spec.sizes[i]]
+            if i < na:
+                np.testing.assert_array_equal(old_col, new_col)
+            else:
+                per = old_spec.sizes[i] // 3
+                old3 = old_col.reshape(p, 3, per)
+                new5 = new_col.reshape(p, 5, per)
+                np.testing.assert_array_equal(new5[:, :3], old3)
+                np.testing.assert_array_equal(new5[:, 3:], 0.0)

@@ -140,14 +140,78 @@ def test_tcp_duplicate_hello_rejected():
         me.close()
 
 
-def test_tcp_out_of_range_hello_rejected():
+def test_tcp_out_of_range_hello_tolerated():
+    """An out-of-range HELLO (a worker launched against a stale config,
+    a port scanner replaying frames) is closed and skipped — the launch
+    completes once the real population arrives.  This used to abort
+    `wait_for_workers` and leak the accepted socket."""
     hub = TcpTransport(2, port=0)
     me = hub.master_endpoint()
+    conns = []
     try:
         bad = TcpTransport.connect("127.0.0.1", hub.port, 7)
-        with pytest.raises(ConnectionError, match="out-of-range"):
-            me.wait_for_workers(timeout=5.0)
+        conns = [TcpTransport.connect("127.0.0.1", hub.port, j)
+                 for j in range(2)]
+        me.wait_for_workers(timeout=10.0)
+        assert sorted(me._socks) == [0, 1]   # probe not installed
         bad.close()
+    finally:
+        for c in conns:
+            c.close()
+        me.close()
+
+
+def test_tcp_launch_survives_garbage_preconnections():
+    """Malformed probe connections arriving before the real workers —
+    a complete-but-undecodable frame and a syntactically valid frame of
+    the wrong kind — must each be closed and skipped, not abort the
+    launch or block the handshake quorum."""
+    import socket as socket_lib
+    hub = TcpTransport(2, port=0)
+    me = hub.master_endpoint()
+    probes, conns = [], []
+    try:
+        s = socket_lib.create_connection(("127.0.0.1", hub.port))
+        s.sendall(b"\x00\x00\x00\x04junk")        # garbage 4-byte body
+        probes.append(s)
+        s = socket_lib.create_connection(("127.0.0.1", hub.port))
+        s.sendall(encode(msg_lib.stop()))         # wrong opening kind
+        probes.append(s)
+        conns = [TcpTransport.connect("127.0.0.1", hub.port, j)
+                 for j in range(2)]
+        me.wait_for_workers(timeout=10.0)
+        assert sorted(me._socks) == [0, 1]
+        me.send(0, encode(msg_lib.stop()))        # population is live
+        assert decode(conns[0].recv(timeout=5.0)).kind == msg_lib.STOP
+    finally:
+        for c in conns + probes:
+            try:
+                c.close()
+            except OSError:
+                pass
+        me.close()
+
+
+def test_tcp_reader_threads_pruned_across_rejoins():
+    """Each reconnect install prunes finished reader threads; the
+    endpoint must not retain one dead Thread object per rejoin for the
+    life of a long-serving master."""
+    hub = TcpTransport(1, port=0)
+    me = hub.master_endpoint()
+    try:
+        c = TcpTransport.connect("127.0.0.1", hub.port, 0)
+        me.wait_for_workers()
+        for k in range(1, 9):                  # 8 die/rejoin cycles
+            c.close()
+            got = decode(me.recv(timeout=5.0))
+            assert got.kind == msg_lib.DISCONNECT
+            c = TcpTransport.connect("127.0.0.1", hub.port, 0, epoch=k)
+            got = decode(me.recv(timeout=5.0))
+            assert got.kind == msg_lib.HELLO and got.meta["epoch"] == k
+        # one live reader + the accept loop + bounded not-yet-reaped
+        # slop — NOT one retained corpse per rejoin
+        assert len(me._threads) <= 4, len(me._threads)
+        c.close()
     finally:
         me.close()
 
@@ -565,3 +629,127 @@ def test_problem_registry_rebuilds_identically():
     assert h1 == h2
     with pytest.raises(KeyError, match="unknown problem"):
         problems_lib.build("no-such-problem")
+
+
+def test_problem_registry_rows_stable_under_width():
+    """The elastic data contract: worker j's data row is a function of
+    (seed, j) alone, so a build at ANY width > j yields the same row —
+    a late joiner building its problem at width j+1 holds exactly the
+    row the master's wider build assigns it."""
+    p3, _ = problems_lib.build("quadratic", n_workers=3, dim=4, seed=9)
+    p5, _ = problems_lib.build("quadratic", n_workers=5, dim=4, seed=9)
+    for k in p3.data:
+        np.testing.assert_array_equal(np.asarray(p3.data[k]),
+                                      np.asarray(p5.data[k])[:3])
+
+
+# ---------------------------------------------------------------------------
+# elastic membership (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def test_same_epoch_restart_does_not_wedge_run():
+    """A worker that crashes and reconnects with the SAME resume epoch
+    (a supervisor that lost the bump) must be re-fed rows and have its
+    dedup cursor reset.  The master used to treat the re-HELLO as a
+    stale duplicate: no row replay, the restarted session's pushes
+    (seq restarting at 1) deduped as replays — the worker wedged for
+    the rest of the run."""
+    import threading
+    import time
+
+    from repro.fed.runtime.chaos import (ChaosCrash, ChaosScript,
+                                         ChaosWorkerEndpoint)
+    from repro.fed.runtime.master import Master
+    from repro.fed.runtime.membership import FaultConfig
+
+    prob, hyper = problems_lib.build("quadratic", n_workers=3)
+    script = ChaosScript(crash_at_push=((0, 3),))
+    fault = FaultConfig(heartbeat_every=0.02, resend_every=0.1,
+                        refresh_resend_every=0.1, death_timeout=2.0,
+                        poll_interval=0.005, min_iter_time=0.02)
+    hub = InProcTransport(3)
+    stop_flag = threading.Event()
+
+    def supervise(j):
+        armed = True
+        while not stop_flag.is_set():
+            ep = ChaosWorkerEndpoint(hub.worker_endpoint(j), j, script,
+                                     armed=armed)
+            try:
+                worker_lib.worker_loop(prob, j, ep, epoch=0, fault=fault)
+                return
+            except ChaosCrash:
+                hub.to_master.put(encode(msg_lib.disconnect(j)))
+                armed = False
+                time.sleep(0.05)
+                # deliberately NOT bumping the epoch: the regression
+
+    threads = [threading.Thread(target=supervise, args=(j,), daemon=True)
+               for j in range(3)]
+    for t in threads:
+        t.start()
+    master = Master(prob, hyper, hub.master_endpoint(), n_iterations=20,
+                    metrics_every=10, fault=fault)
+    try:
+        res = master.run()
+    finally:
+        stop_flag.set()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert master.status["deaths"] >= 1     # the crash surfaced
+    assert master.status["rejoins"] >= 1    # the same-epoch re-HELLO
+    # the discriminating bit: worker 0 contributes AFTER the restart
+    rec = res.arrivals
+    assert float(rec.active[10:, 0].sum()) > 0, \
+        "restarted worker never re-entered the quorum (wedged)"
+    gaps = res.history["gap_sq"]
+    assert gaps[-1] < gaps[0]
+
+
+def test_elastic_admission_widens_and_replays_bitwise():
+    """A live in-proc run that admits a late worker mid-run records a
+    WIDENED Schedule that replays bit-exactly through the segmented
+    engine and through a fresh `Master(replay=...)` population — and
+    the newcomer actually contributes to the quorum."""
+    from repro.fed.runtime.chaos import ChaosScript, run_chaos_async
+    from repro.fed.runtime.membership import (FaultConfig,
+                                              run_scanned_elastic)
+
+    elastic = problems_lib.elastic_config("quadratic", 4)
+    build = lambda n: problems_lib.build("quadratic", n_workers=n)  # noqa: E731
+    prob, hyper = build(3)
+    fault = FaultConfig(heartbeat_every=0.02, resend_every=0.1,
+                        refresh_resend_every=0.1, death_timeout=2.0,
+                        poll_interval=0.005, min_iter_time=0.02)
+    res = run_chaos_async(prob, hyper, ChaosScript(), n_iterations=16,
+                          metrics_every=8, fault=fault, elastic=elastic,
+                          admit_at=((3, 0.1),))
+    rec = res.arrivals
+    assert rec.width is not None
+    assert int(rec.width[0]) == 3 and int(rec.width[-1]) == 4
+    assert float(rec.active[:, 3].sum()) > 0
+
+    echo = run_scanned_elastic(build, rec, metrics_every=8)
+    np.testing.assert_array_equal(np.asarray(res.history["gap_sq"]),
+                                  np.asarray(echo.history["gap_sq"]))
+    np.testing.assert_array_equal(np.asarray(res.state.X1),
+                                  np.asarray(echo.state.X1))
+    res2 = run_async(prob, hyper, n_iterations=16, replay=rec,
+                     fault=fault, elastic=elastic)
+    np.testing.assert_array_equal(np.asarray(res2.state.X1),
+                                  np.asarray(res.state.X1))
+
+
+def test_elastic_fixed_membership_is_bitwise_unchanged():
+    """Elastic machinery enabled-but-unused must not perturb a
+    fixed-membership replay (the boundary-only code-path contract)."""
+    elastic = problems_lib.elastic_config("quadratic", 6)
+    prob, hyper = _tiny()
+    (schedule,) = make_schedules(20, seeds=(1,))
+    base = run_async(prob, hyper, replay=schedule, metrics_every=5)
+    gated = run_async(prob, hyper, replay=schedule, metrics_every=5,
+                      elastic=elastic)
+    for a, b in zip(jax.tree.leaves(base.state),
+                    jax.tree.leaves(gated.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert gated.arrivals.width is None
